@@ -1,0 +1,468 @@
+"""Trip-count-aware HLO cost accounting.
+
+XLA's HloCostAnalysis (and therefore ``compiled.cost_analysis()``) visits a
+``while`` body ONCE, so any lax.scan-over-layers model under-reports FLOPs,
+bytes, and collectives by ~n_layers×.  This module re-derives costs from the
+optimized HLO text with loop-trip multiplication:
+
+  * splits the module into computations,
+  * per computation, sums dot/convolution FLOPs (from shapes + contracting
+    dims) and collective transfer bytes (ring model, from result shapes +
+    replica groups),
+  * resolves the call graph (fusion/call/while/conditional) bottom-up,
+    multiplying while bodies by the trip count recovered from the loop
+    condition's comparison constant.
+
+Validated in tests against analytically-known graphs (matmul, scanned
+matmul stacks).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+                "c64": 8, "c128": 16}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+                  r"(\([^)]*\)|\w+\[[\d,]*\][^\s{]*(?:\{[\d,]*\})?)")
+_DOT_CALL = re.compile(r"\bdot\(([^)]*)\)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONV = re.compile(r"=\s*(\w+)\[([\d,]*)\][^\s]*\s+convolution\(")
+_COLL = re.compile(
+    r"=\s*(?P<ret>\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_BRACE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_ARR = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CALLS = re.compile(r"(?:calls=|to=)%?([\w.\-]+)")
+_WHILE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_COND_BRANCHES = re.compile(r"(?:branch_computations|true_computation|"
+                            r"false_computation)=\{?%?([\w.\-,% ]+)\}?")
+_CONST_INT = re.compile(r"=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dt: str, dims: str) -> float:
+    return _shape_elems(dims) * _DTYPE_BYTES.get(dt, 0)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0            # operand+result HBM traffic
+    collective_bytes: float = 0.0          # ring-model, per device
+    collective_by_kind: dict = field(default_factory=dict)
+    collective_ops: int = 0
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "call", "after-all",
+                   "partition-id", "replica-id", "iota", "reshape",
+                   "broadcast", "copy", "copy-start", "copy-done"}
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_OPCODE_AFTER_TYPE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _opcode(rhs: str) -> str:
+    """Opcode of '<type> opcode(...)' where type may be a nested tuple."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        rest = ""
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    rest = rhs[i + 1:]
+                    break
+    else:
+        rest = rhs.split(" ", 1)[1] if " " in rhs else ""
+    m = _OPCODE_AFTER_TYPE.match(rest)
+    return m.group(1) if m else ""
+
+
+def _type_bytes(t: str) -> float:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE.findall(t))
+
+
+def _operand_names(rhs: str) -> list[str]:
+    mop = _OPERANDS.search(rhs)
+    if not mop:
+        return []
+    return [tok.strip().split(" ")[-1].lstrip("%")
+            for tok in mop.group(1).split(",") if tok.strip()]
+
+
+def _operand_bytes(rhs: str, symtab: dict[str, str]) -> list[float]:
+    out = []
+    mop = _OPERANDS.search(rhs)
+    if not mop:
+        return out
+    for tok in mop.group(1).split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        inline = _SHAPE.search(tok)
+        if inline and not tok.startswith("%"):
+            out.append(_shape_bytes(inline.group(1), inline.group(2)))
+        else:
+            out.append(_type_bytes(symtab.get(tok.split(" ")[-1].lstrip("%"), "")))
+    return out
+
+
+def _line_bytes(line: str, symtab: dict[str, str],
+                comps: dict[str, list[str]] | None = None) -> float:
+    """HBM traffic of one top-level op.
+
+    Data-movement ops count TOUCHED bytes, not full-operand bytes:
+      dynamic-slice → result; dynamic-update-slice → 2×update (in-place);
+      gather → 2×result; scatter → 2×updates.  Fusions count the fused
+      computation's parameter reads at their USE sites (a fused
+      dynamic-slice of the stacked layer weights reads one layer's slice,
+      not the whole [L, ...] stack) + the fusion result write.
+    """
+    s = line.strip()
+    mdef = _DEF.match(s)
+    if not mdef:
+        return 0.0
+    rhs = s.split("=", 1)[1].strip()
+    op = _opcode(rhs)
+    if op in _SKIP_BYTES_OPS:
+        return 0.0
+    result = _type_bytes(mdef.group(2))
+    if op == "fusion" and comps is not None:
+        cm = _CALLS.search(rhs)
+        if cm and cm.group(1) in comps:
+            callee = comps[cm.group(1)]
+            if _is_pure_convert(callee):
+                return 0.0
+            masked = _masked_update_bytes(callee)
+            if masked is not None:
+                return masked
+            # a fused root DUS writes a slice in place, not the whole buffer
+            root_dus = any("dynamic-update-slice(" in ln and "ROOT" in ln
+                           for ln in callee)
+            return _fused_bytes(callee) + (0.0 if root_dus else result)
+    if op == "dynamic-slice":
+        return 2.0 * result
+    if op == "dynamic-update-slice":
+        ops = _operand_bytes(rhs, symtab)
+        upd = ops[1] if len(ops) > 1 else result
+        return 2.0 * upd
+    if op == "gather":
+        return 2.0 * result
+    if op == "scatter":
+        ops = _operand_bytes(rhs, symtab)
+        upd = ops[2] if len(ops) > 2 else result
+        return 2.0 * upd + result
+    return result + sum(_operand_bytes(rhs, symtab))
+
+
+_CONVERT_ONLY_OPS = {"convert", "bitcast", "reshape", "copy", "parameter",
+                     "tuple", "get-tuple-element"}
+_MASKED_UPDATE_OPS = _CONVERT_ONLY_OPS | {"select", "broadcast",
+                                          "dynamic-slice",
+                                          "dynamic-update-slice", "constant",
+                                          "compare", "and", "or", "add",
+                                          "subtract", "clamp"}
+
+
+def _masked_update_bytes(comp_lines: list[str]) -> float | None:
+    """GSPMD's sharded cache write: select(in-range, new, old) + DUS.
+
+    On the TPU target this is an in-place masked slice update; touched bytes
+    = read old slice + write new slice.  The CPU backend round-trips the
+    whole buffer through f32 converts, which we must not charge.  Returns
+    None when the fusion is not this pattern.
+    """
+    symtab = _build_symtab(comp_lines)
+    n_dus = 0
+    slice_bytes = 0.0
+    for line in comp_lines:
+        s = line.strip()
+        mdef = _DEF.match(s)
+        if not mdef:
+            continue
+        op = _opcode(s.split("=", 1)[1])
+        if op not in _MASKED_UPDATE_OPS:
+            return None
+        if op == "dynamic-update-slice":
+            n_dus += 1
+            rhs = s.split("=", 1)[1]
+            names = _operand_names(rhs)
+            if len(names) > 1:
+                slice_bytes = max(slice_bytes,
+                                  _type_bytes(symtab.get(names[1], "")))
+        if op == "dynamic-slice":
+            slice_bytes = max(slice_bytes, _type_bytes(mdef.group(2)))
+    if n_dus != 1:
+        return None
+    return 2.0 * slice_bytes
+
+
+def _is_pure_convert(comp_lines: list[str]) -> bool:
+    """True for fusions that only change dtype/layout metadata.
+
+    XLA:CPU promotes bf16 dots to f32 by materializing converted operands;
+    TPU MXUs consume bf16 natively, so these fusions' traffic would not
+    exist on the target hardware and is excluded from the memory term."""
+    saw_convert = False
+    for line in comp_lines:
+        s = line.strip()
+        mdef = _DEF.match(s)
+        if not mdef:
+            continue
+        op = _opcode(s.split("=", 1)[1])
+        if op == "convert":
+            saw_convert = True
+        elif op not in _CONVERT_ONLY_OPS:
+            return False
+    return saw_convert
+
+
+def _fused_bytes(comp_lines: list[str]) -> float:
+    """Parameter reads (touched bytes at use sites) inside a fused comp."""
+    symtab = _build_symtab(comp_lines)
+    params = {name for name, t in symtab.items()
+              if any(f"%{name} = " in ln and " parameter(" in ln
+                     for ln in comp_lines)}
+    total = 0.0
+    for line in comp_lines:
+        s = line.strip()
+        mdef = _DEF.match(s)
+        if not mdef or " parameter(" in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        names = _operand_names(rhs)
+        if not any(n in params for n in names):
+            continue
+        op = _opcode(rhs)
+        if op in ("dynamic-slice", "gather"):
+            total += _type_bytes(mdef.group(2))     # touched = result
+        elif op == "dynamic-update-slice":
+            # in-place on the target: touched = update slice (operand 1),
+            # never the full aliased buffer (operand 0)
+            if len(names) > 1 and names[1] in params:
+                total += _type_bytes(symtab.get(names[1], ""))
+        else:
+            for n in names:
+                if n in params:
+                    total += _type_bytes(symtab.get(n, ""))
+    return total
+
+
+def _is_comp_header(s: str) -> bool:
+    # "%name (args...) -> result {"  — op lines have "= " before the paren
+    if not (s.endswith("{") and "->" in s):
+        return False
+    head = s.split("(", 1)[0]
+    return "=" not in head and (head.strip().startswith("%")
+                                or head.strip().startswith("ENTRY"))
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    entry_alias = None
+    for line in text.splitlines():
+        s = line.strip()
+        if _is_comp_header(s):
+            m = _COMP_HDR.match(s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if s.startswith("ENTRY"):
+                    entry_alias = cur
+                continue
+        if cur is not None:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    if entry_alias is not None:
+        comps["__entry__"] = comps[entry_alias]
+    return comps
+
+
+def _build_symtab(lines: list[str]) -> dict[str, str]:
+    """Map %name -> result type string for every op definition."""
+    tab: dict[str, str] = {}
+    for line in lines:
+        m = _DEF.match(line)
+        if m:
+            tab[m.group(1)] = m.group(2)
+    return tab
+
+
+def _dot_flops(line: str, symtab: dict[str, str]) -> float:
+    if " dot(" not in line:
+        return 0.0
+    mdef = _DEF.match(line)
+    mcall = _DOT_CALL.search(line)
+    mc = _LHS_CONTRACT.search(line)
+    if not (mdef and mcall and mc):
+        return 0.0
+    out_sh = _SHAPE.search(mdef.group(2))
+    if not out_sh:
+        return 0.0
+    out_elems = _shape_elems(out_sh.group(2))
+    lhs_name = mcall.group(1).split(",")[0].strip().lstrip("%")
+    # operands are sometimes typed inline ("f32[..] %a"), sometimes bare refs
+    inline = _SHAPE.search(mcall.group(1).split(",")[0])
+    lhs_type = inline.group(0) if inline else symtab.get(
+        lhs_name.split(" ")[-1].lstrip("%"), "")
+    lsh = _SHAPE.search(lhs_type)
+    if not lsh:
+        return 0.0
+    lhs_dims = [int(d) for d in lsh.group(2).split(",") if d]
+    contract = 1
+    for idx in mc.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(line: str) -> float:
+    # rough: 2 × out_elems × (kernel elems / out_features) — convs are not on
+    # any assigned arch's hot path (depthwise convs are handled as mults)
+    m = _CONV.search(line)
+    if not m:
+        return 0.0
+    return 2.0 * _shape_elems(m.group(2))
+
+
+def _collective(line: str):
+    m = _COLL.search(line)
+    if not m:
+        return None
+    op = m.group("op")
+    ret = m.group("ret")
+    size = sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE.findall(ret))
+    g = _GROUPS_BRACE.search(line)
+    if g:
+        n = len(g.group(1).split(","))
+    else:
+        g2 = _GROUPS_ARR.search(line)
+        n = int(g2.group(2)) if g2 else 2
+    n = max(n, 2)
+    factor = {"all-gather": (n - 1) / n,
+              "all-reduce": 2 * (n - 1) / n,
+              "reduce-scatter": float(n - 1),
+              "all-to-all": (n - 1) / n,
+              "collective-permute": 1.0}[op]
+    return op, size * factor
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Loop bound = the largest integer constant in the condition."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_INT.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _split_computations(text)
+    memo: dict[str, HloCost] = {}
+
+    def cost_of(name: str, stack=()) -> HloCost:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return HloCost()
+        total = HloCost()
+        symtab = _build_symtab(comps[name])
+        for line in comps[name]:
+            total.flops += _dot_flops(line, symtab) + _conv_flops(line)
+            total.bytes_accessed += _line_bytes(line, symtab, comps)
+            coll = _collective(line)
+            if coll and "-done(" not in line:
+                op, b = coll
+                total.collective_bytes += b
+                total.collective_by_kind[op] = \
+                    total.collective_by_kind.get(op, 0.0) + b
+                total.collective_ops += 1
+            wm = _WHILE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                trips = _trip_count(comps.get(cond, []))
+                sub = cost_of(body, stack + (name,))
+                csub = cost_of(cond, stack + (name,))
+                total.flops += trips * (sub.flops + csub.flops)
+                total.bytes_accessed += trips * sub.bytes_accessed
+                total.collective_bytes += trips * sub.collective_bytes
+                for k, v in sub.collective_by_kind.items():
+                    total.collective_by_kind[k] = \
+                        total.collective_by_kind.get(k, 0.0) + trips * v
+                total.collective_ops += trips * sub.collective_ops
+                continue
+            for cm in _CALLS.finditer(line):
+                sub = cost_of(cm.group(1), stack + (name,))
+                # flops/collectives recurse through fusions & calls; BYTES do
+                # not (the fusion op's operand+result traffic was counted at
+                # the call site — fused intermediates never touch HBM)
+                total.flops += sub.flops
+                total.collective_bytes += sub.collective_bytes
+                for k, v in sub.collective_by_kind.items():
+                    total.collective_by_kind[k] = \
+                        total.collective_by_kind.get(k, 0.0) + v
+                total.collective_ops += sub.collective_ops
+        memo[name] = total
+        return total
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps))
+    return cost_of(entry)
+
+
+def top_bytes_contributors(text: str, k: int = 20) -> list[tuple[float, int, str]]:
+    """(bytes × trips, trips, op line) — the §Perf profiling view."""
+    comps = _split_computations(text)
+
+    # trip multiplier per computation (product along the while-nest)
+    mult: dict[str, float] = {}
+
+    def mark(name: str, m: float, stack=()):
+        if name not in comps or name in stack:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for line in comps[name]:
+            wm = _WHILE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                trips = _trip_count(comps.get(cond, []))
+                mark(body, m * trips, stack + (name,))
+                continue
+            for cm in _CALLS.finditer(line):
+                callee = cm.group(1)
+                if callee in comps and " fusion(" not in line:
+                    mark(callee, m, stack + (name,))
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps))
+    mark(entry, 1.0)
+    rows = []
+    for name, m in mult.items():
+        symtab = _build_symtab(comps[name])
+        for line in comps[name]:
+            b = _line_bytes(line, symtab, comps)
+            if b:
+                rows.append((b * m, int(m), line.strip()[:160]))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:k]

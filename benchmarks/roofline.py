@@ -1,0 +1,85 @@
+"""§Roofline table: read dry-run JSONs → per-(arch × shape × mesh) terms.
+
+Roofline fraction := t_ideal / t_bound, where
+  t_ideal = MODEL_FLOPS / (chips × peak)   (the physics floor for the step)
+  t_bound = max(t_compute, t_memory, t_collective)  (per-chip, trip-corrected)
+
+The perf loop (EXPERIMENTS.md §Perf) drives the dominant term down.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+DRYRUN_DIR = Path("experiments/dryrun")
+
+_ADVICE = {
+    "t_compute_s": "compute-bound: raise MXU utilization (fusion, larger "
+    "per-chip tiles) or cut redundant FLOPs (remat policy)",
+    "t_memory_s": "HBM-bound: cut activation traffic (remat policy, fused "
+    "attention, bf16 intermediates) and weight re-reads (microbatch reuse)",
+    "t_collective_s": "ICI-bound: reduce-scatter instead of all-reduce, "
+    "shard-and-overlap FSDP gathers, or trade TP degree for DP",
+}
+
+
+def load_cells(mesh: str = "pod") -> list[dict]:
+    cells = []
+    for path in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("status") != "ok":
+            cells.append(rec)
+            continue
+        r = rec["roofline"]
+        t_bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        t_ideal = rec["model_flops"] / (rec["chips"] * PEAK_FLOPS)
+        rec["t_ideal_s"] = t_ideal
+        rec["roofline_fraction"] = t_ideal / t_bound if t_bound else None
+        rec["advice"] = _ADVICE[r["bottleneck"]]
+        cells.append(rec)
+    return cells
+
+
+def table(mesh: str = "pod") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| model/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(mesh):
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | - | - | - | "
+                        f"ERROR {rec.get('error', '')[:40]} | - | - |")
+            continue
+        r = rec["roofline"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['bottleneck'].replace('t_', '').replace('_s', '')} | "
+            f"{rec['useful_flops_ratio']:.3f} | "
+            f"{rec['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def interesting_cells(mesh: str = "pod") -> dict:
+    """The three §Perf hillclimb picks, by the spec's criteria."""
+    ok = [r for r in load_cells(mesh) if r.get("status") == "ok"
+          and r.get("roofline_fraction")]
+    worst = min(ok, key=lambda r: r["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["roofline"]["t_collective_s"] /
+               max(sum(r["roofline"][k] for k in
+                       ("t_compute_s", "t_memory_s", "t_collective_s")), 1e-12))
+    return {"worst_fraction": (worst["arch"], worst["shape"]),
+            "most_collective_bound": (coll["arch"], coll["shape"])}
+
+
+def main() -> None:  # pragma: no cover
+    print(table("pod"))
+    print()
+    print("hillclimb picks:", interesting_cells("pod"))
+
+
+if __name__ == "__main__":
+    main()

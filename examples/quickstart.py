@@ -1,0 +1,62 @@
+"""Quickstart: the paper's loop in 60 lines.
+
+Builds a model graph, watches a fluctuating edge environment, and shows the
+orchestrator migrate + re-split as conditions change — then verifies the
+split execution is numerically identical to the monolith on a real model.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_bundle
+from repro.core import (
+    AdaptiveOrchestrator, CapacityProfiler, InProcessAgent,
+    ReconfigurationBroadcast, SplitRevision, Thresholds, Workload,
+)
+from repro.edgesim import MECScenarioParams, base_system_state
+from repro.serving import SplitInferenceEngine
+
+# 1. a real (reduced-scale) model + its computational graph ---------------
+bundle = get_bundle("llama3-8b", reduced=True)
+params = bundle.init(jax.random.PRNGKey(0), jnp.float32)
+graph = bundle.model_graph()
+print(f"graph: {graph}")
+
+# 2. edge environment: 3 MEC nodes + cloud --------------------------------
+p = MECScenarioParams(backhaul_mbps=20.0)        # constrained backhaul
+state = base_system_state(p)
+wl = Workload(tokens_in=56, tokens_out=8, arrival_rate=4.0)
+profiler = CapacityProfiler(base_state=state)
+orch = AdaptiveOrchestrator(
+    graph=graph, profiler=profiler,
+    broadcast=ReconfigurationBroadcast(
+        [InProcessAgent(i) for i in range(state.num_nodes)]),
+    workload=wl, thresholds=Thresholds(), splitter=SplitRevision())
+
+# 3. deploy the paper's static baseline {S1, S2, S3} ----------------------
+L = len(graph)
+split = graph.even_split(3)
+cfg = orch.deploy_initial(split.boundaries, (0, 3, 0))
+print(f"initial split {cfg.boundaries} on nodes {cfg.assignment}")
+
+# 4. congest the backhaul; watch the orchestrator react -------------------
+profiler.observe_latency(0.450)                  # EWMA latency spikes
+profiler.observe_links(state.link_bw)
+decision = orch.step(now=100.0)
+print(f"decision: {decision.kind.value}, reasons={list(decision.reasons)}")
+print(f"new split {orch.current.boundaries} on nodes {orch.current.assignment}")
+
+# 5. the split never changes the math -------------------------------------
+engine = SplitInferenceEngine(bundle, params)
+engine.apply_config(orch.current)
+toks = jnp.asarray(np.random.default_rng(0).integers(
+    0, bundle.cfg.vocab, (2, 16), dtype=np.int32))
+split_logits = engine.infer_logits(toks)
+mono_logits = engine.infer_monolithic(toks)
+err = float(jnp.max(jnp.abs(split_logits - mono_logits)))
+print(f"split vs monolithic max |Δlogit| = {err:.2e}")
+assert err < 1e-3
+print("OK")

@@ -1,0 +1,7 @@
+"""repro: adaptive joint partitioning & placement of foundation models.
+
+Reproduction + TPU-scale framework for Djuhera et al., "Joint Partitioning
+and Placement of Foundation Models for Real-Time Edge AI" (CS.DC 2025).
+"""
+
+__version__ = "0.1.0"

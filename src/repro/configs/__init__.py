@@ -1,0 +1,52 @@
+"""Architecture registry: the 10 assigned archs + the paper's Llama3-8B.
+
+``get(arch_id)`` returns the full production config; ``get_reduced`` returns
+the same family at smoke-test scale; ``get_bundle`` wraps either in the
+unified ModelBundle API.
+"""
+
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Any
+
+_MODULES = {
+    "stablelm-3b": "stablelm_3b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "gemma2-9b": "gemma2_9b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "internvl2-1b": "internvl2_1b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "musicgen-medium": "musicgen_medium",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "llama3-8b": "llama3_8b",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _MODULES if k != "llama3-8b")
+ALL_ARCHS = tuple(_MODULES)
+
+# archs allowed to run the 500k-token decode shape (sub-quadratic context)
+LONG_CONTEXT_ARCHS = ("mamba2-1.3b", "recurrentgemma-9b")
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get(arch: str) -> Any:
+    return _module(arch).config()
+
+
+def get_reduced(arch: str) -> Any:
+    return _module(arch).reduced()
+
+
+def get_bundle(arch: str, reduced: bool = False):
+    from repro.models.api import bundle_for
+
+    cfg = get_reduced(arch) if reduced else get(arch)
+    return bundle_for(arch, cfg)

@@ -1,0 +1,50 @@
+"""Core: the paper's contribution — joint partitioning & placement at runtime.
+
+Modules mirror the reference architecture of §III-A:
+  graph        — the computational graph the orchestrator operates on
+  cost_model   — Φ = α·L + β·U + γ·P  over system state C(t)
+  placement    — placement solvers (chain DP / greedy / local search)
+  splitter     — Split Revision: joint split+placement DP (numpy + jitted JAX)
+  triggers     — Θ thresholds + ShouldReconfigure (Table I)
+  profiling    — Monitoring & Capacity Profiling (CP)
+  orchestrator — Adaptive Orchestrator (AO), Alg. 1
+  broadcast    — Reconfiguration Broadcast (RB), 2-phase versioned rollout
+  privacy      — trusted sets, Eq. (5)/(9)
+"""
+
+from .broadcast import InProcessAgent, PartitionConfig, ReconfigurationBroadcast
+from .cost_model import (
+    CostBreakdown,
+    CostWeights,
+    SystemState,
+    Workload,
+    chain_latency,
+    evaluate,
+    phi,
+)
+from .graph import GraphNode, ModelGraph, SplitScheme, make_transformer_graph
+from .orchestrator import AdaptiveOrchestrator, Decision, DecisionKind
+from .placement import (
+    Solution,
+    greedy_placement,
+    local_search,
+    repair_capacity,
+    solve_placement_chain_dp,
+    surrogate_cost,
+)
+from .privacy import TrustPolicy, assert_privacy_ok
+from .profiling import CapacityProfiler, NodeSample
+from .splitter import JaxJointSplitter, SplitRevision, brute_force_joint, solve_joint_dp
+from .triggers import EWMA, Thresholds, TriggerState, should_reconfigure
+
+__all__ = [
+    "AdaptiveOrchestrator", "CapacityProfiler", "CostBreakdown", "CostWeights",
+    "Decision", "DecisionKind", "EWMA", "GraphNode", "InProcessAgent",
+    "JaxJointSplitter", "ModelGraph", "NodeSample", "PartitionConfig",
+    "ReconfigurationBroadcast", "Solution", "SplitRevision", "SplitScheme",
+    "SystemState", "Thresholds", "TriggerState", "TrustPolicy", "Workload",
+    "assert_privacy_ok", "brute_force_joint", "chain_latency", "evaluate",
+    "greedy_placement", "local_search", "make_transformer_graph", "phi",
+    "repair_capacity", "should_reconfigure", "solve_joint_dp",
+    "solve_placement_chain_dp", "surrogate_cost",
+]

@@ -1,0 +1,134 @@
+"""Reconfiguration Broadcast (RB) — paper §III-A module 4.
+
+Disseminates a new (split, placement) configuration to the affected node
+agents *consistently*: a versioned two-phase rollout (PREPARE → COMMIT) so a
+node crash mid-rollout can never leave the fleet executing two different
+partition maps.  Node agents are in-process objects here (the container has no
+cluster), but the interface is controller-shaped: ``prepare``/``commit``/
+``abort`` mirror what a Kubernetes custom-controller reconcile loop would do.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Protocol
+
+__all__ = ["PartitionConfig", "NodeAgent", "InProcessAgent", "ReconfigurationBroadcast"]
+
+
+@dataclass(frozen=True)
+class PartitionConfig:
+    """One immutable deployment config: version + split + placement."""
+
+    version: int
+    boundaries: tuple[int, ...]
+    assignment: tuple[int, ...]
+    reason: str = ""
+    issued_at: float = 0.0
+
+    def segments_for(self, node: int) -> list[tuple[int, int]]:
+        return [
+            (self.boundaries[j], self.boundaries[j + 1])
+            for j, n in enumerate(self.assignment)
+            if n == node
+        ]
+
+
+class NodeAgent(Protocol):
+    node_id: int
+
+    def prepare(self, cfg: PartitionConfig) -> bool: ...
+    def commit(self, version: int) -> bool: ...
+    def abort(self, version: int) -> None: ...
+
+
+@dataclass
+class InProcessAgent:
+    """Reference agent: stages weights for its segments, then swaps atomically."""
+
+    node_id: int
+    fail_prepare: bool = False      # fault-injection hooks for tests
+    fail_commit: bool = False
+    active: PartitionConfig | None = None
+    staged: PartitionConfig | None = None
+    history: list[int] = field(default_factory=list)
+
+    def prepare(self, cfg: PartitionConfig) -> bool:
+        if self.fail_prepare:
+            return False
+        self.staged = cfg
+        return True
+
+    def commit(self, version: int) -> bool:
+        if self.fail_commit:
+            return False
+        if self.staged is None or self.staged.version != version:
+            return False
+        self.active = self.staged
+        self.staged = None
+        self.history.append(version)
+        return True
+
+    def abort(self, version: int) -> None:
+        if self.staged is not None and self.staged.version == version:
+            self.staged = None
+
+
+@dataclass
+class ReconfigurationBroadcast:
+    agents: list[InProcessAgent]
+    _version: int = 0
+    log: list[tuple[str, PartitionConfig]] = field(default_factory=list)
+
+    def next_version(self) -> int:
+        self._version += 1
+        return self._version
+
+    def rollout(
+        self,
+        boundaries: tuple[int, ...],
+        assignment: tuple[int, ...],
+        reason: str = "",
+        now: float | None = None,
+    ) -> PartitionConfig | None:
+        """Two-phase rollout; returns the committed config or None on abort."""
+        cfg = PartitionConfig(
+            version=self.next_version(),
+            boundaries=boundaries,
+            assignment=assignment,
+            reason=reason,
+            issued_at=time.monotonic() if now is None else now,
+        )
+        affected = [a for a in self.agents if a.node_id in set(assignment)]
+        # phase 1: PREPARE — all affected agents must stage the config
+        prepared: list[InProcessAgent] = []
+        for agent in affected:
+            if agent.prepare(cfg):
+                prepared.append(agent)
+            else:
+                for p in prepared:
+                    p.abort(cfg.version)
+                self.log.append(("abort", cfg))
+                return None
+        # phase 2: COMMIT — atomically swap; a commit failure rolls others back
+        committed: list[InProcessAgent] = []
+        for agent in prepared:
+            if agent.commit(cfg.version):
+                committed.append(agent)
+            else:
+                for c in committed:
+                    if c.history and c.history[-1] == cfg.version:
+                        c.history.pop()
+                    c.active = None  # forces re-sync from the log on recovery
+                self.log.append(("abort", cfg))
+                return None
+        self.log.append(("commit", cfg))
+        return cfg
+
+    @property
+    def active_version(self) -> int:
+        for kind, cfg in reversed(self.log):
+            if kind == "commit":
+                return cfg.version
+        return 0

@@ -1,0 +1,61 @@
+"""Trigger thresholds Θ and ShouldReconfigure (paper Table I + Alg. 1)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = ["Thresholds", "TriggerState", "should_reconfigure", "EWMA"]
+
+
+@dataclass(frozen=True)
+class Thresholds:
+    """Θ = {L_max, U_max, B_min, T_cool} — paper Table I empirical defaults."""
+
+    latency_max_s: float = 0.150        # EWMA end-to-end latency bound
+    util_max: float = 0.85              # max node utilization
+    bandwidth_min_bps: float = 50e6 / 8  # 50 Mbps in bytes/s
+    cooldown_s: float = 30.0            # reconfiguration rate limit
+    ewma_alpha: float = 0.3             # smoothing for the latency EWMA
+
+
+class EWMA:
+    """Exponentially weighted moving average, paper's latency smoother."""
+
+    def __init__(self, alpha: float = 0.3, init: float | None = None):
+        self.alpha = alpha
+        self.value: float | None = init
+
+    def update(self, x: float) -> float:
+        self.value = x if self.value is None else (
+            self.alpha * x + (1.0 - self.alpha) * self.value
+        )
+        return self.value
+
+    def get(self, default: float = 0.0) -> float:
+        return default if self.value is None else self.value
+
+
+@dataclass
+class TriggerState:
+    """E(t) summary the orchestrator inspects each monitoring cycle."""
+
+    ewma_latency_s: float
+    max_node_util: float
+    min_link_bw_bps: float
+    reasons: list[str] = field(default_factory=list)
+
+
+def should_reconfigure(env: TriggerState, th: Thresholds) -> bool:
+    """Paper §III-C: reconfigure if ANY trigger fires within the window."""
+    env.reasons.clear()
+    if env.ewma_latency_s > th.latency_max_s:
+        env.reasons.append(
+            f"latency {env.ewma_latency_s*1e3:.0f}ms > {th.latency_max_s*1e3:.0f}ms"
+        )
+    if env.max_node_util > th.util_max:
+        env.reasons.append(f"util {env.max_node_util:.2f} > {th.util_max:.2f}")
+    if env.min_link_bw_bps < th.bandwidth_min_bps:
+        env.reasons.append(
+            f"bw {env.min_link_bw_bps*8/1e6:.0f}Mbps < {th.bandwidth_min_bps*8/1e6:.0f}Mbps"
+        )
+    return bool(env.reasons)

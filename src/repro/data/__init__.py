@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticTokens
+
+__all__ = ["DataConfig", "SyntheticTokens"]

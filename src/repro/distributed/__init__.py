@@ -1,0 +1,15 @@
+"""Distribution: sharding policy, fault tolerance, elastic re-mesh planning."""
+
+from .fault_tolerance import HeartbeatRegistry, StragglerDetector, plan_elastic_mesh
+from .sharding import (
+    batch_axes,
+    cache_pspecs,
+    dp_axes,
+    input_pspecs,
+    param_pspecs,
+    tree_named,
+)
+
+__all__ = ["HeartbeatRegistry", "StragglerDetector", "batch_axes",
+           "cache_pspecs", "dp_axes", "input_pspecs", "param_pspecs",
+           "plan_elastic_mesh", "tree_named"]

@@ -1,0 +1,89 @@
+"""Activation-sharding context (§Perf E5).
+
+GSPMD propagates shardings from weights into activations; with FSDP'd weights
+that can leave activations sharded on contracted dims, which turns attention
+and FFN backward passes into activation-sized psums (measured 112 TB/chip on
+deepseek-coder train before constraints).  Model code calls
+:func:`constrain` at layer boundaries; when a mesh context is set (by
+make_train_step / make_serve_fns), activations are pinned to batch-over-dp ×
+heads/ff-over-TP; with no context it is a no-op (single-device tests).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_mesh", "constrain", "current_mesh"]
+
+_STATE: dict[str, Any] = {"mesh": None}
+
+
+@contextmanager
+def activation_mesh(mesh: Mesh | None):
+    prev = _STATE["mesh"]
+    _STATE["mesh"] = mesh
+    try:
+        yield
+    finally:
+        _STATE["mesh"] = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _STATE["mesh"]
+
+
+def _dp(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Pin an activation's sharding.  kinds:
+      hidden  [B, S, d]        -> (dp, S over TP [seq-parallel], None)
+      hidden_full [B, S, d]    -> (dp, None, None)   (recurrent families)
+      heads   [B, S, H, hd]    -> (dp, None, TP?, None)
+      heads1  [B, H, hd]       -> (dp, TP?, None)          (decode)
+      ff      [B, S, ff]       -> (dp, None, TP?)
+    TP lands on the axis only when its size divides the model axis.
+    REPRO_NO_CONSTRAIN=1 disables all constraints (paper-faithful baseline).
+    """
+    import os
+
+    mesh = _STATE["mesh"]
+    if mesh is None or os.environ.get("REPRO_NO_CONSTRAIN"):
+        return x
+    dp = _dp(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tp = int(mesh.shape.get("model", 1))
+    b_ax = dp if (dp and x.shape[0] % dp_total == 0) else None
+
+    if kind == "hidden":
+        # sequence parallelism (Korthikanti et al.): between TP regions the
+        # [B,S,d] hidden shards S over "model", halving per-projection
+        # all-reduces into reduce-scatter + all-gather pairs and sharding
+        # norm/residual work.  Falls back for decode (S=1) / ragged S.
+        s_ax = "model" if (x.ndim == 3 and x.shape[1] % tp == 0
+                           and x.shape[1] > 1) else None
+        spec = P(b_ax, s_ax, *([None] * (x.ndim - 2)))
+    elif kind == "hidden_full":
+        # recurrent families (Griffin): temporal mixers consume full-S
+        # activations, so SP's shard/gather ping-pong is a net loss (§Perf
+        # E6, refuted for recurrentgemma) — keep S replicated
+        spec = P(b_ax, *([None] * (x.ndim - 1)))
+    elif kind == "heads":
+        h_ax = "model" if x.shape[2] % tp == 0 else None
+        spec = P(b_ax, None, h_ax, None)
+    elif kind == "heads1":
+        h_ax = "model" if x.shape[1] % tp == 0 else None
+        spec = P(b_ax, h_ax, None)
+    elif kind == "ff":
+        f_ax = "model" if x.shape[-1] % tp == 0 else None
+        spec = P(b_ax, *([None] * (x.ndim - 2)), f_ax)
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,93 @@
+"""Fault tolerance: heartbeats, straggler detection, elastic re-mesh planning.
+
+The SAME trigger machinery that drives the paper's edge orchestrator drives
+training resilience here (DESIGN.md §3): a straggling pod is the datacenter
+analogue of an overloaded MEC node, and the response — re-solve the layer→
+node assignment — is the paper's Split Revision applied to pipeline stages.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.triggers import EWMA
+
+__all__ = ["HeartbeatRegistry", "StragglerDetector", "plan_elastic_mesh"]
+
+
+@dataclass
+class HeartbeatRegistry:
+    """Tracks liveness; a node missing ``miss_limit`` beats is declared dead."""
+
+    nodes: list[int]
+    miss_limit: int = 3
+    _last_beat: dict[int, int] = field(default_factory=dict)
+    _dead: set = field(default_factory=set)
+    _tick: int = 0
+
+    def beat(self, node: int) -> None:
+        if node not in self._dead:
+            self._last_beat[node] = self._tick
+
+    def tick(self) -> list[int]:
+        """Advance one interval; returns NEWLY-dead nodes."""
+        self._tick += 1
+        newly = []
+        for n in self.nodes:
+            if n in self._dead:
+                continue
+            if self._tick - self._last_beat.get(n, 0) >= self.miss_limit:
+                self._dead.add(n)
+                newly.append(n)
+        return newly
+
+    def alive(self) -> list[int]:
+        return [n for n in self.nodes if n not in self._dead]
+
+
+@dataclass
+class StragglerDetector:
+    """Per-worker step-time EWMA; flags workers slower than median × ratio.
+
+    This is the paper's U_max trigger transplanted to training: the detector's
+    output feeds the same orchestrator decision path (migrate → re-split),
+    here realized as stage rebalancing / hot-spare swap.
+    """
+
+    ratio: float = 1.5
+    alpha: float = 0.3
+    _ewma: dict[int, EWMA] = field(default_factory=dict)
+
+    def observe(self, worker: int, step_time_s: float) -> None:
+        self._ewma.setdefault(worker, EWMA(self.alpha)).update(step_time_s)
+
+    def stragglers(self) -> list[int]:
+        if len(self._ewma) < 2:
+            return []
+        vals = {w: e.get() for w, e in self._ewma.items()}
+        med = float(np.median(list(vals.values())))
+        return [w for w, v in vals.items() if v > self.ratio * med]
+
+
+def plan_elastic_mesh(alive_devices: int, *, model_axis: int = 16,
+                      pods: int | None = None) -> dict:
+    """Largest power-of-two mesh fitting the surviving devices.
+
+    Keeps the TP ("model") axis intact — TP degree is baked into layouts —
+    and shrinks the data/pod axes, so a restore is a pure DP re-shard of the
+    checkpoint (no weight-layout change).
+    """
+    if alive_devices < model_axis:
+        raise RuntimeError(
+            f"fewer devices ({alive_devices}) than the TP axis ({model_axis}); "
+            "full restart with a smaller TP layout required")
+    dp_total = alive_devices // model_axis
+    dp = 2 ** int(math.floor(math.log2(dp_total)))
+    shape = {"data": dp, "model": model_axis}
+    if pods is not None and pods > 1 and dp % pods == 0 and dp // pods >= 1:
+        shape = {"pod": pods, "data": dp // pods, "model": model_axis}
+    return {"shape": shape, "devices_used": dp * model_axis,
+            "devices_idle": alive_devices - dp * model_axis}

@@ -1,0 +1,18 @@
+"""5G-MEC edge-environment simulator (paper §IV scenario)."""
+
+from .scenario import (
+    MECScenarioParams,
+    base_system_state,
+    build_mec_scenario,
+    llama3_8b_graph,
+    static_baseline_split,
+)
+from .simulator import EdgeSimulator, SimConfig, SimResult, TickMetrics
+from .traces import Trace, constant, ou_process, square_wave
+
+__all__ = [
+    "EdgeSimulator", "MECScenarioParams", "SimConfig", "SimResult",
+    "TickMetrics", "Trace", "base_system_state", "build_mec_scenario",
+    "constant", "llama3_8b_graph", "ou_process", "square_wave",
+    "static_baseline_split",
+]

@@ -1,0 +1,74 @@
+"""Seeded time-series generators for the edge environment (util, bandwidth)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["Trace", "constant", "square_wave", "ou_process", "compose"]
+
+
+@dataclass(frozen=True)
+class Trace:
+    """A deterministic function of time, pre-sampled on a tick grid."""
+
+    fn: Callable[[float], float]
+    lo: float = 0.0
+    hi: float = float("inf")
+
+    def __call__(self, t: float) -> float:
+        return float(np.clip(self.fn(t), self.lo, self.hi))
+
+
+def constant(v: float) -> Trace:
+    return Trace(lambda t: v)
+
+
+def square_wave(base: float, high: float, period_s: float, duty: float,
+                phase_s: float = 0.0) -> Trace:
+    """Saturation events: ``high`` for ``duty`` fraction of every period."""
+
+    def fn(t: float) -> float:
+        frac = ((t + phase_s) % period_s) / period_s
+        return high if frac < duty else base
+
+    return Trace(fn)
+
+
+def ou_process(seed: int, mu: float, sigma: float, theta: float = 0.5,
+               tick_s: float = 0.1, horizon_s: float = 3600.0,
+               lo: float = 0.0, hi: float = 1.0) -> Trace:
+    """Ornstein-Uhlenbeck fluctuation around ``mu`` (pre-sampled, seeded)."""
+    rng = np.random.default_rng(seed)
+    n = int(horizon_s / tick_s) + 2
+    x = np.empty(n)
+    x[0] = mu
+    sq = sigma * np.sqrt(tick_s)
+    for i in range(1, n):
+        x[i] = x[i - 1] + theta * (mu - x[i - 1]) * tick_s + sq * rng.standard_normal()
+    x = np.clip(x, lo, hi)
+
+    def fn(t: float) -> float:
+        return x[min(int(t / tick_s), n - 1)]
+
+    return Trace(fn, lo, hi)
+
+
+def compose(*traces: Trace, op: str = "add", lo: float = 0.0,
+            hi: float = float("inf")) -> Trace:
+    def fn(t: float) -> float:
+        vals = [tr(t) for tr in traces]
+        if op == "add":
+            return sum(vals)
+        if op == "max":
+            return max(vals)
+        if op == "mul":
+            out = 1.0
+            for v in vals:
+                out *= v
+            return out
+        raise ValueError(op)
+
+    return Trace(fn, lo, hi)

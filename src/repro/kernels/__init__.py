@@ -1,0 +1,13 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; see tests/).
+
+Layout: <name>.py holds the pl.pallas_call + BlockSpec kernel, ops.py the
+jit'd model-layout wrappers, ref.py the pure-jnp oracles.  These are the
+serving hot-spots: flash attention (prefill), GQA decode attention, Mamba-2
+SSD chunk scan, RG-LRU recurrence, and int8 activation/gradient compression
+for inter-segment transfer.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]
+

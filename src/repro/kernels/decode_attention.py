@@ -1,0 +1,129 @@
+"""Pallas TPU decode attention: one query token vs. a long KV cache.
+
+Decode is HBM-bandwidth-bound (the whole cache streams through once per
+token), so the kernel's job is to keep the cache read perfectly streamed and
+everything else resident: grid = (batch, kv_seq_blocks), with the per-batch
+(m, l, acc) online-softmax state in VMEM scratch across the sequence axis.
+All query heads of one sequence are processed together per block — for GQA
+the [KV, G, hd] query layout turns the score computation into KV dense
+[G·hd × bk] matmuls.
+
+``cur_len`` arrives as a scalar-prefetch operand (SMEM) so masking doesn't
+force a second pass over the cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(
+    len_ref,                     # SMEM (1,) — number of valid cache entries
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, bk: int, nk: int, n_kv: int, g: int, hd: int, window: int,
+    logit_cap: float, scale: float,
+):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cur = len_ref[0]
+    k_start = ki * bk
+    live = k_start < cur
+    if window > 0:
+        live = jnp.logical_and(live, k_start + bk > cur - 1 - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale         # [KV*G, hd]
+        qg = q.reshape(n_kv, g, hd)
+        k = k_ref[0].astype(jnp.float32)                 # [bk, KV, hd]
+        kt = k.transpose(1, 2, 0)                        # [KV, hd, bk]
+        s = jax.lax.dot_general(
+            qg, kt, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)          # [KV, G, bk]
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (n_kv, g, bk), 2)
+        mask = k_pos < cur
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > cur - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...].reshape(n_kv, g, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=2, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                   # [KV, G, 1]
+        l_new = l_scr[...].reshape(n_kv, g, 1) * corr + p.sum(2, keepdims=True)
+        vv = v_ref[0].astype(jnp.float32).transpose(1, 0, 2)  # [KV, bk, hd]
+        pv = jax.lax.dot_general(
+            p, vv, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)          # [KV, G, hd]
+        acc_scr[...] = acc_scr[...] * corr.reshape(n_kv * g, 1) + \
+            pv.reshape(n_kv * g, hd)
+        m_scr[...] = m_new.reshape(n_kv * g, 1)
+        l_scr[...] = l_new.reshape(n_kv * g, 1)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,           # [B, H, hd]
+    k_cache: jax.Array,     # [B, S, KV, hd]
+    v_cache: jax.Array,     # [B, S, KV, hd]
+    cur_len: jax.Array,     # scalar int32 — valid cache entries
+    *,
+    window: int = 0,
+    logit_cap: float = 0.0,
+    scale: float | None = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, hd = q.shape
+    _, s, n_kv, _ = k_cache.shape
+    g = h // n_kv
+    bk = min(block_k, s)
+    nk = pl.cdiv(s, bk)
+    sc = (hd ** -0.5) if scale is None else scale
+
+    kernel = functools.partial(
+        _decode_kernel, bk=bk, nk=nk, n_kv=n_kv, g=g, hd=hd, window=window,
+        logit_cap=logit_cap, scale=sc,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nk),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, ki, *_: (bi, 0, 0)),
+            pl.BlockSpec((1, bk, n_kv, hd), lambda bi, ki, *_: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, bk, n_kv, hd), lambda bi, ki, *_: (bi, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bi, ki, *_: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, hd), jnp.float32),
+        ],
+    )
+    cur = jnp.asarray(cur_len, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(cur, q, k_cache, v_cache)

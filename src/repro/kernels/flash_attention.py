@@ -1,0 +1,131 @@
+"""Pallas TPU flash attention (prefill): online softmax over KV blocks.
+
+Grid: (batch·heads, q_blocks, kv_blocks) — the KV axis is the minor
+(sequential) grid dimension on TPU, so the running (m, l, acc) state lives in
+VMEM scratch across KV steps.  GQA is handled with zero data movement: the K/V
+BlockSpec index_map folds the query head → kv head mapping, so kv heads are
+never materialized per query head.
+
+Block shapes are MXU-aligned: q/kv block default 512×head_dim (head_dim is a
+multiple of 128 for most assigned archs; 80/64-dim archs still lower — the
+compiler pads lanes).  Fully-masked KV blocks (causal: k_start > q_end;
+window: k_end <= q_start - window) are skipped with pl.when — for gemma-2
+local layers at 32k this skips ~87 % of blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,            # blocks
+    m_scr, l_scr, acc_scr,                 # VMEM scratch, persists over kv axis
+    *, bq: int, bk: int, nk: int, causal: bool, window: int,
+    logit_cap: float, scale: float, seq_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # block skip: causal → skip blocks entirely above the diagonal;
+    # window → skip blocks entirely left of the window
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + bq - 1)
+    if window > 0:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [bq,bk]
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                    # [bq, 1]
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                  # [bk, hd]
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,            # [BH, S, hd]  (batch × query heads flattened)
+    k: jax.Array,            # [BKV, S, hd] (batch × kv heads flattened)
+    v: jax.Array,            # [BKV, S, hd]
+    *,
+    n_heads: int,
+    n_kv: int,
+    causal: bool = True,
+    window: int = 0,
+    logit_cap: float = 0.0,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, hd = q.shape
+    g = n_heads // n_kv
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    nq = pl.cdiv(s, bq)
+    nk = pl.cdiv(s, bk)
+    sc = (hd ** -0.5) if scale is None else scale
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal, window=window,
+        logit_cap=logit_cap, scale=sc, seq_len=s,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki, g=g: (b // g, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki, g=g: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernels for int8 activation compression (split-inference handoff).
+
+The paper's framework transfers boundary activations between nodes over
+constrained links; [26] (compression-aware split inference) motivates
+quantizing the handoff.  These kernels do symmetric per-row int8 quantization
+(rowwise absmax scale) and dequantization — 2× compression of bf16 traffic
+with one extra fp32 scale per row.  Also reused as the error-feedback gradient
+compressor on the DCN/pod axis in training.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                     # [br, D]
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)    # [br, 1]
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(x_ref.dtype)
+
+
+def quantize_int8(x: jax.Array, *, block_rows: int = 256,
+                  interpret: bool = False):
+    """x: [N, D] -> (int8 [N, D], fp32 scales [N, 1])."""
+    nr, d = x.shape
+    br = min(block_rows, nr)
+    grid = (pl.cdiv(nr, br),)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nr, d), jnp.int8),
+            jax.ShapeDtypeStruct((nr, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_int8(q: jax.Array, scales: jax.Array, dtype=jnp.bfloat16,
+                    *, block_rows: int = 256, interpret: bool = False):
+    nr, d = q.shape
+    br = min(block_rows, nr)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(pl.cdiv(nr, br),),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, d), dtype),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,106 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Model code calls these; each wrapper reshapes from model layout to kernel
+layout, dispatches to the Pallas kernel (TPU) or, when ``interpret=True``
+(CPU container / tests), runs the same kernel body under the Pallas
+interpreter.  Every wrapper has a matching oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import int8_transfer as _i8
+from . import rglru as _rg
+from . import ssd_chunk as _ssd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "logit_cap", "scale",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, logit_cap=0.0,
+                    scale=None, block_q=512, block_k=512, interpret=False):
+    """Model layout: q [B,S,H,hd], k/v [B,S,KV,hd] -> [B,S,H,hd]."""
+    b, s, h, hd = q.shape
+    n_kv = k.shape[2]
+    # pad S to a block multiple: Pallas block padding is uninitialized, and
+    # the kernel's seq_len mask only guards K — zero-pad both sides here
+    blk = max(min(block_q, s), min(block_k, s))
+    pad = (-s) % blk
+    if pad:
+        padding = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, padding)
+        k = jnp.pad(k, padding)
+        v = jnp.pad(v, padding)
+    sp = s + pad
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sp, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * n_kv, sp, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * n_kv, sp, hd)
+    of = _fa.flash_attention(
+        qf, kf, vf, n_heads=h, n_kv=n_kv, causal=causal, window=window,
+        logit_cap=logit_cap, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return of.reshape(b, h, sp, hd).transpose(0, 2, 1, 3)[:, :s]
+
+
+@partial(jax.jit, static_argnames=("window", "logit_cap", "scale", "block_k",
+                                   "interpret"))
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=0, logit_cap=0.0,
+                     scale=None, block_k=512, interpret=False):
+    """q [B,H,hd]; caches [B,S,KV,hd]; cur_len scalar -> [B,H,hd]."""
+    return _dec.decode_attention(
+        q, k_cache, v_cache, cur_len, window=window, logit_cap=logit_cap,
+        scale=scale, block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a_heads, bm, cm, *, chunk=256, interpret=False):
+    """Model layout: x [B,S,H,P], dt [B,S,H], a_heads [H], bm/cm [B,S,G,N]."""
+    b, s, h, p = x.shape
+    pad = (-s) % min(chunk, s)
+    if pad:  # zero dt on padded steps -> identity state transitions
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_out, s = s, s + pad
+    g = bm.shape[2]
+    n = bm.shape[3]
+    rep = h // g
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s)
+    af = jnp.tile(a_heads, b)
+    bf = jnp.repeat(bm.transpose(0, 2, 1, 3), rep, axis=1).reshape(b * h, s, n)
+    cf = jnp.repeat(cm.transpose(0, 2, 1, 3), rep, axis=1).reshape(b * h, s, n)
+    of = _ssd.ssd_chunk(xf, dtf, af, bf, cf, chunk=chunk, interpret=interpret)
+    return of.reshape(b, h, s, p).transpose(0, 2, 1, 3)[:, :s_out]
+
+
+@partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
+def rglru(a, x, *, block_s=256, block_w=512, interpret=False):
+    """a/x: [B,S,W] -> h: [B,S,W]."""
+    b, s, w = x.shape
+    pad_s = (-s) % min(block_s, s)
+    pad_w = (-w) % min(block_w, w)
+    if pad_s or pad_w:
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_w)))
+        x = jnp.pad(x, ((0, 0), (0, pad_s), (0, pad_w)))
+    out = _rg.rglru_scan(a, x, block_s=block_s, block_w=block_w,
+                         interpret=interpret)
+    return out[:, :s, :w]
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_int8(x, *, block_rows=256, interpret=False):
+    return _i8.quantize_int8(x, block_rows=block_rows, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("dtype", "block_rows", "interpret"))
+def dequantize_int8(q, scales, dtype=jnp.bfloat16, *, block_rows=256,
+                    interpret=False):
+    return _i8.dequantize_int8(q, scales, dtype, block_rows=block_rows,
+                               interpret=interpret)

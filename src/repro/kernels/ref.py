@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, n_heads, n_kv, causal=True, window=0,
+                        logit_cap=0.0, scale=None):
+    """q: [BH, S, hd]; k/v: [BKV, S, hd] — direct softmax attention."""
+    bh, s, hd = q.shape
+    g = n_heads // n_kv
+    sc = (hd ** -0.5) if scale is None else scale
+    kk = jnp.repeat(k, g, axis=0).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=0).astype(jnp.float32)
+    sim = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32) * sc, kk)
+    if logit_cap:
+        sim = logit_cap * jnp.tanh(sim / logit_cap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    sim = jnp.where(mask[None], sim, NEG_INF)
+    p = jax.nn.softmax(sim, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, vv).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cur_len, *, window=0,
+                         logit_cap=0.0, scale=None):
+    """q: [B,H,hd]; caches [B,S,KV,hd] — same math as models.attention."""
+    from repro.models.attention import decode_attention
+
+    return decode_attention(q, k_cache, v_cache, cur_len, window=window,
+                            logit_cap=logit_cap, scale=scale)
+
+
+def ssd_chunk_ref(x, dt, a, bm, cm):
+    """x: [BH,S,P], dt: [BH,S], a: [BH], bm/cm: [BH,S,N] — O(S²) SSD."""
+    dta = dt * a[:, None]                                  # [BH,S]
+    cums = jnp.cumsum(dta, axis=1)
+    diff = cums[:, :, None] - cums[:, None, :]             # [BH,i,j]
+    s = x.shape[1]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    L = jnp.where(tri[None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bin,bjn->bij", cm.astype(jnp.float32),
+                        bm.astype(jnp.float32)) * L
+    xbar = x.astype(jnp.float32) * dt[..., None]
+    return jnp.einsum("bij,bjp->bip", scores, xbar).astype(x.dtype)
+
+
+def rglru_ref(a, x):
+    """Sequential recurrence h_t = a_t h_{t-1} + x_t. a/x: [B,S,W]."""
+    def step(h, inp):
+        at, xt = inp
+        h = at.astype(jnp.float32) * h + xt.astype(jnp.float32)
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(x, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+
+
+def quantize_int8_ref(x):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q, scales, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scales).astype(dtype)

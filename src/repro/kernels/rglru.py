@@ -1,0 +1,67 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence (Griffin).
+
+h_t = a_t ⊙ h_{t-1} + x_t over the sequence, vectorized across the channel
+axis (VPU lanes).  Grid: (batch, width_blocks, seq_blocks) with the sequence
+axis minor/sequential; the carried state h lives in VMEM scratch and a
+``fori_loop`` walks the rows of each [bs, bw] block.  This trades log-depth
+associative-scan FLOPs for a pure streaming pass — on TPU the recurrence is
+bandwidth-bound, so the linear walk with resident state is the right shape
+(DESIGN.md §3 hardware-adaptation note).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, x_ref, o_ref, h_scr, *, bs: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)      # [bs, bw]
+    x = x_ref[0].astype(jnp.float32)      # [bs, bw]
+
+    def body(t, h):
+        h = a[t] * h + x[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bs, body, h_scr[0])
+    h_scr[0] = h
+
+
+def rglru_scan(
+    a: jax.Array,        # [B, S, W] decay gates in (0,1)
+    x: jax.Array,        # [B, S, W] gated inputs
+    *,
+    block_s: int = 256,
+    block_w: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, w = a.shape
+    bs = min(block_s, s)
+    bw = min(block_w, w)
+    ns = pl.cdiv(s, bs)
+    nw = pl.cdiv(w, bw)
+
+    kernel = functools.partial(_rglru_kernel, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nw, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((b, s, w), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the Mamba-2 SSD layer (chunked state-space duality).
+
+TPU adaptation of the paper's GPU kernel (DESIGN.md §3): the intra-chunk
+quadratic part maps onto the MXU as three [Q×N]/[Q×Q] matmuls, and the
+inter-chunk recurrence rides the *sequential minor grid axis* with the running
+[N, P] state held in VMEM scratch — the Pallas analogue of Mamba-2's
+chunk-scan. Grid: (batch·heads, num_chunks).
+
+Inputs are per-(batch·head) streams: x [BH, S, P], dt [BH, S], B/C [BH, S, N]
+(the ops.py wrapper broadcasts grouped B/C via BlockSpec index maps, so
+ngroups < heads costs no data movement), A [H] per-head decay.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref,   # order matches operands
+    state_scr,                          # VMEM [N, P] — carried across chunks
+    *, q: int, n: int, p: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)            # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)          # [Q]
+    bb = b_ref[0].astype(jnp.float32)           # [Q, N]
+    cc = c_ref[0].astype(jnp.float32)           # [Q, N]
+    a = a_ref[0].astype(jnp.float32)            # scalar (per head)
+
+    dta = dt * a                                # [Q]
+    cums = jnp.cumsum(dta)                      # [Q]
+    # L[i,j] = exp(cums[i] - cums[j]) for i >= j else 0
+    diff = cums[:, None] - cums[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * L
+    xbar = x * dt[:, None]                      # [Q, P]
+    y_intra = jax.lax.dot_general(scores, xbar, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # carried-state contribution
+    decay_i = jnp.exp(cums)[:, None]            # [Q, 1]
+    y_inter = jax.lax.dot_general(cc * decay_i, state_scr[...],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    o_ref[0] = (y_intra + y_inter).astype(o_ref.dtype)
+
+    # state update: S' = S·exp(cums[-1]) + Σ_j exp(cums[-1]-cums[j]) B_j ⊗ xbar_j
+    decay_out = jnp.exp(cums[-1] - cums)[:, None]      # [Q, 1]
+    state_new = jax.lax.dot_general(bb * decay_out, xbar,
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    state_scr[...] = state_scr[...] * jnp.exp(cums[-1]) + state_new
+
+
+def ssd_chunk(
+    x: jax.Array,       # [BH, S, P]
+    dt: jax.Array,      # [BH, S]
+    a: jax.Array,       # [BH] per-(batch·head) decay (A[h] broadcast by caller)
+    bm: jax.Array,      # [BH, S, N]
+    cm: jax.Array,      # [BH, S, N]
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    nc = pl.cdiv(s, q)
+
+    kernel = functools.partial(_ssd_kernel, q=q, n=n, p=p)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, q), lambda b, c: (b, c)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, q, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, q, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bm, cm)

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any jax import (device count locks on first
+init).  For each cell this script:
+
+  1. builds the FULL-size config's ModelBundle (params via eval_shape — no
+     allocation),
+  2. pjit-lowers the train/prefill/decode step with the production shardings,
+  3. compiles, records memory_analysis() + cost_analysis(),
+  4. parses the partitioned HLO for collective ops with ring-model byte
+     accounting → the three roofline terms of EXPERIMENTS.md §Roofline,
+  5. writes experiments/dryrun/{arch}__{shape}__{mesh}.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[3]))  # for benchmarks/
+from benchmarks.hlo_analysis import analyze_hlo  # noqa: E402
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, LONG_CONTEXT_ARCHS, get_bundle  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.api import SHAPES  # noqa: E402
+from repro.training.train_step import make_serve_fns, make_train_step  # noqa: E402
+
+# ---------------------------------------------------------------- hardware --
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e-class)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def model_flops(bundle, shape) -> float:
+    n_active = bundle.num_active_params()
+    s, b = shape.seq_len, shape.global_batch
+    if shape.kind == "train":
+        return 6.0 * n_active * s * b
+    if shape.kind == "prefill":
+        return 2.0 * n_active * s * b
+    return 2.0 * n_active * b        # decode: one token / sequence
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path) -> dict:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    bundle = get_bundle(arch)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": n_chips, "status": "ok"}
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            _, jit_for, init_state, _ = make_train_step(bundle, mesh)
+            state_shapes = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+            ispecs = bundle.input_specs(shape)
+            lowered = jit_for(ispecs).lower(state_shapes, ispecs)
+        else:
+            fn, ispecs = make_serve_fns(bundle, mesh, shape)
+            params = bundle.param_specs(jnp.bfloat16)
+            if shape.kind == "prefill":
+                lowered = fn.lower(params, ispecs)
+            else:
+                lowered = fn.lower(params, ispecs["cache"], ispecs["tokens"],
+                                   ispecs["pos"])
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        ca = compiled.cost_analysis() or {}
+        # raw XLA numbers, kept for reference — XLA costs while bodies ONCE,
+        # so scan-over-layers models under-report here (see hlo_analysis.py)
+        rec["cost_xla_raw"] = {k: float(v) for k, v in ca.items()
+                               if isinstance(v, (int, float)) and k in
+                               ("flops", "bytes accessed", "transcendentals")}
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        cost = analyze_hlo(hlo)   # trip-count-corrected, per device
+        rec["cost"] = {
+            "flops": cost.flops,
+            "bytes_accessed": cost.bytes_accessed,
+            "collective_bytes": cost.collective_bytes,
+            "collective_by_kind": cost.collective_by_kind,
+            "collective_ops": cost.collective_ops,
+        }
+
+        # --- roofline terms (per chip; analyzer numbers are per-device) ---
+        rec["roofline"] = {
+            "t_compute_s": cost.flops / PEAK_FLOPS,
+            "t_memory_s": cost.bytes_accessed / HBM_BW,
+            "t_collective_s": cost.collective_bytes / ICI_BW,
+        }
+        terms = rec["roofline"]
+        rec["roofline"]["bottleneck"] = max(
+            ("t_compute_s", "t_memory_s", "t_collective_s"),
+            key=lambda k: terms[k])
+        mf = model_flops(bundle, shape)
+        rec["model_flops"] = mf
+        rec["hlo_flops_total"] = cost.flops * n_chips
+        rec["useful_flops_ratio"] = (mf / rec["hlo_flops_total"]
+                                     if rec["hlo_flops_total"] else None)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def cells(archs, shapes, meshes):
+    for arch in archs:
+        for shape in shapes:
+            if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                continue  # documented skip: quadratic-attention archs
+            for mesh in meshes:
+                yield arch, shape, mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    for arch, shape, mesh in cells(archs, shapes, meshes):
+        path = out_dir / f"{arch}__{shape}__{mesh}.json"
+        if args.skip_existing and path.exists():
+            prev = json.loads(path.read_text())
+            if prev.get("status") == "ok":
+                print(f"[skip] {arch} {shape} {mesh}")
+                continue
+        t0 = time.time()
+        rec = run_cell(arch, shape, mesh, out_dir)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" compute={r['t_compute_s']:.3f}s mem={r['t_memory_s']:.3f}s"
+                     f" coll={r['t_collective_s']:.3f}s -> {r['bottleneck']}")
+        else:
+            extra = " " + rec["error"][:160]
+        print(f"[{status}] {arch} {shape} {mesh} ({time.time()-t0:.0f}s){extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

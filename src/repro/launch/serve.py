@@ -1,0 +1,97 @@
+"""Serving driver: adaptive split inference over the edge simulator.
+
+Combines the pieces end-to-end: a SplitInferenceEngine executes a REAL
+(reduced-scale) model under the partition configs that the Adaptive
+Orchestrator commits while the 5G-MEC environment fluctuates.  Per-request
+latencies are priced by the edgesim cost model; the numerics of every request
+flow through the actual split segment chain (int8 transport optional).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --requests 32
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_bundle
+from repro.core import (
+    AdaptiveOrchestrator,
+    CapacityProfiler,
+    InProcessAgent,
+    ReconfigurationBroadcast,
+    SplitRevision,
+    Thresholds,
+    Workload,
+)
+from repro.edgesim import MECScenarioParams, base_system_state
+from repro.serving import ActivationTransport, SplitInferenceEngine
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--backhaul-mbps", type=float, default=50.0)
+    args = ap.parse_args(argv)
+
+    bundle = get_bundle(args.arch, reduced=True)
+    params = bundle.init(jax.random.PRNGKey(0), jnp.float32)
+    engine = SplitInferenceEngine(
+        bundle, params,
+        transport=ActivationTransport(compress=args.compress))
+
+    # orchestration substrate over the reduced model's REAL graph
+    graph = bundle.model_graph()
+    p = MECScenarioParams(backhaul_mbps=args.backhaul_mbps)
+    state = base_system_state(p)
+    wl = Workload(tokens_in=args.prompt_len, tokens_out=8, arrival_rate=2.0)
+    profiler = CapacityProfiler(base_state=state)
+    agents = [InProcessAgent(i) for i in range(state.num_nodes)]
+    orch = AdaptiveOrchestrator(
+        graph=graph, profiler=profiler,
+        broadcast=ReconfigurationBroadcast(agents), workload=wl,
+        thresholds=Thresholds(), splitter=SplitRevision())
+    L = len(graph)
+    cfg0 = orch.deploy_initial((0, max(1, L // 3), max(2, 2 * L // 3), L),
+                               (0, 3, 0))
+    engine.apply_config(cfg0)
+
+    rng = np.random.default_rng(0)
+    lat, reconfigs = [], 0
+    for i in range(args.requests):
+        toks = jnp.asarray(rng.integers(0, bundle.cfg.vocab,
+                                        (1, args.prompt_len), dtype=np.int32))
+        logits = engine.infer_logits(toks)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        from repro.core.cost_model import chain_latency
+        c = orch.current
+        lat.append(chain_latency(graph, c.boundaries, c.assignment,
+                                 profiler.system_state(), wl))
+        profiler.observe_latency(lat[-1])
+        profiler.observe_links(state.link_bw)
+        d = orch.step(now=float(i))
+        if d.config is not None and d.config.version != engine.config.version:
+            engine.apply_config(d.config)
+            reconfigs += 1
+    stats = engine.transfer_stats()
+    out = {
+        "requests": args.requests,
+        "mean_latency_ms": round(float(np.mean(lat)) * 1e3, 1),
+        "reconfigurations": reconfigs,
+        "wire_MB": round(stats.wire_bytes / 1e6, 2),
+        "compression_ratio": round(stats.compression_ratio, 2),
+        "final_split": str(engine.config.boundaries),
+    }
+    print(out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Training driver: sharded steps + checkpoint/restart + straggler watch.
+
+Runs REAL training at reduced scale on this container's devices (see
+examples/train_quickstart.py) and lowers/compiles at production scale via the
+dry-run.  Fault drills: ``--kill-at-step N`` exits mid-run; re-launching with
+the same ``--ckpt-dir`` resumes from the latest checkpoint and the data
+pipeline reproduces the exact batch stream (deterministic seek).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \\
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_bundle
+from repro.data import DataConfig, SyntheticTokens
+from repro.distributed import StragglerDetector
+from repro.launch.mesh import make_small_mesh
+from repro.training import AdamWConfig, TrainStepConfig, make_train_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--kill-at-step", type=int, default=None)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    bundle = get_bundle(args.arch, reduced=args.reduced)
+    mesh = make_small_mesh(args.mesh_data, args.mesh_model)
+    cfg = TrainStepConfig(
+        opt=AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps),
+        grad_compression=args.grad_compression,
+    )
+    step_fn, jit_for, init_state, _ = make_train_step(bundle, mesh, cfg)
+
+    data = SyntheticTokens(
+        DataConfig(vocab=bundle.cfg.vocab, batch=args.batch, seq_len=args.seq))
+    sample = data.batch_at(0)
+    shapes = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), sample)
+    jitted = jit_for(shapes)
+
+    state = init_state(jax.random.PRNGKey(0))
+    start_step = 0
+    ckpt = CheckpointManager(args.ckpt_dir, args.ckpt_every) if args.ckpt_dir \
+        else None
+    if ckpt is not None:
+        resumed, at = ckpt.resume(jax.tree_util.tree_map(np.asarray, state))
+        if resumed is not None:
+            state = jax.tree_util.tree_map(jnp.asarray, resumed)
+            start_step = at
+            print(f"[resume] from step {at}", flush=True)
+    data.seek(start_step)
+
+    detector = StragglerDetector()
+    losses = []
+    for step in range(start_step, args.steps):
+        t0 = time.perf_counter()
+        batch = jax.tree_util.tree_map(jnp.asarray, next(data))
+        state, metrics = jitted(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.perf_counter() - t0
+        detector.observe(0, dt)
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms",
+                  flush=True)
+        if ckpt is not None:
+            ckpt.maybe_save(step + 1,
+                            jax.tree_util.tree_map(np.asarray, state))
+        if args.kill_at_step is not None and step + 1 == args.kill_at_step:
+            print(f"[fault-injection] dying at step {step + 1}", flush=True)
+            sys.exit(42)
+    return {"first_loss": losses[0] if losses else None,
+            "last_loss": losses[-1] if losses else None,
+            "steps_run": len(losses)}
+
+
+if __name__ == "__main__":
+    out = main()
+    print(out)

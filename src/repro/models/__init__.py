@@ -1,0 +1,7 @@
+"""Model families: composable transformer, Mamba-2 SSD, Griffin hybrid."""
+
+from . import griffin, mamba2, transformer, transformer_serve
+from .api import SHAPES, ModelBundle, ShapeSpec, bundle_for
+
+__all__ = ["SHAPES", "ModelBundle", "ShapeSpec", "bundle_for", "griffin",
+           "mamba2", "transformer", "transformer_serve"]

@@ -1,0 +1,158 @@
+"""Attention cores in pure JAX (XLA path).
+
+Two entry points:
+
+* :func:`chunked_attention` — flash-style online-softmax attention scanning
+  over KV blocks.  Memory is O(S · kv_block) instead of O(S²), so 32k-token
+  prefill lowers/compiles without materializing the score matrix.  The math is
+  IDENTICAL to the Pallas kernel in ``repro.kernels.flash_attention`` (which
+  is the TPU production path); this function is what the dry-run lowers, so
+  the roofline HLO stays representative of the kernel's FLOPs/bytes.
+* :func:`decode_attention` — one-token GQA attention against a KV cache,
+  fp32 accumulation, position masking.
+
+Both support causal masks, sliding windows (Gemma-2 local layers), logit
+soft-capping, and grouped-query heads (any H/KV ratio, including MQA kv=1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import softcap as _softcap
+
+NEG_INF = -2.0e38
+
+
+def _gqa_reshape(q: jax.Array, n_kv: int):
+    """[B,S,H,hd] -> [B,S,KV,G,hd] grouping query heads per KV head."""
+    b, s, h, hd = q.shape
+    assert h % n_kv == 0, (h, n_kv)
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def chunked_attention(
+    q: jax.Array,                # [B, Sq, H, hd]
+    k: jax.Array,                # [B, Sk, KV, hd]
+    v: jax.Array,                # [B, Sk, KV, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,             # 0 = global; >0 = sliding window
+    logit_cap: float = 0.0,
+    q_offset: int | jax.Array = 0,  # absolute position of q[0] (prefill chunks)
+    kv_block: int = 1024,
+    scale: float | None = None,
+) -> jax.Array:
+    """Online-softmax attention, scanned over KV blocks. Returns [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    _, sk, n_kv, _ = k.shape
+    hd_v = v.shape[-1]                                       # may differ (MLA)
+    g = h // n_kv
+    blk = min(kv_block, sk)
+    nblk = (sk + blk - 1) // blk
+    pad = nblk * blk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sc = (hd ** -0.5) if scale is None else scale
+
+    # keep operands in their storage dtype; accumulate in f32 via the dot —
+    # explicit .astype(f32) on S-sized tensors materializes full-precision
+    # shadows of the KV stream (§Perf E2a)
+    qg = _gqa_reshape(q, n_kv) * jnp.asarray(sc, q.dtype)    # [B,Sq,KV,G,hd]
+    q_pos = q_offset + jnp.arange(sq)                        # [Sq]
+
+    kb = k.reshape(b, nblk, blk, n_kv, hd)
+    vb = v.reshape(b, nblk, blk, n_kv, hd_v)
+
+    def step(carry, inputs):
+        m, l, acc = carry                                    # running max/sum/out
+        kblk, vblk, start = inputs                           # [B,blk,KV,hd], start pos
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qg, kblk,
+                       preferred_element_type=jnp.float32)
+        if logit_cap:
+            s = _softcap(s, logit_cap)
+        k_pos = start + jnp.arange(blk)                      # [blk]
+        if pad:
+            mask = (k_pos < sk)[None, :]                     # mask the padding
+        else:
+            mask = jnp.ones((1, blk), bool)
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        # window: static 0 (global) skips the mask term entirely; a traced
+        # per-layer scalar (mixed local/global schedules) stays dynamic
+        if not (isinstance(window, int) and window <= 0):
+            w = jnp.asarray(window)
+            mask = mask & ((w <= 0) | (k_pos[None, :] > q_pos[:, None] - w))
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))               # [B,Sq,KV,G]
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        # PV in the value dtype with f32 accumulation (flash-kernel numerics)
+        pv = jnp.einsum("bqkgc,bckh->bqkgh", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, n_kv, g, hd_v), jnp.float32)
+    starts = jnp.arange(nblk) * blk
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), starts),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, hd_v).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,                # [B, H, hd] — one new token per sequence
+    k_cache: jax.Array,          # [B, S, KV, hd]
+    v_cache: jax.Array,          # [B, S, KV, hd]
+    cur_len: jax.Array,          # [] or [B] — tokens valid in the cache
+    *,
+    window: int = 0,
+    logit_cap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-step GQA attention over the cache. Returns [B, H, hd]."""
+    b, s, n_kv, hd = k_cache.shape
+    h = q.shape[1]
+    g = h // n_kv
+    sc = (hd ** -0.5) if scale is None else scale
+    qg = q.reshape(b, n_kv, g, hd) * jnp.asarray(sc, q.dtype)
+    s_ = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                    preferred_element_type=jnp.float32)
+    if logit_cap:
+        s_ = _softcap(s_, logit_cap)
+    pos = jnp.arange(s)
+    cur = jnp.asarray(cur_len)
+    cur_b = cur[:, None] if cur.ndim == 1 else cur[None, None]
+    mask = pos[None, :] < cur_b                               # [B or 1, S]
+    w = jnp.asarray(window)
+    mask = mask & ((w <= 0) | (pos[None, :] > cur_b - 1 - w))
+    if mask.shape[0] == 1:
+        mask = jnp.broadcast_to(mask, (b, s))
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def update_kv_cache(
+    k_cache: jax.Array, v_cache: jax.Array,
+    k_new: jax.Array, v_new: jax.Array, pos: jax.Array,
+):
+    """Write [B, KV, hd] (or [B,1,KV,hd]) entries at ``pos`` (scalar)."""
+    if k_new.ndim == 3:
+        k_new = k_new[:, None]
+        v_new = v_new[:, None]
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    return k_cache, v_cache

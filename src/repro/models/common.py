@@ -1,0 +1,132 @@
+"""Shared building blocks for all model families (pure-functional JAX)."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict of jnp arrays
+
+DEFAULT_COMPUTE = jnp.bfloat16
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap·tanh(x/cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return (x * s).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x: jax.Array, p: Params, kind: str, **kw) -> jax.Array:
+    if kind == "rms":
+        return rms_norm(x, p["scale"], **kw)
+    if kind == "rms1":  # gemma-style (1 + scale)
+        return rms_norm(x, p["scale"], plus_one=True, **kw)
+    if kind == "ln":
+        return layer_norm(x, p["scale"], p["bias"], **kw)
+    raise ValueError(kind)
+
+
+def norm_params(d: int, kind: str, dtype=jnp.float32) -> Params:
+    if kind in ("rms", "rms1"):
+        init = jnp.zeros if kind == "rms1" else jnp.ones
+        return {"scale": init((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0,
+               rope_dim: int | None = None) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S].
+
+    ``rope_dim``: rotate only the first ``rope_dim`` features (partial RoPE).
+    Uses the interleaved-pairs convention throughout the repo.
+    """
+    hd = x.shape[-1]
+    rd = hd if rope_dim is None else rope_dim
+    xr, xp = x[..., :rd], x[..., rd:]
+    freqs = rope_frequencies(rd, theta)                       # [rd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [..., S, rd/2]
+    cos = jnp.cos(ang)[..., None, :]                          # [..., S, 1, rd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rd < hd else out
+
+
+# --------------------------------------------------------------------------- #
+# initializers (shape-only friendly: usable under jax.eval_shape)
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, dtype=jnp.float32, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Deterministic PRNG key dispenser for building param trees."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def count_params(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params,
+    )

@@ -1,0 +1,430 @@
+"""Composable decoder-only transformer covering 8 of the 10 assigned archs.
+
+One config dataclass + pure functions.  Feature axes (all combinable):
+  * GQA / MQA / MHA via ``n_kv``
+  * MLA (DeepSeek-V2) latent KV compression + decoupled RoPE
+  * MoE (token-choice top-k, capacity-bounded, gather-based dispatch)
+  * alternating local/global attention (per-layer window schedule)
+  * attention & final logit soft-capping (Gemma-2)
+  * parallel attention+FFN blocks (Command-R), QK-norm (Qwen3),
+    pre+post sandwich norms (Gemma-2), partial RoPE (StableLM-2)
+  * embedding inputs (VLM patch embeds / audio frames prepended or direct)
+
+Layers are weight-stacked and executed with ``jax.lax.scan`` so 60+-layer
+models produce O(1)-size HLO and compile quickly; per-layer schedule values
+(window size) ride along as scanned arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.context import constrain
+from .attention import chunked_attention, decode_attention, update_kv_cache
+from .common import (
+    KeyGen,
+    Params,
+    activation,
+    apply_norm,
+    apply_rope,
+    dense_init,
+    embed_init,
+    norm_params,
+    softcap,
+)
+
+# --------------------------------------------------------------------------- #
+# configs
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                   # per-expert FFN hidden size
+    num_shared: int = 0             # always-on shared experts (DeepSeek)
+    first_dense_layers: int = 0     # leading dense layers (DeepSeek-V2)
+    dense_d_ff: int = 0             # FFN width of those dense layers
+    capacity_factor: float = 1.25
+    router_scale: bool = True       # normalize top-k gate weights to sum 1
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    act: str = "silu"
+    norm: str = "rms"                  # rms | rms1 | ln
+    glu: bool = True                   # gated FFN (SwiGLU/GeGLU) vs plain MLP
+    parallel_block: bool = False
+    qk_norm: bool = False
+    post_norm: bool = False            # gemma2 sandwich norms
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    rope_theta: float = 10_000.0
+    rope_frac: float = 1.0             # partial rotary (stablelm-2: 0.25)
+    attn_scale: float | None = None    # override 1/sqrt(head_dim)
+    # per-layer window schedule, cycled: 0 = global, w>0 = sliding window
+    window_pattern: tuple[int, ...] = (0,)
+    tie_embeddings: bool = False
+    embed_inputs: bool = False         # inputs are embeddings, not token ids
+    embed_scale: bool = False          # multiply embeddings by sqrt(d) (gemma)
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    # vlm: number of prepended modality tokens in input_specs (0 = none)
+    prefix_tokens: int = 0
+    prefix_dim: int = 0                # raw dim of modality embeddings
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def windows(self) -> np.ndarray:
+        pat = self.window_pattern or (0,)
+        return np.array([pat[i % len(pat)] for i in range(self.n_layers)],
+                        dtype=np.int32)
+
+    @property
+    def params_per_block(self) -> int:
+        d, hd = self.d_model, self.hd
+        if self.mla is not None:
+            m = self.mla
+            qk = m.nope_head_dim + m.rope_head_dim
+            attn = (d * self.n_heads * qk                 # W_q
+                    + d * (m.kv_lora + m.rope_head_dim)   # W_dkv + W_kr
+                    + m.kv_lora * self.n_heads * (m.nope_head_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d)    # W_o
+        else:
+            attn = d * self.n_heads * hd + 2 * d * self.n_kv * hd \
+                + self.n_heads * hd * d
+        if self.moe is not None:
+            f = (3 if self.glu else 2) * d * self.moe.d_expert
+            ffn = self.moe.num_experts * f + self.moe.num_shared * f \
+                + d * self.moe.num_experts  # router
+        else:
+            ffn = (3 if self.glu else 2) * d * self.d_ff
+        return attn + ffn
+
+    @property
+    def active_params_per_block(self) -> int:
+        if self.moe is None:
+            return self.params_per_block
+        d = self.d_model
+        f = (3 if self.glu else 2) * d * self.moe.d_expert
+        total = self.params_per_block
+        return total - self.moe.num_experts * f + self.moe.top_k * f
+
+    def num_params(self) -> int:
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return emb + self.n_layers * self.params_per_block
+
+    def num_active_params(self) -> int:
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return emb + self.n_layers * self.active_params_per_block
+
+
+# --------------------------------------------------------------------------- #
+# parameter construction (works under jax.eval_shape for the dry-run)
+# --------------------------------------------------------------------------- #
+def _block_params(cfg: TransformerConfig, kg: KeyGen, dtype) -> Params:
+    d, hd, h, kv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv
+    p: dict[str, Any] = {"ln1": norm_params(d, cfg.norm, dtype)}
+    if not cfg.parallel_block:
+        p["ln2"] = norm_params(d, cfg.norm, dtype)
+    if cfg.post_norm:
+        p["ln1_post"] = norm_params(d, cfg.norm, dtype)
+        p["ln2_post"] = norm_params(d, cfg.norm, dtype)
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.nope_head_dim + m.rope_head_dim
+        p["attn"] = {
+            "wq": dense_init(kg(), (d, h, qk), dtype),
+            "wdkv": dense_init(kg(), (d, m.kv_lora), dtype),
+            "wkr": dense_init(kg(), (d, m.rope_head_dim), dtype),
+            "kv_ln": norm_params(m.kv_lora, "rms", dtype),
+            "wuk": dense_init(kg(), (m.kv_lora, h, m.nope_head_dim), dtype),
+            "wuv": dense_init(kg(), (m.kv_lora, h, m.v_head_dim), dtype),
+            "wo": dense_init(kg(), (h, m.v_head_dim, d), dtype),
+        }
+    else:
+        p["attn"] = {
+            "wq": dense_init(kg(), (d, h, hd), dtype),
+            "wk": dense_init(kg(), (d, kv, hd), dtype),
+            "wv": dense_init(kg(), (d, kv, hd), dtype),
+            "wo": dense_init(kg(), (h, hd, d), dtype),
+        }
+    if cfg.qk_norm:
+        p["attn"]["q_norm"] = norm_params(hd, "rms", dtype)
+        p["attn"]["k_norm"] = norm_params(hd, "rms", dtype)
+
+    def ffn(width: int, prefix_shape=()) -> Params:
+        q = {"wi": dense_init(kg(), (*prefix_shape, d, width), dtype),
+             "wo": dense_init(kg(), (*prefix_shape, width, d), dtype)}
+        if cfg.glu:
+            q["wg"] = dense_init(kg(), (*prefix_shape, d, width), dtype)
+        return q
+
+    if cfg.moe is not None:
+        p["moe"] = {
+            "router": dense_init(kg(), (d, cfg.moe.num_experts), jnp.float32),
+            "experts": ffn(cfg.moe.d_expert, (cfg.moe.num_experts,)),
+        }
+        if cfg.moe.num_shared:
+            p["moe"]["shared"] = ffn(cfg.moe.d_expert * cfg.moe.num_shared)
+    else:
+        p["mlp"] = ffn(cfg.d_ff)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array,
+                dtype=jnp.float32) -> Params:
+    kg = KeyGen(key)
+    moe = cfg.moe
+    n_dense_lead = moe.first_dense_layers if moe else 0
+
+    # stacked homogeneous blocks (scanned); leading dense MoE layers unrolled
+    def stack(n: int, make):
+        ps = [make() for _ in range(n)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+
+    params: dict[str, Any] = {
+        "embed": embed_init(kg(), (cfg.vocab, cfg.d_model), dtype),
+        "final_norm": norm_params(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(kg(), (cfg.d_model, cfg.vocab), dtype)
+    if n_dense_lead:
+        dense_cfg = dataclasses.replace(
+            cfg, moe=None, d_ff=moe.dense_d_ff or cfg.d_ff)
+        params["lead_blocks"] = [
+            _block_params(dense_cfg, kg, dtype) for _ in range(n_dense_lead)
+        ]
+    n_scanned = cfg.n_layers - n_dense_lead
+    params["blocks"] = stack(n_scanned, partial(_block_params, cfg, kg, dtype))
+    if cfg.prefix_tokens:
+        params["prefix_proj"] = dense_init(
+            kg(), (cfg.prefix_dim or cfg.d_model, cfg.d_model), dtype)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# MoE: token-choice top-k with capacity, gather-based dispatch (no fake FLOPs)
+# --------------------------------------------------------------------------- #
+def moe_ffn(x: jax.Array, p: Params, cfg: TransformerConfig) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d]."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                       # [T, E]
+    topv, tope = jax.lax.top_k(gates, moe.top_k)                  # [T, k]
+    if moe.router_scale:
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    e_flat = tope.reshape(-1)                                     # [T*k]
+    w_flat = topv.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t), moe.top_k)
+
+    cap = int(np.ceil(t * moe.top_k / moe.num_experts * moe.capacity_factor))
+    cap = max(cap, 4)
+    # stable sort by expert; rank within expert = slot
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    w_sorted = w_flat[order]
+    # slot index inside each expert group
+    counts = jnp.bincount(e_flat, length=moe.num_experts)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(t * moe.top_k) - offsets[e_sorted]
+    # overflow tokens land in a dump column (cap) that is sliced off, so they
+    # can never clobber a kept token's slot
+    slot_c = jnp.minimum(slot, cap)
+
+    idx = jnp.zeros((moe.num_experts, cap + 1), jnp.int32)
+    idx = idx.at[e_sorted, slot_c].set(tok_sorted.astype(jnp.int32))
+    wmat = jnp.zeros((moe.num_experts, cap + 1), jnp.float32)
+    wmat = wmat.at[e_sorted, slot_c].set(w_sorted)
+    idx, wmat = idx[:, :cap], wmat[:, :cap]
+
+    xin = xf[idx]                                                 # [E, C, d]
+    we = p["experts"]
+    hgate = jnp.einsum("ecd,edf->ecf", xin, we["wi"].astype(xin.dtype))
+    if cfg.glu:
+        hlin = jnp.einsum("ecd,edf->ecf", xin, we["wg"].astype(xin.dtype))
+        h = activation(hgate, cfg.act) * hlin
+    else:
+        h = activation(hgate, cfg.act)
+    eout = jnp.einsum("ecf,efd->ecd", h, we["wo"].astype(h.dtype))  # [E, C, d]
+    eout = eout * wmat[..., None].astype(eout.dtype)
+
+    out = jnp.zeros((t, d), eout.dtype).at[idx.reshape(-1)].add(
+        eout.reshape(-1, d))
+    if moe.num_shared:
+        sh = p["shared"]
+        hg = xf @ sh["wi"].astype(xf.dtype)
+        if cfg.glu:
+            h2 = activation(hg, cfg.act) * (xf @ sh["wg"].astype(xf.dtype))
+        else:
+            h2 = activation(hg, cfg.act)
+        out = out + h2 @ sh["wo"].astype(h2.dtype)
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def dense_ffn(x: jax.Array, p: Params, cfg: TransformerConfig) -> jax.Array:
+    hg = constrain(x @ p["wi"].astype(x.dtype), "ff")
+    if cfg.glu:
+        h = activation(hg, cfg.act) * constrain(
+            x @ p["wg"].astype(x.dtype), "ff")
+    else:
+        h = activation(hg, cfg.act)
+    return constrain(h @ p["wo"].astype(h.dtype), "hidden")
+
+
+# --------------------------------------------------------------------------- #
+# attention projections (dense-GQA and MLA)
+# --------------------------------------------------------------------------- #
+def _qk_normed(q, k, p, cfg):
+    if cfg.qk_norm:
+        q = apply_norm(q, p["q_norm"], "rms")
+        k = apply_norm(k, p["k_norm"], "rms")
+    return q, k
+
+
+def attn_forward(
+    x: jax.Array, p: Params, cfg: TransformerConfig, *,
+    window: jax.Array | int, q_offset=0, kv_block: int = 1024,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill compute). x: [B,S,d]."""
+    b, s, d = x.shape
+    if cfg.mla is not None:
+        m = cfg.mla
+        q = jnp.einsum("bsd,dhq->bshq", x, p["wq"].astype(x.dtype))
+        q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+        ckv = apply_norm(
+            jnp.einsum("bsd,dl->bsl", x, p["wdkv"].astype(x.dtype)),
+            p["kv_ln"], "rms")
+        k_rope = jnp.einsum("bsd,dr->bsr", x, p["wkr"].astype(x.dtype))
+        pos = q_offset + jnp.arange(s)
+        q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)
+        k_nope = jnp.einsum("bsl,lhq->bshq", ckv, p["wuk"].astype(x.dtype))
+        v = jnp.einsum("bsl,lhv->bshv", ckv, p["wuv"].astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, cfg.n_heads, m.rope_head_dim))],
+            axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+        o = chunked_attention(q_full, k, v, causal=True, window=window,
+                              logit_cap=cfg.attn_softcap, q_offset=q_offset,
+                              kv_block=kv_block, scale=scale)
+        return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(o.dtype))
+
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype)),
+                  "heads")
+    k = constrain(jnp.einsum("bsd,dgk->bsgk", x, p["wk"].astype(x.dtype)),
+                  "heads")
+    v = constrain(jnp.einsum("bsd,dgk->bsgk", x, p["wv"].astype(x.dtype)),
+                  "heads")
+    q, k = _qk_normed(q, k, p, cfg)
+    pos = q_offset + jnp.arange(s)
+    rd = int(cfg.hd * cfg.rope_frac) if cfg.rope_frac < 1.0 else None
+    q = apply_rope(q, pos, cfg.rope_theta, rope_dim=rd)
+    k = apply_rope(k, pos, cfg.rope_theta, rope_dim=rd)
+    o = chunked_attention(q, k, v, causal=True, window=window,
+                          logit_cap=cfg.attn_softcap, q_offset=q_offset,
+                          kv_block=kv_block, scale=cfg.attn_scale)
+    return constrain(jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype)),
+                     "hidden")
+
+
+# --------------------------------------------------------------------------- #
+# block + full model forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def block_forward(x, p, cfg: TransformerConfig, *, window, q_offset=0,
+                  kv_block: int = 1024):
+    h = apply_norm(x, p["ln1"], cfg.norm)
+    attn_out = attn_forward(h, p["attn"], cfg, window=window,
+                            q_offset=q_offset, kv_block=kv_block)
+    if cfg.post_norm:
+        attn_out = apply_norm(attn_out, p["ln1_post"], cfg.norm)
+    if cfg.parallel_block:
+        ffn_out = (moe_ffn(h, p["moe"], cfg) if cfg.moe is not None
+                   else dense_ffn(h, p["mlp"], cfg))
+        return x + attn_out + ffn_out
+    x = x + attn_out
+    h = apply_norm(x, p["ln2"], cfg.norm)
+    ffn_out = (moe_ffn(h, p["moe"], cfg) if cfg.moe is not None
+               else dense_ffn(h, p["mlp"], cfg))
+    if cfg.post_norm:
+        ffn_out = apply_norm(ffn_out, p["ln2_post"], cfg.norm)
+    return x + ffn_out
+
+
+def embed_tokens(params, cfg: TransformerConfig, tokens: jax.Array,
+                 compute_dtype=jnp.bfloat16) -> jax.Array:
+    x = params["embed"].astype(compute_dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), compute_dtype)
+    return x
+
+
+def forward_hidden(
+    params: Params, cfg: TransformerConfig, x: jax.Array, *,
+    q_offset=0, remat: bool = True, kv_block: int = 1024,
+) -> jax.Array:
+    """Run all blocks on embedded inputs x: [B,S,d] -> [B,S,d] (pre-head)."""
+    x = constrain(x, "hidden")
+    win_np = cfg.windows()
+    moe = cfg.moe
+    n_lead = moe.first_dense_layers if moe else 0
+    if n_lead:
+        dense_cfg = dataclasses.replace(cfg, moe=None,
+                                        d_ff=moe.dense_d_ff or cfg.d_ff)
+        for lp in params["lead_blocks"]:
+            x = block_forward(x, lp, dense_cfg, window=0, q_offset=q_offset,
+                              kv_block=kv_block)
+
+    uniform = len(set(win_np.tolist())) == 1   # static window -> cheaper masks
+
+    def body(h, inputs):
+        if uniform:
+            lp = inputs
+            w = int(win_np[0])
+        else:
+            lp, w = inputs
+        return block_forward(h, lp, cfg, window=w, q_offset=q_offset,
+                             kv_block=kv_block), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = params["blocks"] if uniform else (
+        params["blocks"], jnp.asarray(win_np)[n_lead:])
+    x, _ = jax.lax.scan(body, x, xs)
+    return apply_norm(x, params["final_norm"], cfg.norm)
+
+
+def logits_fn(params: Params, cfg: TransformerConfig, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = h @ w.astype(h.dtype)
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)

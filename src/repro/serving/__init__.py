@@ -1,0 +1,10 @@
+"""Split-inference serving: segments, transport, engine, batching."""
+
+from .batching import BatchStats, Request, WaveBatcher
+from .engine import SplitInferenceEngine
+from .segments import SegmentRunner, run_chain, split_params
+from .transfer import ActivationTransport, TransferStats
+
+__all__ = ["ActivationTransport", "BatchStats", "Request", "SegmentRunner",
+           "SplitInferenceEngine", "TransferStats", "WaveBatcher",
+           "run_chain", "split_params"]

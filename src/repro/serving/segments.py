@@ -1,0 +1,178 @@
+"""Segment execution: run a contiguous unit range of a model on one node.
+
+This is the paper's S_j made executable.  The orchestrator's ModelGraph units
+are [embed, block_0..block_{L-1}, lm_head]; a :class:`SegmentRunner` takes a
+(lo, hi) unit range and runs exactly those units, consuming/producing boundary
+activations.  Chaining runners over a split scheme reproduces the monolithic
+forward bit-for-bit (tested in tests/test_serving.py) — re-splitting changes
+WHERE layers run, never WHAT they compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import griffin, mamba2, transformer
+from ..models.api import ModelBundle
+
+__all__ = ["SegmentRunner", "split_params", "run_chain"]
+
+
+def _tf_slice_blocks(params: Any, lo: int, hi: int) -> Any:
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], params["blocks"])
+
+
+@dataclass
+class SegmentRunner:
+    """Executes graph units [lo, hi) for one architecture."""
+
+    bundle: ModelBundle
+    lo: int
+    hi: int
+
+    @property
+    def n_units(self) -> int:
+        return len(self.bundle.model_graph())
+
+    def __call__(self, params: Any, x: jax.Array) -> jax.Array:
+        """x: token ids [B,S] if lo==0, else boundary activations [B,S,d].
+
+        Returns boundary activations, or fp32 logits if hi == n_units.
+        """
+        b = self.bundle
+        cfg = b.cfg
+        fam = b.family
+        L = self.n_units - 2                 # number of blocks
+        lo, hi = self.lo, self.hi
+        assert 0 <= lo < hi <= L + 2
+
+        if fam == "transformer":
+            if lo == 0:
+                x = transformer.embed_tokens(params, cfg, x)
+                lo = 1
+            blo, bhi = lo - 1, min(hi - 1, L)
+            if bhi > blo:
+                windows = jnp.asarray(cfg.windows())
+                moe = cfg.moe
+                n_lead = moe.first_dense_layers if moe else 0
+                for i in range(blo, min(bhi, n_lead)):
+                    dense_cfg = dataclasses.replace(
+                        cfg, moe=None, d_ff=moe.dense_d_ff or cfg.d_ff)
+                    x = transformer.block_forward(
+                        x, params["lead_blocks"][i], dense_cfg, window=0)
+                slo, shi = max(blo - n_lead, 0), bhi - n_lead
+                if shi > slo:
+                    sub = _tf_slice_blocks(params, slo, shi)
+
+                    def body(h, inputs):
+                        lp, w = inputs
+                        return transformer.block_forward(h, lp, cfg, window=w), None
+
+                    x, _ = jax.lax.scan(
+                        body, x, (sub, windows[n_lead + slo:n_lead + shi]))
+            if hi == L + 2:
+                x = transformer.apply_norm(x, params["final_norm"], cfg.norm)
+                return transformer.logits_fn(params, cfg, x)
+            return x
+
+        if fam == "mamba2":
+            if lo == 0:
+                x = mamba2.embed_tokens(params, cfg, x)
+                lo = 1
+            blo, bhi = lo - 1, min(hi - 1, L)
+            if bhi > blo:
+                sub = _tf_slice_blocks(params, blo, bhi)
+
+                def body(h, lp):
+                    return mamba2.block_forward(h, lp, cfg), None
+
+                x, _ = jax.lax.scan(body, x, sub)
+            if hi == L + 2:
+                x = mamba2.apply_norm(x, params["final_norm"], cfg.norm)
+                return mamba2.logits_fn(params, cfg, x)
+            return x
+
+        if fam == "griffin":
+            if lo == 0:
+                x = griffin.embed_tokens(params, cfg, x)
+                lo = 1
+            blo, bhi = lo - 1, min(hi - 1, L)
+            kinds = cfg.layer_kinds()
+            glen = len(cfg.pattern)
+            n_groups = cfg.n_layers // glen
+            for li in range(blo, bhi):
+                if li < n_groups * glen:
+                    g, i = divmod(li, glen)
+                    gp = jax.tree_util.tree_map(
+                        lambda a, g=g: a[g], params["groups"])
+                    tm, mp = gp[f"t{i}"], gp[f"m{i}"]
+                else:
+                    tl = params["tail"][li - n_groups * glen]
+                    tm, mp = tl["t"], tl["m"]
+                if kinds[li] == "rec":
+                    x = griffin.rec_forward(x, tm, cfg)
+                else:
+                    x = griffin.attn_forward(x, tm, cfg)
+                x = griffin.mlp_forward(x, mp, cfg)
+            if hi == L + 2:
+                x = griffin.apply_norm(x, params["final_norm"], cfg.norm)
+                return griffin.logits_fn(params, cfg, x)
+            return x
+
+        raise ValueError(fam)
+
+
+def split_params(bundle: ModelBundle, params: Any,
+                 boundaries: tuple[int, ...]) -> list[Any]:
+    """Per-segment param subsets (what RB ships to each node).
+
+    Returns one params-view per segment containing only what that segment's
+    units need.  Shared trees (embed for tied heads) are included where used.
+    """
+    out = []
+    L = len(bundle.model_graph()) - 2
+    tied = getattr(bundle.cfg, "tie_embeddings", False)
+    for lo, hi in zip(boundaries[:-1], boundaries[1:]):
+        seg: dict[str, Any] = {}
+        if lo == 0 or (hi == L + 2 and tied):
+            seg["embed"] = params["embed"]
+        if hi == L + 2:
+            seg["final_norm"] = params["final_norm"]
+            if not tied and "head" in params:
+                seg["head"] = params["head"]
+        if "prefix_proj" in params and lo == 0:
+            seg["prefix_proj"] = params["prefix_proj"]
+        blo, bhi = max(lo - 1, 0), min(hi - 1, L)
+        if bhi > blo:
+            if "blocks" in params:
+                moe = getattr(bundle.cfg, "moe", None)
+                n_lead = moe.first_dense_layers if moe else 0
+                if n_lead and blo < n_lead:
+                    seg["lead_blocks"] = params["lead_blocks"][blo:min(bhi, n_lead)]
+                slo, shi = max(blo - n_lead, 0), bhi - n_lead
+                if shi > slo:
+                    seg["blocks"] = _tf_slice_blocks(params, slo, shi)
+            else:  # griffin
+                seg["groups"] = params["groups"]
+                seg["tail"] = params["tail"]
+        out.append(seg)
+    return out
+
+
+def run_chain(bundle: ModelBundle, params: Any, boundaries: tuple[int, ...],
+              tokens: jax.Array, *, transfer_hook=None) -> jax.Array:
+    """Execute the full split chain; optional hook sees boundary activations
+    (the serving engine uses it for compression + byte accounting)."""
+    x = tokens
+    n = len(bundle.model_graph())
+    for j, (lo, hi) in enumerate(zip(boundaries[:-1], boundaries[1:])):
+        runner = SegmentRunner(bundle, lo, hi)
+        x = runner(params, x)
+        if transfer_hook is not None and hi < n:
+            x = transfer_hook(j, x)
+    return x

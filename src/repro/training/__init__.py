@@ -1,0 +1,13 @@
+"""Training: AdamW, sharded train step, grad compression, microbatching."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
+from .train_step import (
+    TrainStepConfig,
+    compress_grads_int8,
+    make_serve_fns,
+    make_train_step,
+)
+
+__all__ = ["AdamWConfig", "TrainStepConfig", "adamw_init", "adamw_update",
+           "compress_grads_int8", "global_norm", "make_serve_fns",
+           "make_train_step"]

@@ -1,0 +1,164 @@
+"""Jitted, sharded train / serve steps for any ModelBundle.
+
+``make_train_step`` builds the pjit'd (loss+grad → AdamW) step with FSDP×TP
+in/out shardings and donated state.  Optional int8 error-feedback gradient
+compression models the DCN (pod-axis) traffic reduction: gradients are
+quantized + dequantized with the residual carried to the next step (the
+numerics of compressed all-reduce; see DESIGN.md §3 on why the wire-level
+collective itself is XLA's to schedule).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed.context import activation_mesh
+from ..distributed.sharding import (
+    batch_axes,
+    cache_pspecs,
+    dp_axes,
+    input_pspecs,
+    param_pspecs,
+    strip_dp,
+    tree_named,
+)
+from ..models.api import ModelBundle, ShapeSpec
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainStepConfig", "make_train_step", "make_serve_fns",
+           "compress_grads_int8"]
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    opt: AdamWConfig = AdamWConfig()
+    grad_compression: bool = False    # int8 error-feedback on gradients
+    param_dtype: Any = jnp.float32
+
+
+def compress_grads_int8(grads: Any, residual: Any):
+    """Error-feedback int8 compression: returns (decompressed, new_residual)."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        flat = g32.reshape(-1, g32.shape[-1]) if g32.ndim >= 2 else \
+            g32.reshape(1, -1)
+        scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1, keepdims=True),
+                            1e-12) / 127.0
+        q = jnp.clip(jnp.round(flat / scale), -127, 127)
+        deq = (q * scale).reshape(g32.shape)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])
+
+
+def make_train_step(bundle: ModelBundle, mesh: Mesh,
+                    cfg: TrainStepConfig = TrainStepConfig()):
+    """Returns (jitted step, state_specs) — step(state, batch) -> (state, metrics)."""
+
+    def step_fn(state, batch):
+        # activation-sharding context is active during TRACING, so the
+        # with_sharding_constraint calls inside the models see the mesh
+        with activation_mesh(mesh):
+            params = state["params"]
+            loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+            if cfg.grad_compression:
+                grads, new_res = compress_grads_int8(grads, state["residual"])
+            new_params, new_opt, metrics = adamw_update(
+                cfg.opt, params, grads, state["opt"])
+            new_state = {"params": new_params, "opt": new_opt}
+            if cfg.grad_compression:
+                new_state["residual"] = new_res
+            metrics = dict(metrics, loss=loss)
+            return new_state, metrics
+
+    param_shapes = bundle.param_specs(cfg.param_dtype)
+    pspecs = param_pspecs(param_shapes, mesh)
+    state_specs = {
+        "params": pspecs,
+        "opt": {"mu": pspecs, "nu": pspecs, "step": P()},
+    }
+    if cfg.grad_compression:
+        state_specs["residual"] = pspecs
+
+    def batch_spec(batch_tree):
+        return jax.tree_util.tree_map(
+            lambda l: P(batch_axes(l.shape[0], mesh), *([None] * (l.ndim - 1))),
+            batch_tree)
+
+    def jit_for(batch_shapes):
+        in_shardings = (tree_named(mesh, state_specs),
+                        tree_named(mesh, batch_spec(batch_shapes)))
+        out_shardings = (tree_named(mesh, state_specs),
+                         NamedSharding(mesh, P()))
+        return jax.jit(step_fn, in_shardings=in_shardings,
+                       out_shardings=out_shardings, donate_argnums=(0,))
+
+    def init_state(key):
+        params = bundle.init(key, cfg.param_dtype)
+        state = {"params": params, "opt": adamw_init(params)}
+        if cfg.grad_compression:
+            state["residual"] = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return state
+
+    return step_fn, jit_for, init_state, state_specs
+
+
+def make_serve_fns(bundle: ModelBundle, mesh: Mesh, shape: ShapeSpec):
+    """pjit'd (prefill, decode) with cache/param shardings for the dry-run
+    and the serving engine.  Serving weights are TP-only (§Perf E1);
+    REPRO_SERVE_FSDP=1 restores the paper-faithful-baseline FSDP sharding
+    for before/after measurement."""
+    import os
+
+    pspecs = param_pspecs(bundle.param_specs(jnp.bfloat16), mesh)
+    if not os.environ.get("REPRO_SERVE_FSDP"):
+        pspecs = strip_dp(pspecs)
+    params_sh = tree_named(mesh, pspecs)
+    ispecs = bundle.input_specs(shape)
+    in_sh = input_pspecs(ispecs, mesh, family=bundle.family)
+
+    dpb = batch_axes(shape.global_batch, mesh)
+    vocab = bundle.cfg.vocab
+    tp_size = mesh.shape["model"]
+    logits_spec = P(dpb, "model") if vocab % tp_size == 0 else P(dpb, None)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            with activation_mesh(mesh):
+                return bundle.prefill(params, batch)
+
+        cache_sh = cache_pspecs(
+            bundle.cache_spec(shape.global_batch, shape.seq_len),
+            mesh, family=bundle.family)
+        jitted = jax.jit(
+            prefill_fn,
+            in_shardings=(params_sh, tree_named(mesh, in_sh)),
+            out_shardings=(NamedSharding(mesh, logits_spec),
+                           tree_named(mesh, cache_sh)),
+        )
+        return jitted, ispecs
+
+    def decode_fn(params, cache, tokens, pos):
+        with activation_mesh(mesh):
+            return bundle.decode(params, cache, tokens, pos)
+
+    cache_sh = tree_named(mesh, in_sh["cache"])
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(params_sh, cache_sh,
+                      NamedSharding(mesh, P(dpb)), NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, logits_spec), cache_sh),
+        donate_argnums=(1,),
+    )
+    return jitted, ispecs

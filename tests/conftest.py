@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the container's single real device; only launch/dryrun.py
+(and explicit subprocess tests) force placeholder device counts."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

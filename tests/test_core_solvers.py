@@ -1,0 +1,161 @@
+"""Solver correctness: exact DP vs brute force, invariants, refinement."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    JaxJointSplitter,
+    SystemState,
+    Workload,
+    brute_force_joint,
+    evaluate,
+    greedy_placement,
+    local_search,
+    repair_capacity,
+    solve_joint_dp,
+    solve_placement_chain_dp,
+    surrogate_cost,
+)
+from repro.core.cost_model import memory_violations
+from repro.core.graph import ModelGraph, GraphNode, make_transformer_graph
+from repro.core.placement import Solution, restrict_state, select_candidate_nodes
+from repro.core.splitter import coalesce_same_node
+
+
+def _random_instance(seed, n_units=5, n_nodes=3):
+    rng = np.random.default_rng(seed)
+    units = [
+        GraphNode(f"u{i}", flops=float(rng.uniform(1e8, 2e9)),
+                  weight_bytes=float(rng.uniform(1e7, 5e8)),
+                  act_out_bytes=float(rng.uniform(1e3, 2e4)),
+                  privacy_critical=bool(i == 0))
+        for i in range(n_units)
+    ]
+    g = ModelGraph("rand", units)
+    bw = rng.uniform(1e6, 1e8, (n_nodes, n_nodes))
+    bw = (bw + bw.T) / 2
+    np.fill_diagonal(bw, np.inf)
+    trusted = rng.random(n_nodes) < 0.6
+    trusted[0] = True
+    st_ = SystemState(
+        flops_per_s=rng.uniform(1e12, 1e14, n_nodes),
+        mem_bytes=rng.uniform(5e8, 5e9, n_nodes),
+        background_util=rng.uniform(0.0, 0.8, n_nodes),
+        trusted=trusted,
+        link_bw=bw,
+        link_lat=np.full((n_nodes, n_nodes), 4e-3) * (1 - np.eye(n_nodes)),
+        mem_bw=rng.uniform(1e11, 2e12, n_nodes),
+    )
+    wl = Workload(tokens_in=int(rng.integers(8, 128)),
+                  tokens_out=int(rng.integers(1, 32)),
+                  arrival_rate=float(rng.uniform(0.1, 8.0)))
+    return g, st_, wl
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_joint_dp_matches_brute_force(seed):
+    g, state, wl = _random_instance(seed)
+    bf = brute_force_joint(g, state, wl)
+    dp = solve_joint_dp(g, state, wl)
+    sc = surrogate_cost(g, dp.boundaries, dp.assignment, state, wl)
+    assert sc == pytest.approx(bf.cost, rel=1e-9)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_jax_dp_matches_numpy_dp(seed):
+    g, state, wl = _random_instance(seed, n_units=7, n_nodes=4)
+    dp = solve_joint_dp(g, state, wl)
+    jx = JaxJointSplitter().solve(g, state, wl)
+    sc_np = surrogate_cost(g, dp.boundaries, dp.assignment, state, wl)
+    sc_jx = surrogate_cost(g, jx.boundaries, jx.assignment, state, wl)
+    assert sc_jx == pytest.approx(sc_np, rel=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_solver_never_violates_privacy(seed):
+    g, state, wl = _random_instance(seed)
+    dp = solve_joint_dp(g, state, wl)
+    for j, (lo, hi) in enumerate(zip(dp.boundaries[:-1], dp.boundaries[1:])):
+        if g.segment_has_private(lo, hi):
+            assert state.trusted[dp.assignment[j]]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_local_search_never_worse(seed):
+    g, state, wl = _random_instance(seed, n_units=8)
+    start = greedy_placement(g, g.even_split(3).boundaries, state, wl)
+    out = local_search(g, start, state, wl, max_rounds=10)
+    assert out.cost <= start.cost + 1e-12
+
+
+def test_placement_chain_dp_unique_assignment():
+    g, state, wl = _random_instance(0, n_units=8)
+    sol = solve_placement_chain_dp(g, g.even_split(4).boundaries, state, wl)
+    assert len(sol.assignment) == 4            # Eq. (3): one node per segment
+    assert sol.boundaries == g.even_split(4).boundaries
+
+
+def test_repair_capacity_fixes_overflow():
+    units = [GraphNode(f"u{i}", 1e9, 4e8, 8e3) for i in range(6)]
+    g = ModelGraph("g", units)
+    state = SystemState(
+        flops_per_s=np.array([1e13, 1e13, 1e13]),
+        mem_bytes=np.array([1e9, 5e9, 5e9]),       # node 0 too small for all
+        background_util=np.zeros(3),
+        trusted=np.ones(3, bool),
+        link_bw=np.full((3, 3), 1e8) + np.diag([np.inf] * 3),
+        link_lat=np.zeros((3, 3)),
+    )
+    wl = Workload(64, 8, 1.0)
+    bad = Solution((0, 3, 6), (0, 0), 0.0)
+    assert memory_violations(g, bad.boundaries, bad.assignment, state).any()
+    fixed = repair_capacity(g, bad, state, wl)
+    assert not memory_violations(g, fixed.boundaries, fixed.assignment, state).any()
+
+
+def test_coalesce_same_node():
+    s = coalesce_same_node(Solution((0, 2, 4, 6), (1, 1, 2), 0.0))
+    assert s.boundaries == (0, 4, 6)
+    assert s.assignment == (1, 2)
+
+
+def test_candidate_pruning_keeps_source_and_trusted():
+    rng = np.random.default_rng(0)
+    n = 64
+    state = SystemState(
+        flops_per_s=rng.uniform(1e12, 1e14, n),
+        mem_bytes=np.full(n, 1e10),
+        background_util=rng.uniform(0, 0.9, n),
+        trusted=np.arange(n) % 7 == 0,
+        link_bw=np.full((n, n), 1e8) + np.diag([np.inf] * n),
+        link_lat=np.zeros((n, n)),
+    )
+    idx = select_candidate_nodes(state, k=12, source_node=5)
+    assert 5 in idx
+    assert len(idx) <= 12
+    assert state.trusted[idx].sum() >= 2
+    sub = restrict_state(state, idx)
+    assert sub.num_nodes == len(idx)
+
+
+def test_dp_prefers_fast_local_node_when_link_is_slow():
+    g = make_transformer_graph(
+        name="t", num_layers=4, d_model=64, flops_per_layer_token=1e9,
+        weight_bytes_per_layer=1e8, embed_weight_bytes=1e7,
+        head_weight_bytes=1e7, head_flops_token=1e7)
+    state = SystemState(
+        flops_per_s=np.array([1e13, 1e15]),
+        mem_bytes=np.array([1e10, 1e10]),
+        background_util=np.zeros(2),
+        trusted=np.array([True, True]),
+        link_bw=np.array([[np.inf, 1e3], [1e3, np.inf]]),   # ~dead link
+        link_lat=np.zeros((2, 2)),
+    )
+    wl = Workload(64, 8, 0.1)
+    sol = solve_joint_dp(g, state, wl)
+    assert set(sol.assignment) == {0}          # never worth crossing the link

@@ -1,0 +1,91 @@
+"""Cost-model properties (hypothesis): monotonicity + conservation laws."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SystemState, Workload, chain_latency, phi
+from repro.core.cost_model import link_loads, node_loads, node_queue_loads
+from repro.core.graph import make_transformer_graph
+
+
+def _setup(seed=0, n=3):
+    rng = np.random.default_rng(seed)
+    g = make_transformer_graph(
+        name="t", num_layers=6, d_model=128,
+        flops_per_layer_token=float(rng.uniform(1e8, 1e9)),
+        weight_bytes_per_layer=float(rng.uniform(1e7, 1e8)),
+        embed_weight_bytes=1e7, head_weight_bytes=1e7, head_flops_token=1e7)
+    bw = rng.uniform(1e6, 1e8, (n, n))
+    np.fill_diagonal(bw, np.inf)
+    state = SystemState(
+        flops_per_s=rng.uniform(1e12, 1e14, n),
+        mem_bytes=np.full(n, 1e10),
+        background_util=rng.uniform(0, 0.5, n),
+        trusted=np.ones(n, bool),
+        link_bw=bw,
+        link_lat=np.full((n, n), 1e-3) * (1 - np.eye(n)),
+        mem_bw=rng.uniform(1e11, 1e12, n),
+    )
+    wl = Workload(64, 8, 2.0)
+    b, a = (0, 3, 6, 8), (0, 1, 2)
+    return g, state, wl, b, a
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), factor=st.floats(1.1, 10.0))
+def test_more_bandwidth_never_hurts(seed, factor):
+    g, state, wl, b, a = _setup(seed)
+    base = chain_latency(g, b, a, state, wl)
+    faster = state.copy()
+    faster.link_bw = state.link_bw * factor
+    assert chain_latency(g, b, a, faster, wl) <= base + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_more_background_load_never_helps(seed):
+    g, state, wl, b, a = _setup(seed)
+    base = chain_latency(g, b, a, state, wl)
+    busier = state.copy()
+    busier.background_util = np.clip(state.background_util + 0.3, 0, 0.95)
+    assert chain_latency(g, b, a, busier, wl) >= base - 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_latency_decomposition_sums(seed):
+    g, state, wl, b, a = _setup(seed)
+    total, (t_proc, t_queue, t_tx, _) = chain_latency(
+        g, b, a, state, wl, return_parts=True)
+    assert total == pytest.approx(t_proc + t_queue + t_tx, rel=1e-9)
+
+
+def test_same_node_has_no_transfer_cost():
+    g, state, wl, b, _ = _setup(0)
+    lat_local = chain_latency(g, b, (1, 1, 1), state, wl)
+    _, (_, _, t_tx, _) = chain_latency(g, b, (1, 1, 1), state, wl,
+                                       return_parts=True)
+    assert t_tx == 0.0
+    assert lat_local > 0
+
+
+def test_node_loads_account_all_segments():
+    g, state, wl, b, a = _setup(0)
+    util = node_loads(g, b, a, state, wl)
+    assert (util >= state.background_util - 1e-12).all()
+    q = node_queue_loads(g, b, a, state, wl)
+    assert (q >= 0).all()
+
+
+def test_link_loads_zero_without_crossings():
+    g, state, wl, b, _ = _setup(0)
+    assert link_loads(g, b, (0, 0, 0), state, wl).sum() == 0.0
+    assert link_loads(g, b, (0, 1, 0), state, wl).sum() > 0.0
+
+
+def test_phi_weights():
+    g, state, wl, b, a = _setup(0)
+    from repro.core import CostWeights
+    cb = phi(g, b, a, state, wl, CostWeights(alpha=1, beta=0, gamma=0))
+    assert cb.total == pytest.approx(cb.latency)

@@ -1,0 +1,84 @@
+"""Fault drills: heartbeats, stragglers, elastic re-mesh, node-failure
+re-placement, kill/resume via the real training driver (subprocess)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.distributed import (
+    HeartbeatRegistry,
+    StragglerDetector,
+    plan_elastic_mesh,
+)
+from repro.edgesim import MECScenarioParams, build_mec_scenario
+
+
+def test_heartbeat_detects_death():
+    hb = HeartbeatRegistry(nodes=[0, 1, 2], miss_limit=3)
+    for t in range(2):
+        for n in (0, 1, 2):
+            hb.beat(n)
+        assert hb.tick() == []
+    newly_dead = []
+    for t in range(4):               # node 2 goes silent
+        hb.beat(0)
+        hb.beat(1)
+        newly_dead += hb.tick()
+    assert newly_dead == [2]         # declared dead exactly once
+    assert hb.alive() == [0, 1]
+    assert hb.tick() == []
+
+
+def test_straggler_detector():
+    sd = StragglerDetector(ratio=1.5)
+    for _ in range(10):
+        for w in range(4):
+            sd.observe(w, 0.1 if w != 3 else 0.3)
+    assert sd.stragglers() == [3]
+
+
+def test_elastic_mesh_plan():
+    plan = plan_elastic_mesh(512, model_axis=16, pods=2)
+    assert plan["shape"] == {"pod": 2, "data": 16, "model": 16}
+    # lose a pod's worth of chips: 320 alive -> largest pow2 dp = 16
+    plan = plan_elastic_mesh(320, model_axis=16)
+    assert plan["shape"] == {"data": 16, "model": 16}
+    assert plan["devices_used"] == 256
+    with pytest.raises(RuntimeError):
+        plan_elastic_mesh(8, model_axis=16)
+
+
+def test_orchestrator_evicts_failed_node():
+    """Paper loop as fault tolerance: saturate MEC-2 mid-run; the adaptive
+    orchestrator must move its segments elsewhere."""
+    p = MECScenarioParams(backhaul_mbps=50.0, duration_s=80.0)
+    sim = build_mec_scenario(p, adaptive=True)
+    orig = sim.util_traces[1]
+    sim.util_traces[1] = type(orig)(
+        lambda t: 0.99 if t >= 40.0 else orig(t), 0.0, 0.99)
+    sim.run()
+    final = sim.orch.current
+    assert 1 not in final.assignment, final
+
+
+def test_train_kill_restart_subprocess(tmp_path):
+    env_cmd = [sys.executable, "-m", "repro.launch.train",
+               "--arch", "llama3-8b", "--steps", "16", "--batch", "2",
+               "--seq", "32", "--ckpt-dir", str(tmp_path),
+               "--ckpt-every", "8", "--log-every", "100"]
+    import os
+    env = dict(os.environ, PYTHONPATH="src")
+    # phase 1: die at step 12 (after the step-8 checkpoint)
+    r1 = subprocess.run(env_cmd + ["--kill-at-step", "12"], cwd="/root/repo",
+                        env=env, capture_output=True, text=True, timeout=600)
+    assert r1.returncode == 42, r1.stderr[-2000:]
+    assert any(p.name == "step_000000008" for p in tmp_path.glob("step_*"))
+    # phase 2: resume and finish
+    r2 = subprocess.run(env_cmd, cwd="/root/repo", env=env,
+                        capture_output=True, text=True, timeout=600)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "[resume] from step 8" in r2.stdout

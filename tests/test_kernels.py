@@ -1,0 +1,142 @@
+"""Per-kernel allclose sweeps (shapes × dtypes) against the pure-jnp oracles.
+
+All Pallas kernels run under interpret=True on this CPU container; the kernel
+bodies are identical to what pl.pallas_call lowers on TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+_KEYS = jax.random.split(jax.random.PRNGKey(0), 16)
+
+
+def _mk_qkv(b, s, h, kv, hd, dtype):
+    q = jax.random.normal(_KEYS[0], (b, s, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(_KEYS[1], (b, s, kv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(_KEYS[2], (b, s, kv, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("s,h,kv,hd,window,cap", [
+    (64, 4, 4, 32, 0, 0.0),        # MHA global
+    (96, 8, 2, 64, 0, 0.0),        # GQA, non-divisible block edge (96/32)
+    (64, 4, 1, 32, 0, 0.0),        # MQA
+    (64, 4, 2, 32, 24, 0.0),       # sliding window
+    (64, 4, 2, 32, 0, 30.0),       # softcap
+    (33, 4, 2, 32, 16, 50.0),      # ragged seq + window + cap
+])
+def test_flash_attention_vs_ref(s, h, kv, hd, window, cap, dtype, tol):
+    b = 2
+    q, k, v = _mk_qkv(b, s, h, kv, hd, dtype)
+    out = ops.flash_attention(q, k, v, window=window, logit_cap=cap,
+                              block_q=32, block_k=32, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    r = ref.flash_attention_ref(qf, kf, vf, n_heads=h, n_kv=kv,
+                                window=window, logit_cap=cap)
+    r = r.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("s,h,kv,hd,cur,window", [
+    (64, 8, 2, 32, 64, 0),
+    (64, 8, 2, 32, 17, 0),
+    (64, 8, 1, 64, 40, 16),
+    (96, 4, 4, 32, 96, 0),
+])
+def test_decode_attention_vs_ref(s, h, kv, hd, cur, window, dtype, tol):
+    b = 2
+    q = jax.random.normal(_KEYS[3], (b, h, hd), jnp.float32).astype(dtype)
+    kc = jax.random.normal(_KEYS[4], (b, s, kv, hd), jnp.float32).astype(dtype)
+    vc = jax.random.normal(_KEYS[5], (b, s, kv, hd), jnp.float32).astype(dtype)
+    out = ops.decode_attention(q, kc, vc, jnp.asarray(cur), window=window,
+                               block_k=32, interpret=True)
+    r = ref.decode_attention_ref(q, kc, vc, jnp.asarray(cur), window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("s,h,g,n,p,chunk", [
+    (64, 4, 2, 16, 8, 16),
+    (48, 4, 1, 16, 16, 16),       # ragged: 48 = 3 chunks of 16
+    (64, 2, 2, 8, 8, 64),         # single chunk
+])
+def test_ssd_vs_ref(s, h, g, n, p, chunk):
+    b = 2
+    x = jax.random.normal(_KEYS[6], (b, s, h, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(_KEYS[7], (b, s, h), jnp.float32))
+    a = -jnp.exp(jnp.linspace(0.0, 1.0, h))
+    bm = jax.random.normal(_KEYS[8], (b, s, g, n), jnp.float32) * 0.3
+    cm = jax.random.normal(_KEYS[9], (b, s, g, n), jnp.float32) * 0.3
+    out = ops.ssd(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    rep = h // g
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s)
+    af = jnp.tile(a, b)
+    bf = jnp.repeat(bm.transpose(0, 2, 1, 3), rep, 1).reshape(b * h, s, n)
+    cf = jnp.repeat(cm.transpose(0, 2, 1, 3), rep, 1).reshape(b * h, s, n)
+    r = ref.ssd_chunk_ref(xf, dtf, af, bf, cf)
+    r = r.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_kernel_matches_model_chunked_path():
+    from repro.models.mamba2 import ssd_chunked
+    b, s, h, g, n, p = 2, 64, 4, 2, 16, 8
+    x = jax.random.normal(_KEYS[6], (b, s, h, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(_KEYS[7], (b, s, h), jnp.float32))
+    a = -jnp.exp(jnp.linspace(0.0, 1.0, h))
+    bm = jax.random.normal(_KEYS[8], (b, s, g, n), jnp.float32) * 0.3
+    cm = jax.random.normal(_KEYS[9], (b, s, g, n), jnp.float32) * 0.3
+    out = ops.ssd(x, dt, a, bm, cm, chunk=16, interpret=True)
+    model = ssd_chunked(x, dt, a, bm, cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(model),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("s,w,bs,bw", [
+    (48, 32, 16, 16),
+    (33, 16, 16, 16),             # ragged seq
+    (64, 64, 64, 64),             # single block
+])
+def test_rglru_vs_ref(s, w, bs, bw):
+    b = 2
+    a = jax.nn.sigmoid(jax.random.normal(_KEYS[10], (b, s, w), jnp.float32))
+    x = jax.random.normal(_KEYS[11], (b, s, w), jnp.float32)
+    out = ops.rglru(a, x, block_s=bs, block_w=bw, interpret=True)
+    r = ref.rglru_ref(a, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_kernel_matches_model_scan():
+    from repro.models.griffin import rglru as model_rglru
+    b, s, w = 2, 48, 32
+    a = jax.nn.sigmoid(jax.random.normal(_KEYS[10], (b, s, w), jnp.float32))
+    x = jax.random.normal(_KEYS[11], (b, s, w), jnp.float32)
+    out = ops.rglru(a, x, block_s=16, block_w=16, interpret=True)
+    model = model_rglru(a, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(model),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("n,d", [(64, 128), (33, 256)])
+def test_int8_quant_roundtrip(n, d, dtype):
+    x = jax.random.normal(_KEYS[12], (n, d), jnp.float32).astype(dtype)
+    q, s = ops.quantize_int8(x, block_rows=16, interpret=True)
+    qr, sr = ref.quantize_int8_ref(x)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32) - qr.astype(jnp.int32)))) <= 1
+    x2 = ops.dequantize_int8(q, s, dtype, block_rows=16, interpret=True)
+    rel = float(jnp.max(jnp.abs(x2.astype(jnp.float32) - x.astype(jnp.float32)))
+                / jnp.max(jnp.abs(x.astype(jnp.float32))))
+    assert rel < 0.02

@@ -1,0 +1,121 @@
+"""Distribution: sharding lowering across families (subprocess with forced
+device count, per the dry-run-only XLA_FLAGS rule) + HLO analyzer checks."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_hlo_analyzer_known_graphs():
+    sys.path.insert(0, "/root/repo")
+    from benchmarks.hlo_analysis import analyze_hlo
+
+    @jax.jit
+    def mm(a, b):
+        return a @ b
+
+    comp = mm.lower(jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                    jax.ShapeDtypeStruct((128, 32), jnp.float32)).compile()
+    c = analyze_hlo(comp.as_text())
+    assert c.flops == pytest.approx(2 * 64 * 128 * 32)
+    exp_bytes = (64 * 128 + 128 * 32 + 64 * 32) * 4
+    assert c.bytes_accessed == pytest.approx(exp_bytes, rel=0.05)
+
+    L = 5
+
+    def scanned(ws, x):
+        def body(h, w):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    comp = jax.jit(scanned).lower(
+        jax.ShapeDtypeStruct((L, 32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((16, 32), jnp.float32)).compile()
+    c = analyze_hlo(comp.as_text())
+    assert c.flops == pytest.approx(L * 2 * 16 * 32 * 32)   # trip-corrected
+    # XLA itself reports the body once — our whole reason for existing
+    assert comp.cost_analysis()["flops"] < c.flops
+
+
+_LOWER_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs import get_bundle
+    from repro.launch.mesh import make_small_mesh
+    from repro.models.api import ShapeSpec
+    from repro.training.train_step import make_train_step, make_serve_fns
+
+    mesh = make_small_mesh(2, 2, pod=2)
+    failures = []
+    for arch in ["llama3-8b", "qwen3-moe-30b-a3b", "deepseek-v2-lite-16b",
+                 "mamba2-1.3b", "recurrentgemma-9b", "internvl2-1b",
+                 "command-r-plus-104b", "gemma2-9b"]:
+        b = get_bundle(arch, reduced=True)
+        try:
+            _, jit_for, init_state, _ = make_train_step(b, mesh)
+            shape = ShapeSpec("t", 32, 8, "train")
+            ispecs = b.input_specs(shape)
+            ss = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+            jit_for(ispecs).lower(ss, ispecs).compile()
+            for kind in ("prefill", "decode"):
+                sspec = ShapeSpec("s", 64, 8, kind)
+                fn, isp = make_serve_fns(b, mesh, sspec)
+                params = b.param_specs(jnp.bfloat16)
+                if kind == "prefill":
+                    fn.lower(params, isp).compile()
+                else:
+                    fn.lower(params, isp["cache"], isp["tokens"],
+                             isp["pos"]).compile()
+        except Exception as e:
+            failures.append(f"{arch}: {type(e).__name__}: {e}")
+    if failures:
+        raise SystemExit("\\n".join(failures))
+    print("ALL_OK")
+""")
+
+
+def test_multiaxis_lowering_all_families():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", _LOWER_SNIPPET],
+                       cwd="/root/repo", env=env, capture_output=True,
+                       text=True, timeout=1200)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-3000:])
+    assert "ALL_OK" in r.stdout
+
+
+def test_batch_axes_guard():
+    from repro.distributed.sharding import batch_axes
+    from repro.launch.mesh import make_small_mesh
+    mesh = make_small_mesh(1, 1)
+    assert batch_axes(8, mesh) == ("data",)
+    # batch=1 cannot shard over dp>1 — guarded to None in a subprocess-only
+    # multi-device context; on 1 device dp=1 always divides
+    assert batch_axes(1, mesh) == ("data",)
+
+
+def test_param_pspecs_patterns():
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_bundle
+    from repro.distributed import param_pspecs
+    from repro.launch.mesh import make_small_mesh
+
+    mesh = make_small_mesh(1, 1)
+    b = get_bundle("llama3-8b", reduced=True)
+    specs = param_pspecs(b.param_specs(), mesh)
+    # embed [V, d] vocab-sharded over model when divisible
+    assert specs["embed"] == P("model", ("data",))
+    # stacked attn wq [L, d, H, hd]: TP on heads, FSDP on head_dim — NEVER on
+    # the forward-contracted d (§Perf E4 invariant)
+    wq = specs["blocks"]["attn"]["wq"]
+    assert wq[1] is None                       # contracting d stays unsharded
+    assert wq[2] == "model"
+    assert wq[3] in ("data", ("data",))        # FSDP rides the output dim
+    assert specs["blocks"]["ln1"]["scale"] == P(None, None)
