@@ -1,0 +1,148 @@
+"""Fleet-scaling benchmark: batched solver amortization + multi-session QoS.
+
+Two questions the fleet layer must answer before any further scaling PR:
+
+1. **Solver amortization** — does one ``BatchedJointSplitter.solve_batch``
+   call over B sessions beat B sequential ``JaxJointSplitter.solve`` calls?
+   (It must: the batched path exists so a monitoring cycle stays flat-cost
+   when dozens of sessions blow their QoS budget at once.)  Reported as warm
+   per-batch latency vs B× the warm single-session solve.
+2. **Aggregate QoS under churn** — how do mean/p95 latency, QoS violation
+   rate, and orchestrator overhead move as the admission cap grows 1→64 on
+   the fixed §IV fleet (3 MEC + cloud)?
+
+Run:  PYTHONPATH=src python benchmarks/fleet_scaling.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import BatchedJointSplitter, JaxJointSplitter, SessionProblem, Workload
+from repro.core.placement import surrogate_cost
+from repro.edgesim import (
+    FleetScenarioParams,
+    FleetSimConfig,
+    MECScenarioParams,
+    base_system_state,
+    build_fleet_scenario,
+    fleet_model_catalog,
+)
+
+_BATCHES = (1, 2, 4, 8, 16, 32, 64)
+
+
+def _problems(n_sessions: int, seed: int = 0) -> list[SessionProblem]:
+    """Heterogeneous sessions over the §IV fleet: mixed archs/workloads/ingress."""
+    rng = np.random.default_rng(seed)
+    catalog = fleet_model_catalog()
+    out = []
+    for _ in range(n_sessions):
+        _, graph = catalog[int(rng.integers(len(catalog)))]
+        wl = Workload(
+            tokens_in=int(rng.integers(16, 96)),
+            tokens_out=int(rng.integers(4, 16)),
+            arrival_rate=float(rng.uniform(0.3, 2.0)),
+        )
+        out.append(SessionProblem(graph, wl, source_node=int(rng.integers(0, 3))))
+    return out
+
+
+def solver_amortization(*, reps: int = 5, max_units: int = 96) -> list[dict]:
+    """Warm batched-solve latency vs a MEASURED sequential sweep of the same
+    B sessions through the single-session jitted solver."""
+    state = base_system_state(MECScenarioParams())
+    single = JaxJointSplitter()
+    batched = BatchedJointSplitter()
+    rows = []
+    probs_all = _problems(max(_BATCHES))
+
+    def solve_seq(probs):
+        for p in probs:
+            single.solve(p.graph, state, p.workload, source_node=p.source_node,
+                         max_units=max_units)
+
+    for B in _BATCHES:
+        probs = probs_all[:B]
+        solve_seq(probs)                                           # compile
+        sols = batched.solve_batch(probs, state, max_units=max_units)  # compile
+        # cross-check the batch against the single-session solver
+        for p, s in zip(probs[: min(B, 4)], sols):
+            ref = single.solve(p.graph, state, p.workload,
+                               source_node=p.source_node, max_units=max_units)
+            sc_b = surrogate_cost(p.graph, s.boundaries, s.assignment, state,
+                                  p.workload, source_node=p.source_node)
+            sc_r = surrogate_cost(p.graph, ref.boundaries, ref.assignment, state,
+                                  p.workload, source_node=p.source_node)
+            assert np.isclose(sc_b, sc_r, rtol=1e-5), (B, sc_b, sc_r)
+        t_seq, t_bat = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            solve_seq(probs)
+            t_seq.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            batched.solve_batch(probs, state, max_units=max_units)
+            t_bat.append(time.perf_counter() - t0)
+        seq = float(np.median(t_seq))
+        bat = float(np.median(t_bat))
+        rows.append(dict(
+            sessions=B,
+            batched_ms=round(1e3 * bat, 3),
+            sequential_ms=round(1e3 * seq, 3),
+            speedup=round(seq / bat, 2),
+            per_session_us=round(1e6 * bat / B, 1),
+        ))
+    return rows
+
+
+def fleet_qos(*, duration_s: float = 60.0, seed: int = 0) -> list[dict]:
+    """Aggregate QoS vs session cap on the fixed §IV fleet."""
+    rows = []
+    for cap in (1, 4, 8, 16, 32, 64):
+        p = FleetScenarioParams(sim=FleetSimConfig(
+            duration_s=duration_s,
+            max_sessions=cap,
+            initial_sessions=min(cap, 2),
+            # arrival rate scaled so the cap actually binds within the run
+            session_arrival_per_s=max(0.2, cap / duration_s * 2.0),
+            mean_lifetime_s=duration_s / 2,
+            seed=seed,
+        ))
+        sim = build_fleet_scenario(p)
+        t0 = time.perf_counter()
+        res = sim.run()
+        wall = time.perf_counter() - t0
+        k = res.kpis(duration_s * 0.25, duration_s)
+        rows.append(dict(
+            session_cap=cap,
+            mean_sessions=round(k.get("mean_sessions", 0.0), 1),
+            mean_latency_ms=round(1e3 * k.get("mean_latency_s", 0.0), 1),
+            p95_latency_ms=round(1e3 * k.get("p95_latency_s", 0.0), 1),
+            qos_violation_frac=round(k.get("qos_violation_frac", 0.0), 3),
+            max_rho=round(k.get("max_rho", 0.0), 2),
+            resplits_per_s=round(k.get("resplits_per_s", 0.0), 3),
+            mean_solver_ms=round(k.get("mean_solver_ms", 0.0), 2),
+            sim_wall_s=round(wall, 1),
+        ))
+    return rows
+
+
+def main() -> None:  # pragma: no cover
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="short sim horizon for CI smoke")
+    args = ap.parse_args()
+
+    print("== solver amortization (warm, batched vs B x single) ==")
+    for r in solver_amortization(reps=3 if args.quick else 5):
+        print(r)
+    print("\n== fleet QoS vs session cap (3 MEC + cloud, churn) ==")
+    for r in fleet_qos(duration_s=20.0 if args.quick else 60.0):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,29 @@ _COND_BRANCHES = re.compile(r"(?:branch_computations|true_computation|"
 _CONST_INT = re.compile(r"=\s*[su]\d+\[\]\s*constant\((\d+)\)")
 
 
+def _split_args(s: str) -> list[str]:
+    """Split an operand list on TOP-LEVEL commas only.
+
+    HLO prints operand types inline ("f32[64,128]{1,0} %a, f32[128,32] %b"),
+    so a naive str.split(",") shears shapes apart mid-bracket.
+    """
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            tok = s[start:i].strip()
+            if tok:
+                out.append(tok)
+            start = i + 1
+    tok = s[start:].strip()
+    if tok:
+        out.append(tok)
+    return out
+
+
 def _shape_elems(dims: str) -> int:
     n = 1
     for d in dims.split(","):
@@ -106,8 +129,7 @@ def _operand_names(rhs: str) -> list[str]:
     mop = _OPERANDS.search(rhs)
     if not mop:
         return []
-    return [tok.strip().split(" ")[-1].lstrip("%")
-            for tok in mop.group(1).split(",") if tok.strip()]
+    return [tok.split(" ")[-1].lstrip("%") for tok in _split_args(mop.group(1))]
 
 
 def _operand_bytes(rhs: str, symtab: dict[str, str]) -> list[float]:
@@ -115,10 +137,7 @@ def _operand_bytes(rhs: str, symtab: dict[str, str]) -> list[float]:
     mop = _OPERANDS.search(rhs)
     if not mop:
         return out
-    for tok in mop.group(1).split(","):
-        tok = tok.strip()
-        if not tok:
-            continue
+    for tok in _split_args(mop.group(1)):
         inline = _SHAPE.search(tok)
         if inline and not tok.startswith("%"):
             out.append(_shape_bytes(inline.group(1), inline.group(2)))
@@ -323,9 +342,10 @@ def _dot_flops(line: str, symtab: dict[str, str]) -> float:
     if not out_sh:
         return 0.0
     out_elems = _shape_elems(out_sh.group(2))
-    lhs_name = mcall.group(1).split(",")[0].strip().lstrip("%")
+    lhs_tok = _split_args(mcall.group(1))[0]
+    lhs_name = lhs_tok.lstrip("%")
     # operands are sometimes typed inline ("f32[..] %a"), sometimes bare refs
-    inline = _SHAPE.search(mcall.group(1).split(",")[0])
+    inline = _SHAPE.search(lhs_tok)
     lhs_type = inline.group(0) if inline else symtab.get(
         lhs_name.split(" ")[-1].lstrip("%"), "")
     lsh = _SHAPE.search(lhs_type)

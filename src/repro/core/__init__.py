@@ -8,6 +8,7 @@ Modules mirror the reference architecture of §III-A:
   triggers     — Θ thresholds + ShouldReconfigure (Table I)
   profiling    — Monitoring & Capacity Profiling (CP)
   orchestrator — Adaptive Orchestrator (AO), Alg. 1
+  fleet        — multi-session AO: shared capacity + batched migrate/resplit
   broadcast    — Reconfiguration Broadcast (RB), 2-phase versioned rollout
   privacy      — trusted sets, Eq. (5)/(9)
 """
@@ -22,6 +23,7 @@ from .cost_model import (
     evaluate,
     phi,
 )
+from .fleet import FleetDecision, FleetOrchestrator, FleetSession
 from .graph import GraphNode, ModelGraph, SplitScheme, make_transformer_graph
 from .orchestrator import AdaptiveOrchestrator, Decision, DecisionKind
 from .placement import (
@@ -34,17 +36,26 @@ from .placement import (
 )
 from .privacy import TrustPolicy, assert_privacy_ok
 from .profiling import CapacityProfiler, NodeSample
-from .splitter import JaxJointSplitter, SplitRevision, brute_force_joint, solve_joint_dp
+from .splitter import (
+    BatchedJointSplitter,
+    JaxJointSplitter,
+    SessionProblem,
+    SplitRevision,
+    brute_force_joint,
+    solve_joint_dp,
+)
 from .triggers import EWMA, Thresholds, TriggerState, should_reconfigure
 
 __all__ = [
-    "AdaptiveOrchestrator", "CapacityProfiler", "CostBreakdown", "CostWeights",
-    "Decision", "DecisionKind", "EWMA", "GraphNode", "InProcessAgent",
-    "JaxJointSplitter", "ModelGraph", "NodeSample", "PartitionConfig",
-    "ReconfigurationBroadcast", "Solution", "SplitRevision", "SplitScheme",
-    "SystemState", "Thresholds", "TriggerState", "TrustPolicy", "Workload",
-    "assert_privacy_ok", "brute_force_joint", "chain_latency", "evaluate",
-    "greedy_placement", "local_search", "make_transformer_graph", "phi",
-    "repair_capacity", "should_reconfigure", "solve_joint_dp",
-    "solve_placement_chain_dp", "surrogate_cost",
+    "AdaptiveOrchestrator", "BatchedJointSplitter", "CapacityProfiler",
+    "CostBreakdown", "CostWeights", "Decision", "DecisionKind", "EWMA",
+    "FleetDecision", "FleetOrchestrator", "FleetSession", "GraphNode",
+    "InProcessAgent", "JaxJointSplitter", "ModelGraph", "NodeSample",
+    "PartitionConfig", "ReconfigurationBroadcast", "SessionProblem",
+    "Solution", "SplitRevision", "SplitScheme", "SystemState", "Thresholds",
+    "TriggerState", "TrustPolicy", "Workload", "assert_privacy_ok",
+    "brute_force_joint", "chain_latency", "evaluate", "greedy_placement",
+    "local_search", "make_transformer_graph", "phi", "repair_capacity",
+    "should_reconfigure", "solve_joint_dp", "solve_placement_chain_dp",
+    "surrogate_cost",
 ]

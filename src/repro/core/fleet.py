@@ -1,0 +1,443 @@
+"""Fleet Orchestrator — multi-session Adaptive Split Orchestration.
+
+:class:`~repro.core.orchestrator.AdaptiveOrchestrator` runs the paper's
+Alg. 1 for ONE inference session.  The north-star workload is an edge fleet
+serving many concurrent sessions (multi-tenant FM serving at the edge, cf.
+arXiv:2504.03668), so this module lifts the same decision hierarchy to a
+session *set* S = {s_1..s_m} sharing one C(t):
+
+* **Shared capacity accounting** — every session plans against an effective
+  state in which the OTHER sessions' placements appear as induced load:
+  their λ·service-time folded into per-node background utilization, their
+  boundary traffic shaving link bandwidth, and their resident weights
+  shaving node memory (:meth:`FleetOrchestrator.effective_state`).  This is
+  what couples the sessions: a migration by one shifts the cost surface of
+  all others, exactly like multi-tenant contention on a real fleet.
+* **Per-session triggers** — each session keeps its own EWMA latency against
+  Θ.L_max; utilization and bandwidth triggers are fleet-level (they fire for
+  every session hosted on the affected node/link).  Cool-downs and the
+  anti-thrash hysteresis are likewise per-session.
+* **Batched migrate-vs-resplit** — triggered sessions first attempt cheap
+  placement migration (Eq. 7, numpy chain DP).  All sessions whose best
+  migration still violates QoS are re-split TOGETHER in one
+  :class:`~repro.core.splitter.BatchedJointSplitter` call (Eq. 8 vmapped
+  over the batch), so a monitoring cycle costs one XLA dispatch no matter
+  how many sessions blow their budget at once.  Sessions being re-split are
+  removed from the shared-load picture for that solve (their load is being
+  re-planned); the survivors' load stays pinned.
+
+Churn (session admit/depart) is first-class: :meth:`admit` solves an initial
+split against the current fleet load and deploys it through the shared
+Reconfiguration Broadcast; :meth:`depart` releases the session's capacity.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .broadcast import PartitionConfig, ReconfigurationBroadcast
+from .cost_model import (
+    CostWeights,
+    SystemState,
+    Workload,
+    chain_latency,
+    link_loads,
+    segment_service_time,
+)
+from .graph import ModelGraph
+from .orchestrator import Decision, DecisionKind
+from .placement import Solution, local_search, repair_capacity, solve_placement_chain_dp
+from .profiling import CapacityProfiler
+from .splitter import BatchedJointSplitter, SessionProblem, coalesce_same_node
+from .triggers import (
+    EWMA,
+    SolveThrottle,
+    Thresholds,
+    TriggerState,
+    should_reconfigure,
+)
+
+__all__ = ["FleetSession", "FleetDecision", "FleetOrchestrator"]
+
+
+@dataclass
+class FleetSession:
+    """One tenant inference session: model chain + workload + live config."""
+
+    sid: int
+    graph: ModelGraph
+    workload: Workload
+    source_node: int = 0
+    arch: str = ""
+    input_bytes_per_token: float = 4.0
+    config: PartitionConfig | None = None
+    ewma_latency: EWMA = field(default_factory=lambda: EWMA(0.3))
+    t_admitted: float = 0.0
+    t_last_reconfig: float = float("-inf")
+    decisions: list[Decision] = field(default_factory=list)
+    # per-session solver duty-cycle state (see triggers.SolveThrottle)
+    throttle: SolveThrottle = field(default_factory=SolveThrottle)
+
+
+@dataclass(frozen=True)
+class FleetDecision:
+    """One fleet monitoring cycle: per-session outcomes + aggregate counts."""
+
+    t: float
+    per_session: dict[int, Decision]
+    solver_time_s: float
+    n_keep: int
+    n_migrate: int
+    n_resplit: int
+    n_cooldown: int
+
+
+def session_induced_loads(
+    sess: FleetSession, state: SystemState
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(node ρ, link ρ, node weight bytes) that ``sess`` imposes on the fleet.
+
+    Node load is the raw (un-derated) λ·service-time of each hosted segment —
+    the same quantity :func:`repro.core.cost_model.node_loads` adds on top of
+    background utilization for a single session.
+    """
+    n = state.num_nodes
+    node_rho = np.zeros(n)
+    wbytes = np.zeros(n)
+    if sess.config is None:
+        return node_rho, np.zeros((n, n)), wbytes
+    b, a = sess.config.boundaries, sess.config.assignment
+    for j, (lo, hi) in enumerate(zip(b[:-1], b[1:])):
+        node = a[j]
+        svc = segment_service_time(
+            sess.graph.segment_flops(lo, hi),
+            sess.graph.segment_weight_bytes(lo, hi),
+            node, state, sess.workload, derate=False,
+        )
+        node_rho[node] += sess.workload.arrival_rate * svc
+        wbytes[node] += sess.graph.segment_weight_bytes(lo, hi)
+    link_rho = link_loads(sess.graph, b, a, state, sess.workload)
+    return node_rho, link_rho, wbytes
+
+
+@dataclass
+class FleetOrchestrator:
+    """Adaptive Split Orchestration over a set of concurrent sessions."""
+
+    profiler: CapacityProfiler
+    broadcast: ReconfigurationBroadcast
+    thresholds: Thresholds = field(default_factory=Thresholds)
+    weights: CostWeights = field(default_factory=CostWeights)
+    splitter: BatchedJointSplitter = field(default_factory=BatchedJointSplitter)
+    max_units: int | None = 96         # DP coarsening cap (huge graphs)
+    local_rounds: int = 6              # Φ local-search budget per decision
+    min_improvement_frac: float = 0.10  # anti-thrash hysteresis
+    bw_floor_frac: float = 0.05        # residual link bw floor under contention
+    # per-session solver duty-cycle limit (instantiated per admitted session):
+    # don't re-solve a session whose trigger context is unchanged since its
+    # last (rejected) solve — level-based triggers otherwise re-solve every
+    # cycle in a degraded steady state
+    solve_backoff_s: float = 5.0
+    backoff_tol_frac: float = 0.10
+
+    sessions: dict[int, FleetSession] = field(default_factory=dict)
+    decisions: list[FleetDecision] = field(default_factory=list)
+    _next_sid: int = 0
+
+    # ------------------------------------------------------------------ #
+    # shared capacity accounting
+    # ------------------------------------------------------------------ #
+    def load_table(self, state: SystemState):
+        """Per-session induced (node ρ, link ρ, weight bytes) + fleet totals."""
+        per = {
+            sid: session_induced_loads(s, state)
+            for sid, s in self.sessions.items()
+        }
+        n = state.num_nodes
+        tot_node = np.zeros(n)
+        tot_link = np.zeros((n, n))
+        tot_w = np.zeros(n)
+        for node_rho, link_rho, wb in per.values():
+            tot_node += node_rho
+            tot_link += link_rho
+            tot_w += wb
+        return per, tot_node, tot_link, tot_w
+
+    def effective_state(
+        self,
+        state: SystemState,
+        *,
+        exclude: tuple[int, ...] = (),
+        _table=None,
+    ) -> SystemState:
+        """C(t) as seen by the excluded sessions: everyone else is load.
+
+        Other sessions' compute joins ``background_util``, their boundary
+        traffic derates ``link_bw`` (capped at ``bw_floor_frac`` so a choked
+        link stays expensive rather than free), and their resident weights
+        shrink ``mem_bytes``.
+        """
+        per, tot_node, tot_link, tot_w = (
+            self.load_table(state) if _table is None else _table
+        )
+        node = tot_node.copy()
+        link = tot_link.copy()
+        wb = tot_w.copy()
+        for sid in exclude:
+            if sid in per:
+                node -= per[sid][0]
+                link -= per[sid][1]
+                wb -= per[sid][2]
+        eff = state.copy()
+        eff.background_util = np.clip(eff.background_util + node, 0.0, 0.99)
+        eff.link_bw = eff.link_bw * np.clip(1.0 - link, self.bw_floor_frac, 1.0)
+        eff.mem_bytes = np.maximum(0.0, eff.mem_bytes - wb)
+        return eff
+
+    # ------------------------------------------------------------------ #
+    # churn
+    # ------------------------------------------------------------------ #
+    def admit(
+        self,
+        graph: ModelGraph,
+        workload: Workload,
+        *,
+        source_node: int = 0,
+        arch: str = "",
+        now: float = 0.0,
+    ) -> int:
+        """Admit a session: solve its split against current fleet load, deploy."""
+        sid = self._next_sid
+        self._next_sid += 1
+        sess = FleetSession(
+            sid=sid, graph=graph, workload=workload, source_node=source_node,
+            arch=arch, t_admitted=now,
+            throttle=SolveThrottle(self.solve_backoff_s, self.backoff_tol_frac),
+        )
+        state = self.profiler.system_state()
+        eff = self.effective_state(state)
+        [sol] = self.splitter.solve_batch(
+            [SessionProblem(graph, workload, source_node=source_node)],
+            eff, max_units=self.max_units,
+        )
+        sol = coalesce_same_node(sol)
+        sol = local_search(graph, sol, eff, workload,
+                           max_rounds=self.local_rounds)
+        sol = repair_capacity(graph, sol, eff, workload)
+        cfg = self.broadcast.rollout(
+            sol.boundaries, sol.assignment,
+            reason=f"admit session {sid}" + (f" ({arch})" if arch else ""),
+            now=now,
+        )
+        if cfg is None:
+            raise RuntimeError(f"admission rollout failed for session {sid}")
+        sess.config = cfg
+        sess.t_last_reconfig = now
+        self.sessions[sid] = sess
+        return sid
+
+    def depart(self, sid: int) -> FleetSession:
+        """Remove a session; its induced load vanishes from the shared C(t)."""
+        return self.sessions.pop(sid)
+
+    # ------------------------------------------------------------------ #
+    # one monitoring cycle
+    # ------------------------------------------------------------------ #
+    def _latency(self, sess: FleetSession, sol: Solution, eff: SystemState) -> float:
+        return chain_latency(
+            sess.graph, sol.boundaries, sol.assignment, eff, sess.workload
+        )
+
+    @staticmethod
+    def _session_env(sess: FleetSession, util_vec, eff_bw) -> tuple[float, float]:
+        """(max util, min bw) over the nodes/links THIS session touches.
+
+        Util and bandwidth triggers are targeted: a node spiking past U_max
+        only wakes the sessions with a segment on it (or entering through
+        it); a choked link only wakes the sessions whose boundary traffic
+        crosses it.  Sessions elsewhere stay in cheap KEEP cycles.
+        """
+        a = sess.config.assignment
+        nodes = set(a) | {sess.source_node}
+        max_util = float(util_vec[sorted(nodes)].max())
+        hops = [(sess.source_node, a[0])] + list(zip(a[:-1], a[1:]))
+        bws = [eff_bw[i, j] for i, j in hops
+               if i != j and np.isfinite(eff_bw[i, j])]
+        return max_util, float(min(bws)) if bws else float("inf")
+
+    def _refresh_loads(self, table, sid: int, state: SystemState) -> None:
+        """Fold a just-committed session's NEW placement into the shared
+        load table so later decisions in the same cycle see it (prevents
+        herd migration: two sessions both fleeing to the same idle node)."""
+        per, tot_node, tot_link, tot_w = table
+        old = per.get(sid)
+        new = session_induced_loads(self.sessions[sid], state)
+        if old is not None:
+            tot_node -= old[0]
+            tot_link -= old[1]
+            tot_w -= old[2]
+        tot_node += new[0]
+        tot_link += new[1]
+        tot_w += new[2]
+        per[sid] = new
+
+    def step(self, now: float) -> FleetDecision:
+        """Monitor every session, migrate cheap, batch-resplit the rest."""
+        t0 = time.perf_counter()
+        state = self.profiler.system_state()
+        table = self.load_table(state)
+        _, tot_node, tot_link, _ = table
+
+        per_session: dict[int, Decision] = {}
+        resplit_pool: list[tuple[int, Solution, float, SystemState]] = []
+
+        for sid, sess in self.sessions.items():
+            eff = self.effective_state(state, exclude=(sid,), _table=table)
+            cur = Solution(sess.config.boundaries, sess.config.assignment, 0.0)
+            cur_lat = self._latency(sess, cur, eff)
+            sess.ewma_latency.update(cur_lat)
+            # trigger vectors from LIVE totals (earlier commits this cycle
+            # are already folded in by _refresh_loads)
+            util_vec = np.clip(state.background_util + tot_node, 0, 2)
+            eff_bw_all = state.link_bw * np.clip(
+                1.0 - tot_link, self.bw_floor_frac, 1.0
+            )
+            max_util, min_bw = self._session_env(sess, util_vec, eff_bw_all)
+            env = TriggerState(
+                ewma_latency_s=sess.ewma_latency.get(0.0),
+                max_node_util=max_util,
+                min_link_bw_bps=min_bw,
+            )
+            if not should_reconfigure(env, self.thresholds):
+                per_session[sid] = Decision(
+                    DecisionKind.KEEP, sess.config, (), cur_lat, 0.0
+                )
+                continue
+            reasons = tuple(env.reasons)
+            if now - sess.t_last_reconfig < self.thresholds.cooldown_s:
+                per_session[sid] = Decision(
+                    DecisionKind.COOLDOWN, sess.config, reasons, cur_lat, 0.0
+                )
+                continue
+            if sess.throttle.should_skip(env, now):
+                per_session[sid] = Decision(
+                    DecisionKind.KEEP, sess.config, reasons, cur_lat, 0.0
+                )
+                continue
+
+            # attempt 1: placement migration under the current split (Eq. 7)
+            mig = solve_placement_chain_dp(
+                sess.graph, sess.config.boundaries, eff, sess.workload,
+                source_node=sess.source_node,
+            )
+            mig = local_search(
+                sess.graph, mig, eff, sess.workload,
+                max_rounds=self.local_rounds, allow_resplit=False,
+            )
+            mig_lat = self._latency(sess, mig, eff)
+            if mig_lat > self.thresholds.latency_max_s:
+                # queue for the batched full re-split (Eq. 8)
+                resplit_pool.append((sid, mig, mig_lat, eff))
+                per_session[sid] = Decision(
+                    DecisionKind.RESPLIT, sess.config, reasons, mig_lat, 0.0
+                )
+            else:
+                if self._commit(sid, mig, mig_lat, cur_lat,
+                                DecisionKind.MIGRATE, reasons, per_session,
+                                now):
+                    self._refresh_loads(table, sid, state)
+
+        # attempt 2, batched: one vmapped DP call for every failing session.
+        if resplit_pool:
+            exclude = tuple(sid for sid, *_ in resplit_pool)
+            solve_state = self.effective_state(state, exclude=exclude, _table=table)
+            problems = [
+                SessionProblem(
+                    self.sessions[sid].graph, self.sessions[sid].workload,
+                    source_node=self.sessions[sid].source_node,
+                    input_bytes_per_token=self.sessions[sid].input_bytes_per_token,
+                )
+                for sid, *_ in resplit_pool
+            ]
+            sols = self.splitter.solve_batch(
+                problems, solve_state, max_units=self.max_units
+            )
+            for (sid, mig, mig_lat, eff), rs in zip(resplit_pool, sols):
+                sess = self.sessions[sid]
+                rs = coalesce_same_node(rs)
+                # same contract as the single-session SR path: the DP is
+                # surrogate-exact, the full-Φ terms get a bounded refinement
+                rs = local_search(sess.graph, rs, eff, sess.workload,
+                                  max_rounds=self.local_rounds)
+                rs = repair_capacity(sess.graph, rs, eff, sess.workload)
+                rs_lat = self._latency(sess, rs, eff)
+                reasons = per_session[sid].reasons
+                cur = Solution(sess.config.boundaries, sess.config.assignment, 0.0)
+                cur_lat = self._latency(sess, cur, eff)
+                kind = DecisionKind.RESPLIT
+                chosen, chosen_lat = rs, rs_lat
+                if mig_lat < rs_lat:
+                    kind, chosen, chosen_lat = DecisionKind.MIGRATE, mig, mig_lat
+                if self._commit(sid, chosen, chosen_lat, cur_lat, kind,
+                                reasons, per_session, now):
+                    self._refresh_loads(table, sid, state)
+
+        solver_time = time.perf_counter() - t0
+        kinds = [d.kind for d in per_session.values()]
+        fd = FleetDecision(
+            t=now,
+            per_session=per_session,
+            solver_time_s=solver_time,
+            n_keep=sum(k == DecisionKind.KEEP for k in kinds),
+            n_migrate=sum(k == DecisionKind.MIGRATE for k in kinds),
+            n_resplit=sum(k == DecisionKind.RESPLIT for k in kinds),
+            n_cooldown=sum(k == DecisionKind.COOLDOWN for k in kinds),
+        )
+        self.decisions.append(fd)
+        for sid, d in per_session.items():
+            self.sessions[sid].decisions.append(d)
+        return fd
+
+    # ------------------------------------------------------------------ #
+    def _commit(
+        self,
+        sid: int,
+        chosen: Solution,
+        chosen_lat: float,
+        cur_lat: float,
+        kind: DecisionKind,
+        reasons: tuple[str, ...],
+        per_session: dict[int, Decision],
+        now: float,
+    ) -> bool:
+        """Hysteresis + two-phase rollout; KEEP on no-gain or abort.
+
+        Returns True iff a new config was actually committed (callers then
+        refresh the shared load table for the rest of the cycle).
+        """
+        sess = self.sessions[sid]
+        unchanged = (chosen.boundaries == sess.config.boundaries
+                     and chosen.assignment == sess.config.assignment)
+        if not unchanged and chosen_lat > cur_lat * (1.0 - self.min_improvement_frac):
+            unchanged = True
+        if unchanged:
+            per_session[sid] = Decision(
+                DecisionKind.KEEP, sess.config, reasons, chosen_lat, 0.0
+            )
+            return False
+        cfg = self.broadcast.rollout(
+            chosen.boundaries, chosen.assignment,
+            reason=f"session {sid}: " + "; ".join(reasons), now=now,
+        )
+        if cfg is None:  # rollout aborted — keep serving the old config
+            per_session[sid] = Decision(
+                DecisionKind.KEEP, sess.config, reasons, chosen_lat, 0.0
+            )
+            return False
+        sess.config = cfg
+        sess.t_last_reconfig = now
+        per_session[sid] = Decision(kind, cfg, reasons, chosen_lat, 0.0)
+        return True

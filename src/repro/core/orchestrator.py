@@ -19,7 +19,7 @@ from .graph import ModelGraph
 from .placement import Solution, local_search, solve_placement_chain_dp
 from .profiling import CapacityProfiler
 from .splitter import SplitRevision
-from .triggers import Thresholds, should_reconfigure
+from .triggers import SolveThrottle, Thresholds, should_reconfigure
 
 __all__ = ["DecisionKind", "Decision", "AdaptiveOrchestrator"]
 
@@ -55,6 +55,12 @@ class AdaptiveOrchestrator:
     # this fraction over the *current* config under the same C(t) (complements
     # the paper's T_cool rate limit)
     min_improvement_frac: float = 0.10
+    # solver duty-cycle limit (see SolveThrottle): don't re-solve while the
+    # degraded trigger context is unchanged since the last rejected solve
+    throttle: SolveThrottle = field(default_factory=SolveThrottle)
+    # Φ local-search budget for the migration attempt (the refinement is
+    # python-loop evaluate(); unbounded rounds dominate the cycle cost)
+    migration_rounds: int = 8
 
     current: PartitionConfig | None = None
     t_last_reconfig: float = float("-inf")
@@ -62,12 +68,21 @@ class AdaptiveOrchestrator:
 
     # ------------------------------------------------------------------ #
     def deploy_initial(self, boundaries, assignment, now: float = 0.0) -> PartitionConfig:
-        """Alg. 1 'Initialize': deploy the baseline split d_0."""
+        """Alg. 1 'Initialize': deploy the baseline split d_0.
+
+        Also pre-compiles the jitted re-split DP for this (graph, fleet)
+        shape: compilation belongs to deployment, not to the first triggered
+        monitoring cycle, whose ``solver_time_s`` must reflect the warm-solve
+        cost the paper budgets (≤10 ms).
+        """
         cfg = self.broadcast.rollout(tuple(boundaries), tuple(assignment),
                                      reason="initial deployment", now=now)
         if cfg is None:
             raise RuntimeError("initial rollout failed")
         self.current = cfg
+        if self.use_jax_solver:
+            self.splitter.warmup(self.graph, self.profiler.system_state(),
+                                 self.workload, source_node=self.source_node)
         return cfg
 
     # ------------------------------------------------------------------ #
@@ -98,12 +113,23 @@ class AdaptiveOrchestrator:
             self.decisions.append(d)
             return d
 
+        # --- solver duty-cycle limit: same degraded context, recent solve ---
+        if self.throttle.should_skip(env, now):
+            d = Decision(DecisionKind.KEEP, self.current, reasons,
+                         self._predicted_latency(
+                             Solution(self.current.boundaries,
+                                      self.current.assignment, 0.0), state),
+                         time.perf_counter() - t0)
+            self.decisions.append(d)
+            return d
+
         # --- attempt 1: placement migration under the current split (Eq. 7) ---
         mig = solve_placement_chain_dp(
             self.graph, self.current.boundaries, state, self.workload,
             source_node=self.source_node,
         )
         mig = local_search(self.graph, mig, state, self.workload,
+                           max_rounds=self.migration_rounds,
                            allow_resplit=False)
         mig_lat = self._predicted_latency(mig, state)
 

@@ -4,7 +4,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-__all__ = ["Thresholds", "TriggerState", "should_reconfigure", "EWMA"]
+__all__ = ["Thresholds", "TriggerState", "should_reconfigure", "EWMA",
+           "SolveThrottle"]
 
 
 @dataclass(frozen=True)
@@ -36,6 +37,37 @@ class EWMA:
 
 
 @dataclass
+class SolveThrottle:
+    """Solver duty-cycle limiter shared by the single- and multi-session AOs.
+
+    The paper's T_cool rate-limits COMMITS, but level-based triggers keep
+    firing every monitoring cycle while the environment stays degraded, and
+    re-solving (DP + Φ local search) just for hysteresis to reject the
+    result again busts the ≤10 ms cycle budget.  After a solve, skip
+    re-solving for ``backoff_s`` while the trigger context is unchanged:
+    same fired-trigger kinds and EWMA latency not worse than ``tol_frac``.
+    """
+
+    backoff_s: float = 5.0
+    tol_frac: float = 0.10
+    t_last: float = float("-inf")
+    kinds: tuple[str, ...] = ()
+    ewma: float = float("inf")
+
+    def should_skip(self, env: "TriggerState", now: float) -> bool:
+        """True → reuse the previous (rejected) answer; False → solve now
+        (and remember this context as the new debounce reference)."""
+        if (now - self.t_last < self.backoff_s
+                and env.kinds == self.kinds
+                and env.ewma_latency_s <= self.ewma * (1.0 + self.tol_frac)):
+            return True
+        self.t_last = now
+        self.kinds = env.kinds
+        self.ewma = env.ewma_latency_s
+        return False
+
+
+@dataclass
 class TriggerState:
     """E(t) summary the orchestrator inspects each monitoring cycle."""
 
@@ -43,19 +75,28 @@ class TriggerState:
     max_node_util: float
     min_link_bw_bps: float
     reasons: list[str] = field(default_factory=list)
+    # stable identifiers of the fired triggers ("latency"/"util"/"bw") —
+    # unlike ``reasons``, these carry no live values, so orchestrators can
+    # compare trigger CONTEXT across cycles (solver duty-cycle limiting)
+    kinds: tuple[str, ...] = ()
 
 
 def should_reconfigure(env: TriggerState, th: Thresholds) -> bool:
     """Paper §III-C: reconfigure if ANY trigger fires within the window."""
     env.reasons.clear()
+    kinds = []
     if env.ewma_latency_s > th.latency_max_s:
+        kinds.append("latency")
         env.reasons.append(
             f"latency {env.ewma_latency_s*1e3:.0f}ms > {th.latency_max_s*1e3:.0f}ms"
         )
     if env.max_node_util > th.util_max:
+        kinds.append("util")
         env.reasons.append(f"util {env.max_node_util:.2f} > {th.util_max:.2f}")
     if env.min_link_bw_bps < th.bandwidth_min_bps:
+        kinds.append("bw")
         env.reasons.append(
             f"bw {env.min_link_bw_bps*8/1e6:.0f}Mbps < {th.bandwidth_min_bps*8/1e6:.0f}Mbps"
         )
+    env.kinds = tuple(kinds)
     return bool(env.reasons)

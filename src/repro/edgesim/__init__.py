@@ -1,18 +1,33 @@
-"""5G-MEC edge-environment simulator (paper §IV scenario)."""
+"""5G-MEC edge-environment simulator (paper §IV scenario + fleet mode)."""
 
 from .scenario import (
+    FleetScenarioParams,
     MECScenarioParams,
     base_system_state,
+    build_fleet_scenario,
     build_mec_scenario,
+    fleet_model_catalog,
     llama3_8b_graph,
+    mec_traces,
     static_baseline_split,
 )
-from .simulator import EdgeSimulator, SimConfig, SimResult, TickMetrics
+from .simulator import (
+    EdgeSimulator,
+    FleetSimConfig,
+    FleetSimResult,
+    FleetSimulator,
+    FleetTickMetrics,
+    SimConfig,
+    SimResult,
+    TickMetrics,
+)
 from .traces import Trace, constant, ou_process, square_wave
 
 __all__ = [
-    "EdgeSimulator", "MECScenarioParams", "SimConfig", "SimResult",
-    "TickMetrics", "Trace", "base_system_state", "build_mec_scenario",
-    "constant", "llama3_8b_graph", "ou_process", "square_wave",
-    "static_baseline_split",
+    "EdgeSimulator", "FleetScenarioParams", "FleetSimConfig", "FleetSimResult",
+    "FleetSimulator", "FleetTickMetrics", "MECScenarioParams", "SimConfig",
+    "SimResult", "TickMetrics", "Trace", "base_system_state",
+    "build_fleet_scenario", "build_mec_scenario", "constant",
+    "fleet_model_catalog", "llama3_8b_graph", "mec_traces", "ou_process",
+    "square_wave", "static_baseline_split",
 ]

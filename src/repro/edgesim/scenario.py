@@ -13,6 +13,13 @@ offloaded to the cloud.  The adaptive orchestrator may migrate S2 to the other
 MECs or re-split when triggers fire.  Backhaul bandwidth is swept over
 {20, 50, 100, 200} Mb/s; the home MEC carries a fluctuating background load
 with periodic saturation events (other tenants of the base station).
+
+Beyond the paper: :func:`build_fleet_scenario` instantiates the SAME topology
+in multi-session mode — Poisson session churn with heterogeneous model
+configs drawn from ``repro.configs`` (rendered to analytic
+:class:`ModelGraph` chains by the bundle API's ``model_graph()``) and a
+:class:`~repro.core.fleet.FleetOrchestrator` arbitrating the shared fleet
+capacity.
 """
 
 from __future__ import annotations
@@ -28,10 +35,15 @@ from ..core.orchestrator import AdaptiveOrchestrator
 from ..core.profiling import CapacityProfiler
 from ..core.splitter import SplitRevision
 from ..core.triggers import Thresholds
-from .simulator import EdgeSimulator, SimConfig
+from ..core.fleet import FleetOrchestrator
+from .simulator import EdgeSimulator, FleetSimConfig, FleetSimulator, SimConfig
 from .traces import Trace, constant, ou_process, square_wave
 
-__all__ = ["MECScenarioParams", "llama3_8b_graph", "build_mec_scenario", "static_baseline_split"]
+__all__ = [
+    "MECScenarioParams", "llama3_8b_graph", "build_mec_scenario",
+    "static_baseline_split", "FleetScenarioParams", "build_fleet_scenario",
+    "fleet_model_catalog", "mec_traces",
+]
 
 MBPS = 1e6 / 8.0  # bytes/s per Mb/s
 
@@ -53,6 +65,26 @@ def llama3_8b_graph() -> ModelGraph:
         head_weight_bytes=2.0 * vocab * d,
         head_flops_token=2.0 * vocab * d,
     )
+
+
+# archs spanning ~3B → ~33B: small models fit one MEC, the 33B forces cloud
+# offload of its trunk, llama/gemma sit in between, and qwen3-moe exercises
+# expert-aware pricing (active FLOPs << resident bytes)
+_FLEET_ARCHS = ("stablelm-3b", "llama3-8b", "gemma2-9b",
+                "qwen3-moe-30b-a3b", "deepseek-coder-33b")
+
+
+def fleet_model_catalog(archs: tuple[str, ...] = _FLEET_ARCHS):
+    """(arch_id, ModelGraph) pairs for the multi-session scenario.
+
+    Graphs come from the bundle API's analytic ``model_graph()`` — the same
+    accounting the serving/dry-run layers use (MoE-aware: FLOPs priced on
+    active params, bytes on resident params), so fleet pricing can never
+    drift from the model-side source of truth.
+    """
+    from repro.configs import get_bundle
+
+    return [(a, get_bundle(a).model_graph()) for a in archs]
 
 
 @dataclass(frozen=True)
@@ -115,6 +147,26 @@ def static_baseline_split(graph: ModelGraph) -> tuple[tuple[int, ...], tuple[int
     return boundaries, assignment
 
 
+def mec_traces(
+    p: MECScenarioParams, horizon_s: float
+) -> tuple[dict[int, Trace], dict[tuple[int, int], Trace]]:
+    """§IV environment dynamics, shared by the single-session and fleet
+    builders: home-MEC saturation square wave, OU-fluctuating neighbors,
+    and a backhaul that wanders ±20 % around the swept value."""
+    util_traces: dict[int, Trace] = {
+        0: Trace(square_wave(p.home_util_base, p.home_util_spike,
+                             p.spike_period_s, p.spike_duty), 0.0, 0.99),
+        1: ou_process(p.seed + 1, p.neighbor_util, 0.05, horizon_s=horizon_s),
+        2: ou_process(p.seed + 2, p.neighbor_util, 0.05, horizon_s=horizon_s),
+        3: constant(p.cloud_util),
+    }
+    bh = ou_process(p.seed + 3, p.backhaul_mbps * MBPS, 0.12 * p.backhaul_mbps * MBPS,
+                    horizon_s=horizon_s,
+                    lo=0.5 * p.backhaul_mbps * MBPS, hi=1.5 * p.backhaul_mbps * MBPS)
+    bw_traces = {(0, 3): bh, (1, 3): bh, (2, 3): bh}
+    return util_traces, bw_traces
+
+
 def build_mec_scenario(
     p: MECScenarioParams,
     *,
@@ -126,20 +178,7 @@ def build_mec_scenario(
     wl = Workload(tokens_in=p.tokens_in, tokens_out=p.tokens_out,
                   arrival_rate=p.arrival_rate)
     boundaries, assignment = static_baseline_split(graph)
-
-    util_traces: dict[int, Trace] = {
-        0: Trace(lambda t, _b=p.home_util_base, _s=square_wave(
-            p.home_util_base, p.home_util_spike, p.spike_period_s, p.spike_duty,
-            phase_s=0.0): _s(t), 0.0, 0.99),
-        1: ou_process(p.seed + 1, p.neighbor_util, 0.05, horizon_s=p.duration_s + 10),
-        2: ou_process(p.seed + 2, p.neighbor_util, 0.05, horizon_s=p.duration_s + 10),
-        3: constant(p.cloud_util),
-    }
-    # backhaul fluctuates ±20 % around the swept value
-    bh = ou_process(p.seed + 3, p.backhaul_mbps * MBPS, 0.12 * p.backhaul_mbps * MBPS,
-                    horizon_s=p.duration_s + 10,
-                    lo=0.5 * p.backhaul_mbps * MBPS, hi=1.5 * p.backhaul_mbps * MBPS)
-    bw_traces = {(0, 3): bh, (1, 3): bh, (2, 3): bh}
+    util_traces, bw_traces = mec_traces(p, p.duration_s + 10)
 
     profiler = CapacityProfiler(base_state=state)
     orch = None
@@ -167,4 +206,53 @@ def build_mec_scenario(
         assignment=assignment,
         config=SimConfig(duration_s=p.duration_s, tick_s=0.1,
                          monitor_interval_s=1.0, seed=p.seed),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# multi-session fleet scenario
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class FleetScenarioParams:
+    """Multi-tenant variant of the §IV topology: same 3 MEC + cloud fleet,
+    many concurrent sessions with churn instead of one pinned session.
+
+    Churn/workload knobs live in the embedded :class:`FleetSimConfig` (the
+    simulator's own config — one source of truth, no field copying)."""
+
+    mec: MECScenarioParams = MECScenarioParams()
+    sim: FleetSimConfig = FleetSimConfig()
+    archs: tuple[str, ...] = _FLEET_ARCHS
+
+
+def build_fleet_scenario(
+    p: FleetScenarioParams,
+    *,
+    thresholds: Thresholds | None = None,
+) -> FleetSimulator:
+    m = p.mec
+    state = base_system_state(m)
+    util_traces, bw_traces = mec_traces(m, p.sim.duration_s + 10)
+
+    orch = FleetOrchestrator(
+        profiler=CapacityProfiler(base_state=state),
+        broadcast=ReconfigurationBroadcast(
+            [InProcessAgent(i) for i in range(state.num_nodes)]
+        ),
+        # tighter per-session cool-down than the paper's single-session 30 s:
+        # re-splits are batched (one vmapped solve per cycle), so the rate
+        # limit guards thrash per session, not solver budget — and sessions
+        # live ~1 min, which a 30 s cool-down would mostly freeze
+        thresholds=thresholds if thresholds is not None else Thresholds(
+            cooldown_s=10.0
+        ),
+        weights=CostWeights(alpha=1.0, beta=0.02, gamma=1000.0),
+    )
+    return FleetSimulator(
+        base_state=state,
+        catalog=fleet_model_catalog(p.archs),
+        util_traces=util_traces,
+        bw_traces=bw_traces,
+        orchestrator=orch,
+        config=p.sim,
     )

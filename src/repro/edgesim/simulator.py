@@ -1,4 +1,4 @@
-"""Tick-based 5G-MEC edge simulator driving the adaptive orchestrator.
+"""Tick-based 5G-MEC edge simulator driving the adaptive orchestrator(s).
 
 The paper evaluates with an *analytical* ETSI-MEC latency model (Eq. 10)
 rather than packet-level simulation; we do the same.  Every tick the simulator
@@ -8,10 +8,20 @@ segment chain via ``chain_latency`` (T_proc + T_queue + T_tx), (3) feeds the
 Monitoring/CP module, and (4) runs one orchestrator monitoring cycle at the
 configured interval.  The static baseline runs the identical loop with the
 orchestrator disabled.
+
+Two modes share the trace plumbing:
+
+* :class:`EdgeSimulator` — the paper's single-session scenario (§IV).
+* :class:`FleetSimulator` — multi-session mode: Poisson session churn
+  (arrivals with exponential lifetimes, heterogeneous model graphs), every
+  session priced against the fleet state in which the OTHER sessions appear
+  as load, and a :class:`~repro.core.fleet.FleetOrchestrator` running
+  batched migrate-vs-resplit cycles.
 """
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -24,11 +34,34 @@ from ..core.cost_model import (
     node_loads,
     node_queue_loads,
 )
+from ..core.fleet import FleetOrchestrator
+from ..core.graph import ModelGraph
 from ..core.orchestrator import AdaptiveOrchestrator, DecisionKind
 from ..core.profiling import CapacityProfiler, NodeSample
 from .traces import Trace
 
-__all__ = ["SimConfig", "TickMetrics", "SimResult", "EdgeSimulator"]
+__all__ = [
+    "SimConfig", "TickMetrics", "SimResult", "EdgeSimulator",
+    "FleetSimConfig", "FleetTickMetrics", "FleetSimResult", "FleetSimulator",
+    "apply_traces",
+]
+
+
+def apply_traces(
+    base_state: SystemState,
+    util_traces: dict[int, Trace],
+    bw_traces: dict[tuple[int, int], Trace],
+    t: float,
+) -> SystemState:
+    """C(t): base capacities with the traced utilization/bandwidth applied."""
+    st = base_state.copy()
+    for node, tr in util_traces.items():
+        st.background_util[node] = min(0.99, tr(t))
+    for (i, j), tr in bw_traces.items():
+        bw = tr(t)
+        st.link_bw[i, j] = bw
+        st.link_bw[j, i] = bw
+    return st
 
 
 @dataclass(frozen=True)
@@ -112,14 +145,7 @@ class EdgeSimulator:
 
     # ------------------------------------------------------------------ #
     def _state_at(self, t: float) -> SystemState:
-        st = self.base_state.copy()
-        for node, tr in self.util_traces.items():
-            st.background_util[node] = min(0.99, tr(t))
-        for (i, j), tr in self.bw_traces.items():
-            bw = tr(t)
-            st.link_bw[i, j] = bw
-            st.link_bw[j, i] = bw
-        return st
+        return apply_traces(self.base_state, self.util_traces, self.bw_traces, t)
 
     def run(self) -> SimResult:
         cfg = self.cfg
@@ -180,3 +206,215 @@ class EdgeSimulator:
             )
             t = round(t + cfg.tick_s, 9)
         return SimResult(ticks, events)
+
+
+# --------------------------------------------------------------------------- #
+# multi-session mode
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class FleetSimConfig:
+    """Churn + workload-sampling knobs for the multi-session simulator."""
+
+    duration_s: float = 120.0
+    tick_s: float = 0.1
+    monitor_interval_s: float = 1.0
+    seed: int = 0
+    session_arrival_per_s: float = 0.2    # Poisson session-arrival rate
+    mean_lifetime_s: float = 60.0         # exponential session lifetime
+    max_sessions: int = 32                # admission cap (reject above)
+    initial_sessions: int = 2             # sessions present at t=0
+    arrival_rate_range: tuple[float, float] = (0.3, 2.0)   # per-session λ
+    tokens_in_range: tuple[int, int] = (16, 96)     # inclusive bounds
+    tokens_out_range: tuple[int, int] = (4, 16)
+    ingress_nodes: tuple[int, ...] = (0, 1, 2)  # where sessions enter
+
+
+@dataclass
+class FleetTickMetrics:
+    t: float
+    n_sessions: int
+    latencies: np.ndarray          # per-session E2E latency at this tick
+    qos_violation_frac: float      # sessions over Θ.L_max
+    node_rho: np.ndarray           # background + ALL sessions' induced load
+    admitted: int                  # session arrivals this tick
+    departed: int
+    rejected: int                  # refused by the admission cap
+    n_migrate: int = 0
+    n_resplit: int = 0
+    solver_time_s: float = 0.0
+
+    @property
+    def mean_latency_s(self) -> float:
+        return float(self.latencies.mean()) if self.latencies.size else 0.0
+
+
+@dataclass
+class FleetSimResult:
+    ticks: list[FleetTickMetrics]
+    session_log: list[tuple[float, str, int, str]]  # (t, event, sid, arch)
+
+    def window(self, t0: float, t1: float) -> list[FleetTickMetrics]:
+        return [m for m in self.ticks if t0 <= m.t < t1]
+
+    def kpis(self, t0: float, t1: float) -> dict[str, float]:
+        w = [m for m in self.window(t0, t1) if m.n_sessions > 0]
+        if not w:
+            return {}
+        # pool (tick, session) samples so p95 is a true tail percentile,
+        # comparable to the single-session SimResult KPI of the same name
+        pool = np.concatenate([m.latencies for m in w])
+        viol = np.array([m.qos_violation_frac for m in w])
+        rho = np.stack([m.node_rho for m in w])
+        span = max(1e-9, t1 - t0)
+        return {
+            "mean_latency_s": float(pool.mean()),
+            "p95_latency_s": float(np.percentile(pool, 95)),
+            "qos_violation_frac": float(viol.mean()),
+            "mean_sessions": float(np.mean([m.n_sessions for m in w])),
+            "max_rho": float(rho.max()),
+            "mean_rho": float(np.clip(rho, 0, 1).mean()),
+            "migrations_per_s": sum(m.n_migrate for m in w) / span,
+            "resplits_per_s": sum(m.n_resplit for m in w) / span,
+            "mean_solver_ms": 1e3 * float(np.mean(
+                [m.solver_time_s for m in w if m.solver_time_s > 0] or [0.0]
+            )),
+        }
+
+
+class FleetSimulator:
+    """Multi-session churn simulator over a shared edge fleet.
+
+    Session arrivals are Poisson; each session draws an architecture from
+    ``catalog`` (heterogeneous model graphs), a workload from the configured
+    ranges, an ingress node, and an exponential lifetime.  Every tick all
+    active sessions are priced through :func:`chain_latency` against their
+    *effective* state (other sessions folded into background/link load via
+    the orchestrator's shared capacity accounting), and the
+    :class:`FleetOrchestrator` runs a batched monitoring cycle at the
+    configured interval.
+    """
+
+    def __init__(
+        self,
+        *,
+        base_state: SystemState,
+        catalog: list[tuple[str, ModelGraph]],
+        util_traces: dict[int, Trace],
+        bw_traces: dict[tuple[int, int], Trace],
+        orchestrator: FleetOrchestrator,
+        config: FleetSimConfig = FleetSimConfig(),
+    ):
+        self.base_state = base_state
+        self.catalog = catalog
+        self.util_traces = util_traces
+        self.bw_traces = bw_traces
+        self.orch = orchestrator
+        self.cfg = config
+        self.rng = np.random.default_rng(config.seed)
+
+    # ------------------------------------------------------------------ #
+    def _draw_session(self) -> tuple[str, ModelGraph, Workload, int]:
+        cfg = self.cfg
+        arch, graph = self.catalog[int(self.rng.integers(len(self.catalog)))]
+        wl = Workload(
+            # endpoint=True: ranges are inclusive (and (n, n) means "fixed n")
+            tokens_in=int(self.rng.integers(*cfg.tokens_in_range, endpoint=True)),
+            tokens_out=int(self.rng.integers(*cfg.tokens_out_range, endpoint=True)),
+            arrival_rate=float(self.rng.uniform(*cfg.arrival_rate_range)),
+        )
+        src = int(cfg.ingress_nodes[int(self.rng.integers(len(cfg.ingress_nodes)))])
+        return arch, graph, wl, src
+
+    def run(self) -> FleetSimResult:
+        cfg = self.cfg
+        orch = self.orch
+        ticks: list[FleetTickMetrics] = []
+        log: list[tuple[float, str, int, str]] = []
+        departures: list[tuple[float, int]] = []   # heap of (t_depart, sid)
+        next_monitor = 0.0
+
+        def _admit(t: float) -> bool:
+            if len(orch.sessions) >= cfg.max_sessions:
+                return False
+            arch, graph, wl, src = self._draw_session()
+            sid = orch.admit(graph, wl, source_node=src, arch=arch, now=t)
+            life = float(self.rng.exponential(cfg.mean_lifetime_s))
+            heapq.heappush(departures, (t + life, sid))
+            log.append((t, "admit", sid, arch))
+            return True
+
+        # admissions plan against C(0) WITH traces applied (at t=0 the home
+        # MEC may already be in a saturation spike), not the construction-
+        # time base state
+        orch.profiler.base_state = apply_traces(
+            self.base_state, self.util_traces, self.bw_traces, 0.0)
+        for _ in range(cfg.initial_sessions):
+            _admit(0.0)
+
+        t = 0.0
+        while t < cfg.duration_s:
+            state = apply_traces(self.base_state, self.util_traces,
+                                 self.bw_traces, t)
+            orch.profiler.base_state = state
+
+            departed = 0
+            while departures and departures[0][0] <= t:
+                _, sid = heapq.heappop(departures)
+                if sid in orch.sessions:
+                    sess = orch.depart(sid)
+                    log.append((t, "depart", sid, sess.arch))
+                    departed += 1
+            admitted = rejected = 0
+            for _ in range(int(self.rng.poisson(
+                    cfg.session_arrival_per_s * cfg.tick_s))):
+                if _admit(t):
+                    admitted += 1
+                else:
+                    rejected += 1
+                    log.append((t, "reject", -1, ""))
+
+            # ---- price every session against the shared fleet state ----
+            table = orch.load_table(state)
+            lats = []
+            for sid, sess in orch.sessions.items():
+                eff = orch.effective_state(state, exclude=(sid,), _table=table)
+                lats.append(chain_latency(
+                    sess.graph, sess.config.boundaries, sess.config.assignment,
+                    eff, sess.workload,
+                ))
+            rho = np.clip(state.background_util + table[1], 0.0, None)
+
+            # ---- feed Monitoring & CP ----
+            for i in range(state.num_nodes):
+                orch.profiler.observe_node(NodeSample(
+                    i,
+                    util_total=float(np.clip(rho[i], 0, 1)),
+                    util_background=float(state.background_util[i]),
+                ))
+            orch.profiler.observe_links(state.link_bw)
+            if lats:
+                orch.profiler.observe_latency(float(np.mean(lats)))
+
+            n_mig = n_rs = 0
+            solver_t = 0.0
+            if orch.sessions and t >= next_monitor:
+                fd = orch.step(now=t)
+                next_monitor = t + cfg.monitor_interval_s
+                n_mig, n_rs = fd.n_migrate, fd.n_resplit
+                solver_t = fd.solver_time_s
+
+            lat_arr = np.asarray(lats)
+            lmax = orch.thresholds.latency_max_s
+            ticks.append(FleetTickMetrics(
+                t=t,
+                n_sessions=len(orch.sessions),
+                latencies=lat_arr,
+                qos_violation_frac=(
+                    float((lat_arr > lmax).mean()) if lats else 0.0
+                ),
+                node_rho=rho,
+                admitted=admitted, departed=departed, rejected=rejected,
+                n_migrate=n_mig, n_resplit=n_rs, solver_time_s=solver_t,
+            ))
+            t = round(t + cfg.tick_s, 9)
+        return FleetSimResult(ticks, log)

@@ -1,0 +1,79 @@
+"""Property-test compat layer: real ``hypothesis`` when installed, otherwise
+a deterministic fallback so the suite collects and still exercises the
+properties over a seeded sample of the input space.
+
+The container image does not ship ``hypothesis`` and new dependencies cannot
+be installed, so property tests import ``given``/``settings``/``st`` from here
+instead of from ``hypothesis`` directly.  The fallback implements only what
+this suite uses — ``st.integers``, ``st.floats``, ``st.sets`` — and replays
+``max_examples`` draws from a fixed-seed RNG (no shrinking, no database).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rng -> value
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sets(elements, *, min_size=0, max_size=8):
+            def sample(rng):
+                out = set()
+                for _ in range(rng.randint(min_size, max_size)):
+                    out.add(elements.sample(rng))
+                return out
+
+            return _Strategy(sample)
+
+    st = _St()
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    draw = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **draw, **kwargs)
+
+            wrapper._max_examples = 10
+            # hide strategy params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

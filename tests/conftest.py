@@ -2,6 +2,8 @@
 benches must see the container's single real device; only launch/dryrun.py
 (and explicit subprocess tests) force placeholder device counts."""
 
+import os
+
 import numpy as np
 import pytest
 
@@ -9,3 +11,43 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def tier1_subset(archs, keep):
+    """Parametrize helper for arch sweeps: ``keep`` runs in tier-1, the rest
+    is marked `slow` (one tiering rule for every sweep in the suite)."""
+    return [a if a in keep else pytest.param(a, marks=pytest.mark.slow)
+            for a in archs]
+
+
+def pytest_collection_modifyitems(config, items):
+    """Skip `slow` tests by default — but never ones the user asked for.
+
+    Unlike an ``addopts = -m "not slow"`` filter, this steps aside when an
+    explicit ``-m`` expression is given, and a test named by node id
+    (``pytest tests/foo.py::test_bar``) runs even if it is slow — without
+    unskipping slow tests collected from OTHER arguments of the same run.
+    """
+    if config.option.markexpr:
+        return
+    # nodeids are rootdir-relative; invocation paths may be cwd-relative or
+    # absolute (e.g. `cd tests && pytest test_x.py::test_y`) — normalize
+    root = str(config.rootpath)
+    named = []
+    for a in config.invocation_params.args:
+        if "::" not in a:
+            continue
+        path, sep, rest = a.partition("::")
+        rel = os.path.relpath(os.path.abspath(path), root)
+        named.append(rel.replace(os.sep, "/") + sep + rest)
+
+    def explicitly_named(nodeid: str) -> bool:
+        return any(
+            nodeid == a or nodeid.startswith(a + "[") or nodeid.startswith(a + "::")
+            for a in named
+        )
+
+    skip = pytest.mark.skip(reason="slow — opt in with -m 'slow or not slow'")
+    for item in items:
+        if "slow" in item.keywords and not explicitly_named(item.nodeid):
+            item.add_marker(skip)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import SystemState, Workload, chain_latency, phi
 from repro.core.cost_model import link_loads, node_loads, node_queue_loads

@@ -7,12 +7,19 @@ from repro.edgesim import MECScenarioParams, build_mec_scenario
 
 _WINDOW = (20.0, 60.0)
 
+# sims are deterministic per (bw, adaptive, duration) — share one run across
+# all assertions instead of re-simulating per test (biggest suite hotspot)
+_SIM_CACHE: dict[tuple, tuple] = {}
+
 
 def _kpis(bw, adaptive, duration=60.0):
-    p = MECScenarioParams(backhaul_mbps=bw, duration_s=duration)
-    sim = build_mec_scenario(p, adaptive=adaptive)
-    res = sim.run()
-    return res.kpis(*_WINDOW), res, sim
+    key = (bw, adaptive, duration)
+    if key not in _SIM_CACHE:
+        p = MECScenarioParams(backhaul_mbps=bw, duration_s=duration)
+        sim = build_mec_scenario(p, adaptive=adaptive)
+        res = sim.run()
+        _SIM_CACHE[key] = (res.kpis(*_WINDOW), res, sim)
+    return _SIM_CACHE[key]
 
 
 @pytest.mark.parametrize("bw,paper_static", [(20, 500), (50, 320),

@@ -65,6 +65,7 @@ def test_orchestrator_evicts_failed_node():
     assert 1 not in final.assignment, final
 
 
+@pytest.mark.slow
 def test_train_kill_restart_subprocess(tmp_path):
     env_cmd = [sys.executable, "-m", "repro.launch.train",
                "--arch", "llama3-8b", "--steps", "16", "--batch", "2",

@@ -41,7 +41,10 @@ def test_hlo_analyzer_known_graphs():
     c = analyze_hlo(comp.as_text())
     assert c.flops == pytest.approx(L * 2 * 16 * 32 * 32)   # trip-corrected
     # XLA itself reports the body once — our whole reason for existing
-    assert comp.cost_analysis()["flops"] < c.flops
+    ca = comp.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0]
+    assert ca["flops"] < c.flops
 
 
 _LOWER_SNIPPET = textwrap.dedent("""
@@ -82,6 +85,7 @@ _LOWER_SNIPPET = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_multiaxis_lowering_all_families():
     env = dict(os.environ, PYTHONPATH="src")
     r = subprocess.run([sys.executable, "-c", _LOWER_SNIPPET],

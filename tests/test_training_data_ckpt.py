@@ -67,6 +67,7 @@ def test_grad_compression_error_feedback():
     assert rel < 0.02
 
 
+@pytest.mark.slow
 def test_grad_compression_training_still_converges():
     bundle = get_bundle("llama3-8b", reduced=True)
     mesh = make_small_mesh(1, 1)
