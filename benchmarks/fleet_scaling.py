@@ -1,28 +1,48 @@
-"""Fleet-scaling benchmark: batched solver amortization + multi-session QoS.
+"""Fleet-scaling benchmark: solver amortization, monitoring cost, admission.
 
-Two questions the fleet layer must answer before any further scaling PR:
+Three questions the fleet layer must answer before any further scaling PR:
 
 1. **Solver amortization** — does one ``BatchedJointSplitter.solve_batch``
    call over B sessions beat B sequential ``JaxJointSplitter.solve`` calls?
    (It must: the batched path exists so a monitoring cycle stays flat-cost
    when dozens of sessions blow their QoS budget at once.)  Reported as warm
    per-batch latency vs B× the warm single-session solve.
-2. **Aggregate QoS under churn** — how do mean/p95 latency, QoS violation
-   rate, and orchestrator overhead move as the admission cap grows 1→64 on
-   the fixed §IV fleet (3 MEC + cloud)?
+2. **Monitoring-cycle cost** — how much does the PR-2 batched hot path
+   (one jitted fleet evaluator call + one vmapped migration DP per cycle)
+   save over the PR-1 per-session Python loop at 8/16/32 saturated
+   sessions?  Reported as warm per-cycle wall time, legacy vs batched, on
+   byte-identical fleets.
+3. **Aggregate QoS under churn** — how do mean/p95 latency, QoS violation
+   rate, ``max_rho``, and admission outcomes move as the session cap grows
+   1→64 on the fixed §IV fleet, with admission control OFF (PR-1 blind
+   admit: saturates, ``max_rho`` > 1) vs ON (latency-priced accept/defer/
+   reject: bounded)?
 
-Run:  PYTHONPATH=src python benchmarks/fleet_scaling.py [--quick]
+Run:  PYTHONPATH=src python benchmarks/fleet_scaling.py [--smoke] [--json out.json]
+      (--quick is an alias for --smoke; section flags: --amortization,
+       --monitor, --qos run a subset)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
-from repro.core import BatchedJointSplitter, JaxJointSplitter, SessionProblem, Workload
+from repro.core import (
+    BatchedJointSplitter,
+    FleetOrchestrator,
+    InProcessAgent,
+    JaxJointSplitter,
+    ReconfigurationBroadcast,
+    SessionProblem,
+    Thresholds,
+    Workload,
+)
 from repro.core.placement import surrogate_cost
+from repro.core.profiling import CapacityProfiler
 from repro.edgesim import (
     FleetScenarioParams,
     FleetSimConfig,
@@ -98,50 +118,144 @@ def solver_amortization(*, reps: int = 5, max_units: int = 96) -> list[dict]:
     return rows
 
 
-def fleet_qos(*, duration_s: float = 60.0, seed: int = 0) -> list[dict]:
-    """Aggregate QoS vs session cap on the fixed §IV fleet."""
+def _saturated_fleet(n_sessions: int, seed: int, *, batched: bool) -> FleetOrchestrator:
+    """A fleet of ``n_sessions`` live sessions on the §IV topology, loaded
+    hard enough that latency/util triggers fire every monitoring cycle.
+
+    Solver throttling is disabled and the cool-down kept below the cycle
+    spacing so every cycle exercises the full decision hot path (trigger →
+    migrate DP → re-split → hysteresis) — the degraded steady state in
+    which PR-1 burned ~80 ms/cycle at 32 sessions."""
+    state = base_system_state(MECScenarioParams())
+    orch = FleetOrchestrator(
+        profiler=CapacityProfiler(base_state=state),
+        broadcast=ReconfigurationBroadcast(
+            [InProcessAgent(i) for i in range(state.num_nodes)]
+        ),
+        thresholds=Thresholds(cooldown_s=0.5),
+        solve_backoff_s=0.0,
+        use_batched_eval=batched,
+    )
+    rng = np.random.default_rng(seed)
+    catalog = fleet_model_catalog()
+    for _ in range(n_sessions):
+        _, graph = catalog[int(rng.integers(len(catalog)))]
+        wl = Workload(
+            tokens_in=int(rng.integers(32, 96)),
+            tokens_out=int(rng.integers(8, 16)),
+            arrival_rate=float(rng.uniform(2.0, 5.0)),  # deliberately hot
+        )
+        orch.admit(graph, wl, source_node=int(rng.integers(0, 3)), now=0.0)
+    return orch
+
+
+def monitoring_cost(*, sessions=(8, 16, 32), cycles: int = 10,
+                    seed: int = 0) -> list[dict]:
+    """Warm monitoring-cycle wall time: PR-1 per-session Python loop vs the
+    PR-2 batched hot path, on byte-identical saturated fleets."""
     rows = []
-    for cap in (1, 4, 8, 16, 32, 64):
-        p = FleetScenarioParams(sim=FleetSimConfig(
-            duration_s=duration_s,
-            max_sessions=cap,
-            initial_sessions=min(cap, 2),
-            # arrival rate scaled so the cap actually binds within the run
-            session_arrival_per_s=max(0.2, cap / duration_s * 2.0),
-            mean_lifetime_s=duration_s / 2,
-            seed=seed,
-        ))
-        sim = build_fleet_scenario(p)
-        t0 = time.perf_counter()
-        res = sim.run()
-        wall = time.perf_counter() - t0
-        k = res.kpis(duration_s * 0.25, duration_s)
+    for n in sessions:
+        timings = {}
+        for mode, batched in (("legacy", False), ("batched", True)):
+            orch = _saturated_fleet(n, seed, batched=batched)
+            for w in range(3):                      # warm: compile + settle
+                orch.step(now=float(w))
+            t_cyc = []
+            for c in range(cycles):
+                t0 = time.perf_counter()
+                orch.step(now=3.0 + float(c))
+                t_cyc.append(time.perf_counter() - t0)
+            timings[mode] = float(np.median(t_cyc))
         rows.append(dict(
-            session_cap=cap,
-            mean_sessions=round(k.get("mean_sessions", 0.0), 1),
-            mean_latency_ms=round(1e3 * k.get("mean_latency_s", 0.0), 1),
-            p95_latency_ms=round(1e3 * k.get("p95_latency_s", 0.0), 1),
-            qos_violation_frac=round(k.get("qos_violation_frac", 0.0), 3),
-            max_rho=round(k.get("max_rho", 0.0), 2),
-            resplits_per_s=round(k.get("resplits_per_s", 0.0), 3),
-            mean_solver_ms=round(k.get("mean_solver_ms", 0.0), 2),
-            sim_wall_s=round(wall, 1),
+            sessions=n,
+            legacy_cycle_ms=round(1e3 * timings["legacy"], 2),
+            batched_cycle_ms=round(1e3 * timings["batched"], 2),
+            speedup=round(timings["legacy"] / max(timings["batched"], 1e-9), 2),
         ))
+    return rows
+
+
+def fleet_qos(*, duration_s: float = 60.0, seed: int = 0,
+              caps=(1, 4, 8, 16, 32, 64)) -> list[dict]:
+    """Aggregate QoS + admission outcomes vs session cap, admission OFF
+    (PR-1 blind admit) and ON (latency-priced accept/defer/reject)."""
+    rows = []
+    for admission in (False, True):
+        for cap in caps:
+            p = FleetScenarioParams(sim=FleetSimConfig(
+                duration_s=duration_s,
+                max_sessions=cap,
+                initial_sessions=min(cap, 2),
+                # arrival rate scaled so the cap actually binds within the run
+                session_arrival_per_s=max(0.2, cap / duration_s * 2.0),
+                mean_lifetime_s=duration_s / 2,
+                seed=seed,
+                admission=admission,
+            ))
+            sim = build_fleet_scenario(p)
+            t0 = time.perf_counter()
+            res = sim.run()
+            wall = time.perf_counter() - t0
+            k = res.kpis(duration_s * 0.25, duration_s)
+            rows.append(dict(
+                admission="on" if admission else "off",
+                session_cap=cap,
+                mean_sessions=round(k.get("mean_sessions", 0.0), 1),
+                mean_latency_ms=round(1e3 * k.get("mean_latency_s", 0.0), 1),
+                p95_latency_ms=round(1e3 * k.get("p95_latency_s", 0.0), 1),
+                qos_violation_frac=round(k.get("qos_violation_frac", 0.0), 3),
+                max_rho=round(k.get("max_rho", 0.0), 2),
+                admit_frac=round(k.get("admit_frac", 1.0), 3),
+                rejected_per_s=round(k.get("rejected_per_s", 0.0), 3),
+                deferred_per_s=round(k.get("deferred_per_s", 0.0), 3),
+                resplits_per_s=round(k.get("resplits_per_s", 0.0), 3),
+                mean_solver_ms=round(k.get("mean_solver_ms", 0.0), 2),
+                sim_wall_s=round(wall, 1),
+            ))
     return rows
 
 
 def main() -> None:  # pragma: no cover
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="short sim horizon for CI smoke")
+    ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true",
+                    help="short horizons / small sweeps for CI smoke")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write all sections as a JSON artifact")
+    ap.add_argument("--amortization", action="store_true")
+    ap.add_argument("--monitor", action="store_true")
+    ap.add_argument("--qos", action="store_true")
     args = ap.parse_args()
+    run_all = not (args.amortization or args.monitor or args.qos)
 
-    print("== solver amortization (warm, batched vs B x single) ==")
-    for r in solver_amortization(reps=3 if args.quick else 5):
-        print(r)
-    print("\n== fleet QoS vs session cap (3 MEC + cloud, churn) ==")
-    for r in fleet_qos(duration_s=20.0 if args.quick else 60.0):
-        print(r)
+    out: dict[str, list[dict]] = {}
+    if run_all or args.amortization:
+        print("== solver amortization (warm, batched vs B x single) ==")
+        out["solver_amortization"] = solver_amortization(
+            reps=3 if args.smoke else 5
+        )
+        for r in out["solver_amortization"]:
+            print(r)
+    if run_all or args.monitor:
+        print("\n== monitoring cycle cost (saturated fleet, warm) ==")
+        out["monitoring_cost"] = monitoring_cost(
+            sessions=(8, 16) if args.smoke else (8, 16, 32),
+            cycles=5 if args.smoke else 10,
+        )
+        for r in out["monitoring_cost"]:
+            print(r)
+    if run_all or args.qos:
+        print("\n== fleet QoS vs session cap (3 MEC + cloud, churn, "
+              "admission off/on) ==")
+        out["fleet_qos"] = fleet_qos(
+            duration_s=20.0 if args.smoke else 60.0,
+            caps=(4, 16) if args.smoke else (1, 4, 8, 16, 32, 64),
+        )
+        for r in out["fleet_qos"]:
+            print(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"\nwrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -6,11 +6,8 @@ Run via ``python -m benchmarks.run`` (all) or this module directly.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from repro.core import Workload
 from repro.edgesim import MECScenarioParams, build_mec_scenario
 
 BACKHAULS = (20.0, 50.0, 100.0, 200.0)

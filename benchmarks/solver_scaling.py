@@ -11,7 +11,7 @@ import time
 
 import numpy as np
 
-from repro.core import JaxJointSplitter, SystemState, Workload
+from repro.core import SystemState, Workload
 from repro.core.graph import make_transformer_graph
 
 

@@ -8,14 +8,12 @@ Run:  XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
 """
 
 import dataclasses
-import os
 import tempfile
 
 import jax
 
 from repro.configs import get_bundle
 from repro.models.api import bundle_for
-from repro.launch import train as train_mod
 
 # ~100M params: widen the reduced llama config
 base = get_bundle("llama3-8b", reduced=True).cfg
@@ -26,15 +24,10 @@ bundle = bundle_for("llama-100m", cfg)
 print(f"params: {bundle.num_params() / 1e6:.1f}M")
 
 with tempfile.TemporaryDirectory() as ckpt:
-    import repro.configs as configs
-    # run through the driver by registering a tiny shim
-    import sys
-
     from repro.data import DataConfig, SyntheticTokens
     from repro.launch.mesh import make_small_mesh
     from repro.training import AdamWConfig, TrainStepConfig, make_train_step
     import jax.numpy as jnp
-    import numpy as np
     import time
 
     ndev = len(jax.devices())

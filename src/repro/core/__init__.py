@@ -9,10 +9,18 @@ Modules mirror the reference architecture of §III-A:
   profiling    — Monitoring & Capacity Profiling (CP)
   orchestrator — Adaptive Orchestrator (AO), Alg. 1
   fleet        — multi-session AO: shared capacity + batched migrate/resplit
+  fleet_eval   — fleet-wide batched Φ evaluator + batched migration DP
+  admission    — latency-priced admission control (accept/defer/reject)
   broadcast    — Reconfiguration Broadcast (RB), 2-phase versioned rollout
   privacy      — trusted sets, Eq. (5)/(9)
 """
 
+from .admission import (
+    AdmissionKind,
+    AdmissionRequest,
+    AdmissionVerdict,
+    FleetAdmissionController,
+)
 from .broadcast import InProcessAgent, PartitionConfig, ReconfigurationBroadcast
 from .cost_model import (
     CostBreakdown,
@@ -24,6 +32,13 @@ from .cost_model import (
     phi,
 )
 from .fleet import FleetDecision, FleetOrchestrator, FleetSession
+from .fleet_eval import (
+    BatchedMigrationSolver,
+    FleetCostEvaluator,
+    PackedSessions,
+    pack_sessions,
+    packed_induced_loads,
+)
 from .graph import GraphNode, ModelGraph, SplitScheme, make_transformer_graph
 from .orchestrator import AdaptiveOrchestrator, Decision, DecisionKind
 from .placement import (
@@ -44,18 +59,32 @@ from .splitter import (
     brute_force_joint,
     solve_joint_dp,
 )
-from .triggers import EWMA, Thresholds, TriggerState, should_reconfigure
+from .triggers import (
+    EWMA,
+    QOS_BATCH,
+    QOS_CLASSES,
+    QOS_INTERACTIVE,
+    QOS_STANDARD,
+    QoSClass,
+    Thresholds,
+    TriggerState,
+    should_reconfigure,
+)
 
 __all__ = [
-    "AdaptiveOrchestrator", "BatchedJointSplitter", "CapacityProfiler",
-    "CostBreakdown", "CostWeights", "Decision", "DecisionKind", "EWMA",
+    "AdaptiveOrchestrator", "AdmissionKind", "AdmissionRequest",
+    "AdmissionVerdict", "BatchedJointSplitter", "BatchedMigrationSolver",
+    "CapacityProfiler", "CostBreakdown", "CostWeights", "Decision",
+    "DecisionKind", "EWMA", "FleetAdmissionController", "FleetCostEvaluator",
     "FleetDecision", "FleetOrchestrator", "FleetSession", "GraphNode",
     "InProcessAgent", "JaxJointSplitter", "ModelGraph", "NodeSample",
-    "PartitionConfig", "ReconfigurationBroadcast", "SessionProblem",
-    "Solution", "SplitRevision", "SplitScheme", "SystemState", "Thresholds",
-    "TriggerState", "TrustPolicy", "Workload", "assert_privacy_ok",
-    "brute_force_joint", "chain_latency", "evaluate", "greedy_placement",
-    "local_search", "make_transformer_graph", "phi", "repair_capacity",
+    "PackedSessions", "PartitionConfig", "QOS_BATCH", "QOS_CLASSES",
+    "QOS_INTERACTIVE", "QOS_STANDARD", "QoSClass", "ReconfigurationBroadcast",
+    "SessionProblem", "Solution", "SplitRevision", "SplitScheme",
+    "SystemState", "Thresholds", "TriggerState", "TrustPolicy", "Workload",
+    "assert_privacy_ok", "brute_force_joint", "chain_latency", "evaluate",
+    "greedy_placement", "local_search", "make_transformer_graph",
+    "pack_sessions", "packed_induced_loads", "phi", "repair_capacity",
     "should_reconfigure", "solve_joint_dp", "solve_placement_chain_dp",
     "surrogate_cost",
 ]

@@ -1,0 +1,238 @@
+"""Latency-priced admission control for the edge fleet (control-plane stage).
+
+The paper's Alg. 1 leaves admission implicit: PR-1 admitted sessions blindly
+until ``max_sessions`` and let the orchestrator fight the resulting
+saturation (``max_rho`` > 1, p95 in seconds at 32–64 sessions).  Companion
+orchestration work (arXiv:2504.03668) and queue-aware edge–cloud splitting
+(Splitwise, arXiv:2512.23310) both price a session's *achievable* latency
+against current capacity BEFORE placement.  This module does exactly that,
+reusing the batched joint-DP machinery:
+
+1. An arriving session is solved with the fleet's
+   :class:`~repro.core.splitter.BatchedJointSplitter` against the *residual*
+   shared capacity — every live session's induced node load, link traffic,
+   and resident weights folded into C(t) via
+   :meth:`~repro.core.fleet.FleetOrchestrator.effective_state`.
+2. The best feasible split's end-to-end latency is compared with the
+   session's :class:`~repro.core.triggers.QoSClass` SLO, and the placement's
+   projected node load with ``rho_ceiling`` (ρ > 1 anywhere means the fleet
+   cannot sustain the arrival rate at all).
+3. ACCEPT deploys the already-solved split through
+   :meth:`~repro.core.fleet.FleetOrchestrator.admit` (no re-solve); DEFER
+   parks the request in a bounded FIFO retried on :meth:`poll` until the QoS
+   class's patience runs out; REJECT is final.
+
+KPIs (accept/reject/defer/expire counts) are surfaced through
+:attr:`FleetAdmissionController.counters` and, per tick, through
+:class:`repro.edgesim.simulator.FleetSimulator`.
+"""
+
+from __future__ import annotations
+
+import enum
+from collections import deque
+from dataclasses import dataclass, field
+
+from .cost_model import Workload, chain_latency, memory_violations, node_loads
+from .fleet import FleetOrchestrator
+from .graph import ModelGraph
+from .placement import Solution, repair_capacity
+from .splitter import SessionProblem, coalesce_same_node
+from .triggers import QOS_STANDARD, QoSClass
+
+__all__ = [
+    "AdmissionKind",
+    "AdmissionRequest",
+    "AdmissionVerdict",
+    "FleetAdmissionController",
+]
+
+
+class AdmissionKind(enum.Enum):
+    ACCEPT = "accept"
+    DEFER = "defer"
+    REJECT = "reject"
+
+
+@dataclass(frozen=True)
+class AdmissionRequest:
+    """One session asking to join the fleet."""
+
+    graph: ModelGraph
+    workload: Workload
+    source_node: int = 0
+    arch: str = ""
+    qos: QoSClass = QOS_STANDARD
+    input_bytes_per_token: float = 4.0
+    t_submit: float = 0.0
+
+
+@dataclass(frozen=True)
+class AdmissionVerdict:
+    kind: AdmissionKind
+    sid: int | None = None              # set on ACCEPT
+    predicted_latency_s: float = float("inf")
+    reason: str = ""
+    solution: Solution | None = None    # the priced split (ACCEPT only)
+
+
+@dataclass
+class FleetAdmissionController:
+    """Prices arriving sessions against residual capacity; queues the rest.
+
+    ``rho_ceiling`` bounds the projected post-admission node utilization
+    (background + every live session + the candidate's own raw λ·service):
+    admitting past ρ = 1 puts the fleet into an unsustainable steady state
+    no later migration can fix, which is precisely how the PR-1 fleet
+    saturated.  ``max_sessions`` remains as a hard cap above the priced
+    checks (bounding orchestrator state, not capacity).
+    """
+
+    orchestrator: FleetOrchestrator
+    max_sessions: int = 64
+    rho_ceiling: float = 1.0
+    queue_cap: int = 16
+    counters: dict[str, int] = field(default_factory=lambda: {
+        "requests": 0, "accepted": 0, "accepted_from_queue": 0,
+        "rejected": 0, "deferred": 0, "expired": 0,
+    })
+    _queue: deque = field(default_factory=deque)  # (deadline, AdmissionRequest)
+    # fleet load-table memo: a burst of arrivals (plus the defer-queue poll)
+    # prices against the SAME C(t), and the O(sessions) Python table scan
+    # only changes when the session set does — key on (now, live sids)
+    _table_key: tuple = ()
+    _table_cache: tuple | None = None
+
+    # ------------------------------------------------------------------ #
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    def request(self, req: AdmissionRequest, *, now: float = 0.0) -> AdmissionVerdict:
+        """Admission decision for a fresh arrival (may enqueue a deferral)."""
+        self.counters["requests"] += 1
+        v = self._price_and_admit(req, now)
+        if v.kind is AdmissionKind.ACCEPT:
+            self.counters["accepted"] += 1
+            return v
+        if req.qos.defer_timeout_s > 0 and len(self._queue) < self.queue_cap:
+            self._queue.append((now + req.qos.defer_timeout_s, req))
+            self.counters["deferred"] += 1
+            return AdmissionVerdict(
+                AdmissionKind.DEFER, None, v.predicted_latency_s, v.reason
+            )
+        self.counters["rejected"] += 1
+        return AdmissionVerdict(
+            AdmissionKind.REJECT, None, v.predicted_latency_s, v.reason
+        )
+
+    def poll(self, now: float) -> list[tuple[AdmissionRequest, AdmissionVerdict]]:
+        """Retry the defer queue; expired requests become final REJECTs.
+
+        Returns the requests that left the queue this poll, with their
+        verdicts (ACCEPT or REJECT-by-timeout), in queue order.
+        """
+        out: list[tuple[AdmissionRequest, AdmissionVerdict]] = []
+        still: deque = deque()
+        while self._queue:
+            deadline, req = self._queue.popleft()
+            if now > deadline:
+                self.counters["expired"] += 1
+                out.append((req, AdmissionVerdict(
+                    AdmissionKind.REJECT,
+                    reason=f"defer timeout ({req.qos.name})",
+                )))
+                continue
+            v = self._price_and_admit(req, now)
+            if v.kind is AdmissionKind.ACCEPT:
+                self.counters["accepted"] += 1
+                self.counters["accepted_from_queue"] += 1
+                out.append((req, v))
+            else:
+                still.append((deadline, req))
+        self._queue = still
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _fleet_table(self, state, now: float):
+        orch = self.orchestrator
+        # broadcast version folds monitoring-cycle commits (same session
+        # set, new placements) into the key
+        key = (now, tuple(orch.sessions), orch.broadcast.active_version)
+        if key != self._table_key:
+            self._table_key = key
+            self._table_cache = orch.load_table(state)
+        return self._table_cache
+
+    def _price_and_admit(self, req: AdmissionRequest, now: float) -> AdmissionVerdict:
+        """Solve the joint split on residual capacity; admit iff inside QoS."""
+        orch = self.orchestrator
+        if len(orch.sessions) >= self.max_sessions:
+            return AdmissionVerdict(
+                AdmissionKind.REJECT,
+                reason=f"session cap {self.max_sessions} reached",
+            )
+        state = orch.profiler.system_state()
+        table = self._fleet_table(state, now)
+        eff = orch.effective_state(state, _table=table)
+
+        [sol] = orch.splitter.solve_batch(
+            [SessionProblem(req.graph, req.workload,
+                            source_node=req.source_node,
+                            input_bytes_per_token=req.input_bytes_per_token)],
+            eff, max_units=orch.max_units,
+        )
+        sol = coalesce_same_node(sol)
+        if memory_violations(
+            req.graph, sol.boundaries, sol.assignment, eff
+        ).any():
+            sol = repair_capacity(req.graph, sol, eff, req.workload)
+            if memory_violations(
+                req.graph, sol.boundaries, sol.assignment, eff
+            ).any():
+                return AdmissionVerdict(
+                    AdmissionKind.REJECT,
+                    reason="insufficient residual memory for model weights",
+                )
+
+        lat = chain_latency(
+            req.graph, sol.boundaries, sol.assignment, eff, req.workload
+        )
+        if lat > req.qos.latency_slo_s:
+            return AdmissionVerdict(
+                AdmissionKind.REJECT, None, lat,
+                reason=(f"best feasible latency {lat*1e3:.0f}ms exceeds "
+                        f"{req.qos.name} SLO {req.qos.latency_slo_s*1e3:.0f}ms"),
+            )
+
+        # projected fleet utilization with the candidate placed: raw
+        # background + every live session's induced load + the candidate's own
+        own_rho = node_loads(
+            req.graph, sol.boundaries, sol.assignment, state, req.workload
+        ) - state.background_util
+        proj = state.background_util + table[1] + own_rho
+        if float(proj.max()) > self.rho_ceiling:
+            return AdmissionVerdict(
+                AdmissionKind.REJECT, None, lat,
+                reason=(f"projected node rho {proj.max():.2f} exceeds "
+                        f"ceiling {self.rho_ceiling:.2f}"),
+            )
+
+        sid = orch.admit(
+            req.graph, req.workload, source_node=req.source_node,
+            arch=req.arch, now=now, qos=req.qos, solution=sol,
+        )
+        return AdmissionVerdict(AdmissionKind.ACCEPT, sid, lat,
+                                reason="within SLO and rho ceiling",
+                                solution=sol)
+
+    # ------------------------------------------------------------------ #
+    def kpis(self) -> dict[str, float]:
+        c = dict(self.counters)
+        denom = max(1, c["requests"])
+        return {
+            **{k: float(v) for k, v in c.items()},
+            "accept_frac": c["accepted"] / denom,
+            "reject_frac": (c["rejected"] + c["expired"]) / denom,
+            "queued_now": float(len(self._queue)),
+        }

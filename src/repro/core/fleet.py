@@ -17,18 +17,27 @@ session *set* S = {s_1..s_m} sharing one C(t):
   Θ.L_max; utilization and bandwidth triggers are fleet-level (they fire for
   every session hosted on the affected node/link).  Cool-downs and the
   anti-thrash hysteresis are likewise per-session.
-* **Batched migrate-vs-resplit** — triggered sessions first attempt cheap
-  placement migration (Eq. 7, numpy chain DP).  All sessions whose best
-  migration still violates QoS are re-split TOGETHER in one
-  :class:`~repro.core.splitter.BatchedJointSplitter` call (Eq. 8 vmapped
-  over the batch), so a monitoring cycle costs one XLA dispatch no matter
-  how many sessions blow their budget at once.  Sessions being re-split are
-  removed from the shared-load picture for that solve (their load is being
-  re-planned); the survivors' load stays pinned.
+* **Batched monitoring hot path** — the per-cycle decision loop does ZERO
+  per-session Python cost evaluation or local search.  Every session's
+  current latency is priced in one jitted
+  :class:`~repro.core.fleet_eval.FleetCostEvaluator` call (each against its
+  own effective C(t)); all triggered sessions' placement migrations (Eq. 7)
+  resolve in one :class:`~repro.core.fleet_eval.BatchedMigrationSolver`
+  call; and the sessions whose best migration still violates QoS are
+  re-split TOGETHER in one :class:`~repro.core.splitter.BatchedJointSplitter`
+  call (Eq. 8 vmapped over the batch).  A monitoring cycle therefore costs
+  a fixed number of XLA dispatches no matter how many sessions blow their
+  budget at once.  Sessions being re-split are removed from the shared-load
+  picture for that solve (their load is being re-planned); the survivors'
+  load stays pinned.  The PR-1 per-session Python path is preserved as
+  ``use_batched_eval=False`` for A/B benchmarking
+  (``benchmarks/fleet_scaling.py --monitor``).
 
 Churn (session admit/depart) is first-class: :meth:`admit` solves an initial
 split against the current fleet load and deploys it through the shared
-Reconfiguration Broadcast; :meth:`depart` releases the session's capacity.
+Reconfiguration Broadcast (admission *pricing* — accept/defer/reject against
+the residual capacity — lives in :mod:`repro.core.admission`);
+:meth:`depart` releases the session's capacity.
 """
 
 from __future__ import annotations
@@ -45,7 +54,15 @@ from .cost_model import (
     Workload,
     chain_latency,
     link_loads,
+    memory_violations,
     segment_service_time,
+)
+from .fleet_eval import (
+    BatchedMigrationSolver,
+    FleetCostEvaluator,
+    PackedSessions,
+    pack_sessions,
+    packed_induced_loads,
 )
 from .graph import ModelGraph
 from .orchestrator import Decision, DecisionKind
@@ -54,6 +71,7 @@ from .profiling import CapacityProfiler
 from .splitter import BatchedJointSplitter, SessionProblem, coalesce_same_node
 from .triggers import (
     EWMA,
+    QoSClass,
     SolveThrottle,
     Thresholds,
     TriggerState,
@@ -73,6 +91,7 @@ class FleetSession:
     source_node: int = 0
     arch: str = ""
     input_bytes_per_token: float = 4.0
+    qos: QoSClass | None = None        # None → fleet-default Θ.L_max applies
     config: PartitionConfig | None = None
     ewma_latency: EWMA = field(default_factory=lambda: EWMA(0.3))
     t_admitted: float = 0.0
@@ -142,6 +161,12 @@ class FleetOrchestrator:
     # cycle in a degraded steady state
     solve_backoff_s: float = 5.0
     backoff_tol_frac: float = 0.10
+    # batched hot path (PR 2): one jitted evaluator call prices the fleet,
+    # one vmapped DP solves every triggered migration.  False restores the
+    # PR-1 per-session Python loop for A/B measurement.
+    use_batched_eval: bool = True
+    evaluator: FleetCostEvaluator = field(default_factory=FleetCostEvaluator)
+    migrator: BatchedMigrationSolver = field(default_factory=BatchedMigrationSolver)
 
     sessions: dict[int, FleetSession] = field(default_factory=dict)
     decisions: list[FleetDecision] = field(default_factory=list)
@@ -165,6 +190,18 @@ class FleetOrchestrator:
             tot_link += link_rho
             tot_w += wb
         return per, tot_node, tot_link, tot_w
+
+    def _fold_loads(self, state: SystemState, node, link, wb):
+        """Derate capacities by induced load — THE effective-C(t) formula.
+
+        Shared by the scalar :meth:`effective_state` and the batched hot
+        path (arguments broadcast: ``(n,)`` rows or ``(B, n)`` batches), so
+        the two can never drift apart.  Returns ``(bg, link_bw, mem)``.
+        """
+        bg = np.clip(state.background_util + node, 0.0, 0.99)
+        bw = state.link_bw * np.clip(1.0 - link, self.bw_floor_frac, 1.0)
+        mem = np.maximum(0.0, state.mem_bytes - wb)
+        return bg, bw, mem
 
     def effective_state(
         self,
@@ -192,9 +229,9 @@ class FleetOrchestrator:
                 link -= per[sid][1]
                 wb -= per[sid][2]
         eff = state.copy()
-        eff.background_util = np.clip(eff.background_util + node, 0.0, 0.99)
-        eff.link_bw = eff.link_bw * np.clip(1.0 - link, self.bw_floor_frac, 1.0)
-        eff.mem_bytes = np.maximum(0.0, eff.mem_bytes - wb)
+        eff.background_util, eff.link_bw, eff.mem_bytes = self._fold_loads(
+            state, node, link, wb
+        )
         return eff
 
     # ------------------------------------------------------------------ #
@@ -208,25 +245,35 @@ class FleetOrchestrator:
         source_node: int = 0,
         arch: str = "",
         now: float = 0.0,
+        qos: QoSClass | None = None,
+        solution: Solution | None = None,
     ) -> int:
-        """Admit a session: solve its split against current fleet load, deploy."""
+        """Admit a session: solve its split against current fleet load, deploy.
+
+        ``solution`` short-circuits the solve — the admission controller has
+        already priced the session against the residual capacity and hands
+        the winning (split, placement) over so deployment never re-solves.
+        """
         sid = self._next_sid
         self._next_sid += 1
         sess = FleetSession(
             sid=sid, graph=graph, workload=workload, source_node=source_node,
-            arch=arch, t_admitted=now,
+            arch=arch, qos=qos, t_admitted=now,
             throttle=SolveThrottle(self.solve_backoff_s, self.backoff_tol_frac),
         )
-        state = self.profiler.system_state()
-        eff = self.effective_state(state)
-        [sol] = self.splitter.solve_batch(
-            [SessionProblem(graph, workload, source_node=source_node)],
-            eff, max_units=self.max_units,
-        )
-        sol = coalesce_same_node(sol)
-        sol = local_search(graph, sol, eff, workload,
-                           max_rounds=self.local_rounds)
-        sol = repair_capacity(graph, sol, eff, workload)
+        if solution is None:
+            state = self.profiler.system_state()
+            eff = self.effective_state(state)
+            [sol] = self.splitter.solve_batch(
+                [SessionProblem(graph, workload, source_node=source_node)],
+                eff, max_units=self.max_units,
+            )
+            sol = coalesce_same_node(sol)
+            sol = local_search(graph, sol, eff, workload,
+                               max_rounds=self.local_rounds)
+            sol = repair_capacity(graph, sol, eff, workload)
+        else:
+            sol = solution
         cfg = self.broadcast.rollout(
             sol.boundaries, sol.assignment,
             reason=f"admit session {sid}" + (f" ({arch})" if arch else ""),
@@ -284,8 +331,277 @@ class FleetOrchestrator:
         tot_w += new[2]
         per[sid] = new
 
+    def _session_thresholds(self, sess: FleetSession) -> Thresholds:
+        """Per-session Θ: the latency trigger tracks the tenant's QoS SLO."""
+        return self.thresholds.for_slo(
+            sess.qos.latency_slo_s if sess.qos is not None else None
+        )
+
     def step(self, now: float) -> FleetDecision:
         """Monitor every session, migrate cheap, batch-resplit the rest."""
+        if self.use_batched_eval:
+            return self._step_batched(now)
+        return self._step_legacy(now)
+
+    # -- batched hot path ---------------------------------------------- #
+    def _pack_fleet(self, sids: list[int]) -> PackedSessions:
+        """Current configs of ``sids`` as padded (B, K) tensors."""
+        return pack_sessions([
+            (
+                (s := self.sessions[sid]).graph,
+                s.config.boundaries,
+                s.config.assignment,
+                s.workload,
+                s.source_node,
+                s.input_bytes_per_token,
+            )
+            for sid in sids
+        ])
+
+    def _lat_py(self, sess: FleetSession, sol: Solution, state: SystemState,
+                table) -> float:
+        """Scalar re-price against the LIVE table (post-commit freshness)."""
+        eff = self.effective_state(state, exclude=(sess.sid,), _table=table)
+        return self._latency(sess, sol, eff)
+
+    def _mem_guard(
+        self, sess: FleetSession, sol: Solution, lat: float,
+        state: SystemState, table,
+    ) -> tuple[Solution, float]:
+        """Event-driven memory-feasibility guard before a commit.
+
+        The batched migration DP prices the additive surrogate, which has no
+        memory term; a candidate overflowing its hosts is repaired (the same
+        Eq. 4 repair the re-split branch applies) and re-priced scalar-side.
+        The check itself is O(K) numpy — the Python Φ machinery only runs
+        when a violation actually exists.
+        """
+        eff = self.effective_state(state, exclude=(sess.sid,), _table=table)
+        if memory_violations(
+            sess.graph, sol.boundaries, sol.assignment, eff
+        ).any():
+            sol = repair_capacity(sess.graph, sol, eff, sess.workload)
+            lat = self._latency(sess, sol, eff)
+        return sol, lat
+
+    def _step_batched(self, now: float) -> FleetDecision:
+        """One monitoring cycle with a constant number of XLA dispatches.
+
+        Structure mirrors :meth:`_step_legacy` (triggers → cool-down →
+        throttle → migrate → batched re-split → hysteresis → rollout), but
+        every per-session ``chain_latency``/``evaluate`` call and every
+        per-session migration DP + Φ local search is replaced by ONE batched
+        evaluator / solver invocation over the whole fleet.  Candidate
+        latencies are priced against the cycle-start load table; a session
+        committing *after* an earlier commit in the same cycle is re-priced
+        scalar-side against the refreshed table so two overloaded sessions
+        never chase the same idle node (the legacy path's herd guard).
+        """
+        t0 = time.perf_counter()
+        state = self.profiler.system_state()
+        sids = list(self.sessions)
+        per_session: dict[int, Decision] = {}
+        if not sids:
+            fd = FleetDecision(t=now, per_session={}, solver_time_s=0.0,
+                               n_keep=0, n_migrate=0, n_resplit=0, n_cooldown=0)
+            self.decisions.append(fd)
+            return fd
+
+        packed = self._pack_fleet(sids)
+        node_r, link_r, wb = packed_induced_loads(packed, state)
+        tot_node = node_r.sum(axis=0)
+        tot_link = link_r.sum(axis=0)
+        tot_w = wb.sum(axis=0)
+        per = {sid: (node_r[i], link_r[i], wb[i]) for i, sid in enumerate(sids)}
+        table = (per, tot_node, tot_link, tot_w)
+
+        # per-session effective C(t): everyone else folded in as load (row i
+        # broadcasts through the same formula effective_state uses)
+        bg_eff, link_eff, mem_eff = self._fold_loads(
+            state,
+            tot_node[None, :] - node_r,
+            tot_link[None, :, :] - link_r,
+            tot_w[None, :] - wb,
+        )
+        cur_lat, _, _ = self.evaluator.evaluate_batch(
+            packed, bg=bg_eff, link_bw=link_eff, mem_bytes=mem_eff,
+            state=state, weights=self.weights,
+        )
+
+        # fleet-level trigger vectors (cycle-start snapshot)
+        util_vec = np.clip(state.background_util + tot_node, 0, 2)
+        eff_bw_all = state.link_bw * np.clip(
+            1.0 - tot_link, self.bw_floor_frac, 1.0
+        )
+
+        triggered: list[int] = []            # row indices into ``packed``
+        reasons_by_row: dict[int, tuple[str, ...]] = {}
+        for i, sid in enumerate(sids):
+            sess = self.sessions[sid]
+            sess.ewma_latency.update(float(cur_lat[i]))
+            max_util, min_bw = self._session_env(sess, util_vec, eff_bw_all)
+            env = TriggerState(
+                ewma_latency_s=sess.ewma_latency.get(0.0),
+                max_node_util=max_util,
+                min_link_bw_bps=min_bw,
+            )
+            th = self._session_thresholds(sess)
+            if not should_reconfigure(env, th):
+                per_session[sid] = Decision(
+                    DecisionKind.KEEP, sess.config, (), float(cur_lat[i]), 0.0
+                )
+                continue
+            reasons = tuple(env.reasons)
+            if now - sess.t_last_reconfig < th.cooldown_s:
+                per_session[sid] = Decision(
+                    DecisionKind.COOLDOWN, sess.config, reasons,
+                    float(cur_lat[i]), 0.0,
+                )
+                continue
+            if sess.throttle.should_skip(env, now):
+                per_session[sid] = Decision(
+                    DecisionKind.KEEP, sess.config, reasons,
+                    float(cur_lat[i]), 0.0,
+                )
+                continue
+            triggered.append(i)
+            reasons_by_row[i] = reasons
+
+        resplit_rows: list[tuple[int, Solution, float]] = []  # (row, mig, lat)
+        dirty = False                       # any commit this cycle?
+        if triggered:
+            sub = packed.rows(triggered)
+            migs = self.migrator.solve_batch(
+                sub, bg=bg_eff[triggered], link_bw=link_eff[triggered],
+                state=state,
+            )
+            mig_lat, _, _ = self.evaluator.evaluate_batch(
+                sub.with_assignment([m.assignment for m in migs]),
+                bg=bg_eff[triggered], link_bw=link_eff[triggered],
+                mem_bytes=mem_eff[triggered], state=state,
+                weights=self.weights,
+            )
+            for pos, i in enumerate(triggered):
+                sid = sids[i]
+                sess = self.sessions[sid]
+                th = self._session_thresholds(sess)
+                mig = coalesce_same_node(migs[pos])
+                if mig_lat[pos] > th.latency_max_s:
+                    resplit_rows.append((i, mig, float(mig_lat[pos])))
+                    per_session[sid] = Decision(
+                        DecisionKind.RESPLIT, sess.config, reasons_by_row[i],
+                        float(mig_lat[pos]), 0.0,
+                    )
+                    continue
+                c_lat, m_lat = float(cur_lat[i]), float(mig_lat[pos])
+                if dirty:  # re-price against the post-commit table
+                    c_lat = self._lat_py(
+                        sess, Solution(sess.config.boundaries,
+                                       sess.config.assignment, 0.0),
+                        state, table,
+                    )
+                    m_lat = self._lat_py(sess, mig, state, table)
+                mig, m_lat = self._mem_guard(sess, mig, m_lat, state, table)
+                if self._commit(sid, mig, m_lat, c_lat, DecisionKind.MIGRATE,
+                                reasons_by_row[i], per_session, now):
+                    self._refresh_loads(table, sid, state)
+                    dirty = True
+
+        # batched full re-split (Eq. 8): ONE vmapped DP for the failing set
+        if resplit_rows:
+            exclude = tuple(sids[i] for i, *_ in resplit_rows)
+            solve_state = self.effective_state(
+                state, exclude=exclude, _table=table
+            )
+            problems = [
+                SessionProblem(
+                    self.sessions[sids[i]].graph,
+                    self.sessions[sids[i]].workload,
+                    source_node=self.sessions[sids[i]].source_node,
+                    input_bytes_per_token=(
+                        self.sessions[sids[i]].input_bytes_per_token
+                    ),
+                )
+                for i, *_ in resplit_rows
+            ]
+            sols = self.splitter.solve_batch(
+                problems, solve_state, max_units=self.max_units
+            )
+            rs_sols: list[Solution] = []
+            rs_items = []
+            for (i, _, _), rs in zip(resplit_rows, sols):
+                sess = self.sessions[sids[i]]
+                rs = coalesce_same_node(rs)
+                # memory repair only when actually violated (event-driven;
+                # the hot path stays free of Python Φ search)
+                eff_i = self.effective_state(
+                    state, exclude=(sess.sid,), _table=table
+                )
+                if memory_violations(
+                    sess.graph, rs.boundaries, rs.assignment, eff_i
+                ).any():
+                    rs = repair_capacity(sess.graph, rs, eff_i, sess.workload)
+                rs_sols.append(rs)
+                rs_items.append((
+                    sess.graph, rs.boundaries, rs.assignment, sess.workload,
+                    sess.source_node, sess.input_bytes_per_token,
+                ))
+            rows = [i for i, *_ in resplit_rows]
+            rs_lat, _, _ = self.evaluator.evaluate_batch(
+                pack_sessions(rs_items, min_k=packed.max_segs), bg=bg_eff[rows],
+                link_bw=link_eff[rows], mem_bytes=mem_eff[rows], state=state,
+                weights=self.weights,
+            )
+            for pos, (i, mig, m_lat) in enumerate(resplit_rows):
+                sid = sids[i]
+                sess = self.sessions[sid]
+                rs, r_lat = rs_sols[pos], float(rs_lat[pos])
+                c_lat = float(cur_lat[i])
+                if dirty:
+                    # earlier commits this cycle moved the cost surface:
+                    # re-price BOTH candidates (and the incumbent) against
+                    # the refreshed table so the migrate-vs-resplit choice
+                    # is not biased toward a stale price
+                    m_lat = self._lat_py(sess, mig, state, table)
+                    r_lat = self._lat_py(sess, rs, state, table)
+                    c_lat = self._lat_py(
+                        sess, Solution(sess.config.boundaries,
+                                       sess.config.assignment, 0.0),
+                        state, table,
+                    )
+                kind, chosen, chosen_lat = DecisionKind.RESPLIT, rs, r_lat
+                if m_lat < r_lat:
+                    kind, chosen, chosen_lat = DecisionKind.MIGRATE, mig, m_lat
+                if kind is DecisionKind.MIGRATE:
+                    # the re-split candidate was memory-guarded before
+                    # pricing; a winning migration needs the same check
+                    chosen, chosen_lat = self._mem_guard(
+                        sess, chosen, chosen_lat, state, table
+                    )
+                if self._commit(sid, chosen, chosen_lat, c_lat, kind,
+                                reasons_by_row[i], per_session, now):
+                    self._refresh_loads(table, sid, state)
+                    dirty = True
+
+        solver_time = time.perf_counter() - t0
+        kinds = [d.kind for d in per_session.values()]
+        fd = FleetDecision(
+            t=now,
+            per_session=per_session,
+            solver_time_s=solver_time,
+            n_keep=sum(k == DecisionKind.KEEP for k in kinds),
+            n_migrate=sum(k == DecisionKind.MIGRATE for k in kinds),
+            n_resplit=sum(k == DecisionKind.RESPLIT for k in kinds),
+            n_cooldown=sum(k == DecisionKind.COOLDOWN for k in kinds),
+        )
+        self.decisions.append(fd)
+        for sid, d in per_session.items():
+            self.sessions[sid].decisions.append(d)
+        return fd
+
+    # -- PR-1 per-session path (kept for A/B benchmarking) ------------- #
+    def _step_legacy(self, now: float) -> FleetDecision:
+        """Monitor every session with per-session Python pricing (PR-1)."""
         t0 = time.perf_counter()
         state = self.profiler.system_state()
         table = self.load_table(state)
@@ -311,13 +627,16 @@ class FleetOrchestrator:
                 max_node_util=max_util,
                 min_link_bw_bps=min_bw,
             )
-            if not should_reconfigure(env, self.thresholds):
+            # per-session Θ (QoS SLO), matching the batched path so the
+            # use_batched_eval A/B compares implementations, not policies
+            th = self._session_thresholds(sess)
+            if not should_reconfigure(env, th):
                 per_session[sid] = Decision(
                     DecisionKind.KEEP, sess.config, (), cur_lat, 0.0
                 )
                 continue
             reasons = tuple(env.reasons)
-            if now - sess.t_last_reconfig < self.thresholds.cooldown_s:
+            if now - sess.t_last_reconfig < th.cooldown_s:
                 per_session[sid] = Decision(
                     DecisionKind.COOLDOWN, sess.config, reasons, cur_lat, 0.0
                 )
@@ -338,7 +657,7 @@ class FleetOrchestrator:
                 max_rounds=self.local_rounds, allow_resplit=False,
             )
             mig_lat = self._latency(sess, mig, eff)
-            if mig_lat > self.thresholds.latency_max_s:
+            if mig_lat > th.latency_max_s:
                 # queue for the batched full re-split (Eq. 8)
                 resplit_pool.append((sid, mig, mig_lat, eff))
                 per_session[sid] = Decision(

@@ -438,14 +438,36 @@ class SplitRevision:
         *,
         source_node: int = 0,
     ) -> None:
-        """Pre-compile the jitted DP for this problem shape.
+        """Pre-compile the jitted DP for this problem shape (DP only).
 
         Called at deployment time (off the monitoring path) so the first
         triggered re-split never pays XLA compilation inside its measured
         decision cycle — steady-state ``solver_time_s`` then reflects the
         paper's ≤10 ms warm-solve budget from the very first decision.
+
+        Only the jitted DP is traced: the Python Φ local search that
+        ``revise`` runs afterwards compiles nothing, so invoking it here was
+        pure deploy-time waste on large graphs (it hill-climbed a placement
+        that was immediately thrown away).  The solve happens on the same
+        candidate-pruned state ``revise`` would use, so the compiled
+        (L, n) shape is exactly the one the first real revision hits.
         """
-        self.revise(graph, state, wl, source_node=source_node, use_jax=True)
+        _, sub, sub_source = self._pruned(state, source_node)
+        self._jax_dp.solve(
+            graph, sub, wl, source_node=sub_source, max_units=self.max_units
+        )
+
+    def _pruned(self, state: SystemState, source_node: int):
+        """Candidate-node pruning shared by ``warmup`` and ``revise`` — one
+        copy, so the warm-compiled (L, n) shape is always the shape the
+        first real revision solves."""
+        from .placement import restrict_state, select_candidate_nodes
+
+        idx = select_candidate_nodes(
+            state, k=self.max_nodes, source_node=source_node
+        )
+        sub = restrict_state(state, idx) if len(idx) < state.num_nodes else state
+        return idx, sub, int(np.searchsorted(idx, source_node))
 
     def revise(
         self,
@@ -456,14 +478,8 @@ class SplitRevision:
         source_node: int = 0,
         use_jax: bool = True,
     ) -> Solution:
-        from .placement import restrict_state, select_candidate_nodes
-
         # fleet-scale pruning: DP over the k most promising nodes only
-        idx = select_candidate_nodes(
-            state, k=self.max_nodes, source_node=source_node
-        )
-        sub = restrict_state(state, idx) if len(idx) < state.num_nodes else state
-        sub_source = int(np.searchsorted(idx, source_node))
+        idx, sub, sub_source = self._pruned(state, source_node)
 
         solver = (
             functools.partial(self._jax_dp.solve) if use_jax else solve_joint_dp

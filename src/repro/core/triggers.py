@@ -1,11 +1,13 @@
-"""Trigger thresholds Θ and ShouldReconfigure (paper Table I + Alg. 1)."""
+"""Trigger thresholds Θ, QoS classes, and ShouldReconfigure (paper Table I)."""
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 __all__ = ["Thresholds", "TriggerState", "should_reconfigure", "EWMA",
-           "SolveThrottle"]
+           "SolveThrottle", "QoSClass", "QOS_INTERACTIVE", "QOS_STANDARD",
+           "QOS_BATCH", "QOS_CLASSES"]
 
 
 @dataclass(frozen=True)
@@ -17,6 +19,38 @@ class Thresholds:
     bandwidth_min_bps: float = 50e6 / 8  # 50 Mbps in bytes/s
     cooldown_s: float = 30.0            # reconfiguration rate limit
     ewma_alpha: float = 0.3             # smoothing for the latency EWMA
+
+    def for_slo(self, latency_slo_s: float | None) -> "Thresholds":
+        """Per-session Θ: the latency trigger tracks the session's QoS SLO.
+
+        The util/bandwidth triggers stay fleet-level (they describe the
+        infrastructure, not the tenant); only L_max is tenant-scoped.
+        """
+        if latency_slo_s is None or latency_slo_s == self.latency_max_s:
+            return self
+        return dataclasses.replace(self, latency_max_s=latency_slo_s)
+
+
+@dataclass(frozen=True)
+class QoSClass:
+    """A tenant service class: latency SLO + admission-queue patience.
+
+    Admission control prices an arriving session's best feasible latency
+    against ``latency_slo_s`` (cf. arXiv:2504.03668 — admit only what the
+    residual capacity can serve inside the class SLO); a session that cannot
+    be admitted now may wait in the defer queue for up to
+    ``defer_timeout_s`` before it is rejected outright.
+    """
+
+    name: str = "standard"
+    latency_slo_s: float = 1.0
+    defer_timeout_s: float = 10.0
+
+
+QOS_INTERACTIVE = QoSClass("interactive", latency_slo_s=0.25, defer_timeout_s=2.0)
+QOS_STANDARD = QoSClass("standard", latency_slo_s=1.0, defer_timeout_s=10.0)
+QOS_BATCH = QoSClass("batch", latency_slo_s=4.0, defer_timeout_s=30.0)
+QOS_CLASSES = {q.name: q for q in (QOS_INTERACTIVE, QOS_STANDARD, QOS_BATCH)}
 
 
 class EWMA:

@@ -12,7 +12,6 @@ heads/ff-over-TP; with no context it is a no-op (single-device tests).
 from __future__ import annotations
 
 from contextlib import contextmanager
-from dataclasses import dataclass
 from typing import Any
 
 import jax

@@ -17,9 +17,12 @@ with periodic saturation events (other tenants of the base station).
 Beyond the paper: :func:`build_fleet_scenario` instantiates the SAME topology
 in multi-session mode — Poisson session churn with heterogeneous model
 configs drawn from ``repro.configs`` (rendered to analytic
-:class:`ModelGraph` chains by the bundle API's ``model_graph()``) and a
+:class:`ModelGraph` chains by the bundle API's ``model_graph()``), a
 :class:`~repro.core.fleet.FleetOrchestrator` arbitrating the shared fleet
-capacity.
+capacity, and a :class:`~repro.core.admission.FleetAdmissionController`
+pricing each arrival's achievable latency against its QoS class before it
+may join (disable with ``FleetSimConfig(admission=False)`` for the PR-1
+blind-admit behavior).
 """
 
 from __future__ import annotations
@@ -28,6 +31,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..core.admission import FleetAdmissionController
 from ..core.broadcast import InProcessAgent, ReconfigurationBroadcast
 from ..core.cost_model import CostWeights, SystemState, Workload
 from ..core.graph import ModelGraph, make_transformer_graph
@@ -229,7 +233,11 @@ def build_fleet_scenario(
     p: FleetScenarioParams,
     *,
     thresholds: Thresholds | None = None,
+    admission: FleetAdmissionController | None = None,
 ) -> FleetSimulator:
+    """Multi-session §IV scenario; ``admission`` overrides the controller the
+    simulator would otherwise build from ``p.sim`` (custom rho ceilings /
+    queue depths in tests and sweeps)."""
     m = p.mec
     state = base_system_state(m)
     util_traces, bw_traces = mec_traces(m, p.sim.duration_s + 10)
@@ -255,4 +263,5 @@ def build_fleet_scenario(
         bw_traces=bw_traces,
         orchestrator=orch,
         config=p.sim,
+        admission=admission,
     )

@@ -13,19 +13,27 @@ Two modes share the trace plumbing:
 
 * :class:`EdgeSimulator` — the paper's single-session scenario (§IV).
 * :class:`FleetSimulator` — multi-session mode: Poisson session churn
-  (arrivals with exponential lifetimes, heterogeneous model graphs), every
-  session priced against the fleet state in which the OTHER sessions appear
-  as load, and a :class:`~repro.core.fleet.FleetOrchestrator` running
-  batched migrate-vs-resplit cycles.
+  (arrivals with exponential lifetimes, heterogeneous model graphs and QoS
+  classes), every session priced against the fleet state in which the OTHER
+  sessions appear as load, a :class:`~repro.core.fleet.FleetOrchestrator`
+  running batched migrate-vs-resplit cycles, and a
+  :class:`~repro.core.admission.FleetAdmissionController` pricing each
+  arrival's achievable latency against residual capacity before it may join
+  (accept / defer / reject, surfaced in the tick metrics and KPIs).
 """
 
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
+from ..core.admission import (
+    AdmissionKind,
+    AdmissionRequest,
+    FleetAdmissionController,
+)
 from ..core.cost_model import (
     SystemState,
     Workload,
@@ -38,6 +46,7 @@ from ..core.fleet import FleetOrchestrator
 from ..core.graph import ModelGraph
 from ..core.orchestrator import AdaptiveOrchestrator, DecisionKind
 from ..core.profiling import CapacityProfiler, NodeSample
+from ..core.triggers import QOS_CLASSES, QoSClass
 from .traces import Trace
 
 __all__ = [
@@ -221,12 +230,21 @@ class FleetSimConfig:
     seed: int = 0
     session_arrival_per_s: float = 0.2    # Poisson session-arrival rate
     mean_lifetime_s: float = 60.0         # exponential session lifetime
-    max_sessions: int = 32                # admission cap (reject above)
+    max_sessions: int = 32                # hard session cap
     initial_sessions: int = 2             # sessions present at t=0
     arrival_rate_range: tuple[float, float] = (0.3, 2.0)   # per-session λ
     tokens_in_range: tuple[int, int] = (16, 96)     # inclusive bounds
     tokens_out_range: tuple[int, int] = (4, 16)
     ingress_nodes: tuple[int, ...] = (0, 1, 2)  # where sessions enter
+    # admission control (PR 2): price an arrival's best feasible latency
+    # against its QoS class before it joins; False restores the PR-1
+    # cap-only behavior (admit blindly until max_sessions)
+    admission: bool = True
+    rho_ceiling: float = 1.0              # projected max node rho bound
+    admission_queue_cap: int = 16         # defer-queue depth
+    qos_mix: tuple[tuple[str, float], ...] = (
+        ("interactive", 0.2), ("standard", 0.55), ("batch", 0.25),
+    )
 
 
 @dataclass
@@ -238,10 +256,11 @@ class FleetTickMetrics:
     node_rho: np.ndarray           # background + ALL sessions' induced load
     admitted: int                  # session arrivals this tick
     departed: int
-    rejected: int                  # refused by the admission cap
+    rejected: int                  # refused outright (incl. defer expiry)
     n_migrate: int = 0
     n_resplit: int = 0
     solver_time_s: float = 0.0
+    deferred: int = 0              # parked in the admission queue this tick
 
     @property
     def mean_latency_s(self) -> float:
@@ -266,6 +285,9 @@ class FleetSimResult:
         viol = np.array([m.qos_violation_frac for m in w])
         rho = np.stack([m.node_rho for m in w])
         span = max(1e-9, t1 - t0)
+        admitted = sum(m.admitted for m in w)
+        rejected = sum(m.rejected for m in w)
+        deferred = sum(m.deferred for m in w)
         return {
             "mean_latency_s": float(pool.mean()),
             "p95_latency_s": float(np.percentile(pool, 95)),
@@ -278,6 +300,11 @@ class FleetSimResult:
             "mean_solver_ms": 1e3 * float(np.mean(
                 [m.solver_time_s for m in w if m.solver_time_s > 0] or [0.0]
             )),
+            # admission KPIs (accept/reject/defer within the window)
+            "admitted_per_s": admitted / span,
+            "rejected_per_s": rejected / span,
+            "deferred_per_s": deferred / span,
+            "admit_frac": admitted / max(1, admitted + rejected),
         }
 
 
@@ -303,6 +330,7 @@ class FleetSimulator:
         bw_traces: dict[tuple[int, int], Trace],
         orchestrator: FleetOrchestrator,
         config: FleetSimConfig = FleetSimConfig(),
+        admission: FleetAdmissionController | None = None,
     ):
         self.base_state = base_state
         self.catalog = catalog
@@ -311,9 +339,30 @@ class FleetSimulator:
         self.orch = orchestrator
         self.cfg = config
         self.rng = np.random.default_rng(config.seed)
+        if admission is None and config.admission:
+            admission = FleetAdmissionController(
+                orchestrator,
+                max_sessions=config.max_sessions,
+                rho_ceiling=config.rho_ceiling,
+                queue_cap=config.admission_queue_cap,
+            )
+        self.admission = admission
+        mix = config.qos_mix
+        self._qos_classes = tuple(QOS_CLASSES[name] for name, _ in mix)
+        w = np.array([float(p) for _, p in mix])
+        self._qos_probs = w / w.sum()
 
     # ------------------------------------------------------------------ #
-    def _draw_session(self) -> tuple[str, ModelGraph, Workload, int]:
+    def _draw_session(
+        self,
+    ) -> tuple[str, ModelGraph, Workload, int, QoSClass, float]:
+        """One arrival's full random tuple, INCLUDING its lifetime.
+
+        Every draw is consumed here, per arrival, regardless of the
+        admission outcome — so admission-on and admission-off runs of the
+        same seed see the identical arrival stream (seed-paired A/B), and
+        only the departure schedule differs through which sessions joined.
+        """
         cfg = self.cfg
         arch, graph = self.catalog[int(self.rng.integers(len(self.catalog)))]
         wl = Workload(
@@ -323,25 +372,47 @@ class FleetSimulator:
             arrival_rate=float(self.rng.uniform(*cfg.arrival_rate_range)),
         )
         src = int(cfg.ingress_nodes[int(self.rng.integers(len(cfg.ingress_nodes)))])
-        return arch, graph, wl, src
+        qos = self._qos_classes[
+            int(self.rng.choice(len(self._qos_classes), p=self._qos_probs))
+        ]
+        life = float(self.rng.exponential(cfg.mean_lifetime_s))
+        return arch, graph, wl, src, qos, life
 
     def run(self) -> FleetSimResult:
         cfg = self.cfg
         orch = self.orch
+        ctrl = self.admission
         ticks: list[FleetTickMetrics] = []
         log: list[tuple[float, str, int, str]] = []
         departures: list[tuple[float, int]] = []   # heap of (t_depart, sid)
+        pending_life: dict[int, float] = {}        # id(queued req) → lifetime
         next_monitor = 0.0
 
-        def _admit(t: float) -> bool:
-            if len(orch.sessions) >= cfg.max_sessions:
-                return False
-            arch, graph, wl, src = self._draw_session()
-            sid = orch.admit(graph, wl, source_node=src, arch=arch, now=t)
-            life = float(self.rng.exponential(cfg.mean_lifetime_s))
-            heapq.heappush(departures, (t + life, sid))
-            log.append((t, "admit", sid, arch))
-            return True
+        def _admit(t: float) -> str:
+            """One arrival through admission control; returns the outcome."""
+            arch, graph, wl, src, qos, life = self._draw_session()
+            if ctrl is None:  # PR-1 behavior: blind admit until the cap
+                if len(orch.sessions) >= cfg.max_sessions:
+                    log.append((t, "reject", -1, arch))
+                    return "reject"
+                sid = orch.admit(graph, wl, source_node=src, arch=arch,
+                                 now=t, qos=qos)
+                heapq.heappush(departures, (t + life, sid))
+                log.append((t, "admit", sid, arch))
+                return "admit"
+            req = AdmissionRequest(graph, wl, source_node=src, arch=arch,
+                                   qos=qos, t_submit=t)
+            v = ctrl.request(req, now=t)
+            if v.kind is AdmissionKind.ACCEPT:
+                heapq.heappush(departures, (t + life, v.sid))
+                log.append((t, "admit", v.sid, arch))
+                return "admit"
+            if v.kind is AdmissionKind.DEFER:
+                pending_life[id(req)] = life
+                log.append((t, "defer", -1, arch))
+                return "defer"
+            log.append((t, "reject", -1, arch))
+            return "reject"
 
         # admissions plan against C(0) WITH traces applied (at t=0 the home
         # MEC may already be in a saturation spike), not the construction-
@@ -364,24 +435,44 @@ class FleetSimulator:
                     sess = orch.depart(sid)
                     log.append((t, "depart", sid, sess.arch))
                     departed += 1
-            admitted = rejected = 0
+            admitted = rejected = deferred = 0
+            # retry the defer queue first — departures may have freed capacity
+            if ctrl is not None:
+                for req, v in ctrl.poll(t):
+                    life = pending_life.pop(
+                        id(req), float(cfg.mean_lifetime_s)
+                    )
+                    if v.kind is AdmissionKind.ACCEPT:
+                        heapq.heappush(departures, (t + life, v.sid))
+                        log.append((t, "admit", v.sid, req.arch))
+                        admitted += 1
+                    else:  # defer timeout → final reject
+                        log.append((t, "expire", -1, req.arch))
+                        rejected += 1
             for _ in range(int(self.rng.poisson(
                     cfg.session_arrival_per_s * cfg.tick_s))):
-                if _admit(t):
+                outcome = _admit(t)
+                if outcome == "admit":
                     admitted += 1
+                elif outcome == "defer":
+                    deferred += 1
                 else:
                     rejected += 1
-                    log.append((t, "reject", -1, ""))
 
             # ---- price every session against the shared fleet state ----
             table = orch.load_table(state)
             lats = []
+            slos = []
             for sid, sess in orch.sessions.items():
                 eff = orch.effective_state(state, exclude=(sid,), _table=table)
                 lats.append(chain_latency(
                     sess.graph, sess.config.boundaries, sess.config.assignment,
                     eff, sess.workload,
                 ))
+                slos.append(
+                    sess.qos.latency_slo_s if sess.qos is not None
+                    else orch.thresholds.latency_max_s
+                )
             rho = np.clip(state.background_util + table[1], 0.0, None)
 
             # ---- feed Monitoring & CP ----
@@ -404,17 +495,18 @@ class FleetSimulator:
                 solver_t = fd.solver_time_s
 
             lat_arr = np.asarray(lats)
-            lmax = orch.thresholds.latency_max_s
+            slo_arr = np.asarray(slos)
             ticks.append(FleetTickMetrics(
                 t=t,
                 n_sessions=len(orch.sessions),
                 latencies=lat_arr,
                 qos_violation_frac=(
-                    float((lat_arr > lmax).mean()) if lats else 0.0
+                    float((lat_arr > slo_arr).mean()) if lats else 0.0
                 ),
                 node_rho=rho,
                 admitted=admitted, departed=departed, rejected=rejected,
                 n_migrate=n_mig, n_resplit=n_rs, solver_time_s=solver_t,
+                deferred=deferred,
             ))
             t = round(t + cfg.tick_s, 9)
         return FleetSimResult(ticks, log)

@@ -10,7 +10,6 @@ compressor on the DCN/pod axis in training.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

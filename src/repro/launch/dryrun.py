@@ -33,7 +33,7 @@ import numpy as np
 sys.path.insert(0, str(Path(__file__).resolve().parents[3]))  # for benchmarks/
 from benchmarks.hlo_analysis import analyze_hlo  # noqa: E402
 
-from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, LONG_CONTEXT_ARCHS, get_bundle  # noqa: E402
+from repro.configs import ASSIGNED_ARCHS, LONG_CONTEXT_ARCHS, get_bundle  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models.api import SHAPES  # noqa: E402
 from repro.training.train_step import make_serve_fns, make_train_step  # noqa: E402

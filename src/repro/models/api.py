@@ -17,7 +17,6 @@ import numpy as np
 
 from ..core.graph import GraphNode, ModelGraph
 from . import griffin, mamba2, transformer, transformer_serve
-from .common import cast_tree
 
 __all__ = ["ModelBundle", "bundle_for", "softmax_xent", "chunked_softmax_xent",
            "SHAPES", "ShapeSpec"]

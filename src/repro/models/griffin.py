@@ -13,7 +13,6 @@ kernel in ``repro.kernels.rglru``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

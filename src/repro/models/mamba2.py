@@ -17,7 +17,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .common import KeyGen, Params, activation, apply_norm, dense_init, embed_init, norm_params
 

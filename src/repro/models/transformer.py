@@ -18,7 +18,7 @@ models produce O(1)-size HLO and compile quickly; per-layer schedule values
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 from typing import Any
 
@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..distributed.context import constrain
-from .attention import chunked_attention, decode_attention, update_kv_cache
+from .attention import chunked_attention
 from .common import (
     KeyGen,
     Params,

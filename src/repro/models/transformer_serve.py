@@ -17,13 +17,11 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .attention import decode_attention, update_kv_cache
 from .common import Params, apply_norm, apply_rope, softcap
 from .transformer import (
     TransformerConfig,
-    attn_forward,
     block_forward,
     dense_ffn,
     embed_tokens,
@@ -49,11 +47,14 @@ def cache_spec(cfg: TransformerConfig, batch: int, max_len: int,
 
     if cfg.mla is not None:
         m = cfg.mla
-        mk = lambda n: {"ckv": sds(n, batch, max_len, m.kv_lora),
-                        "kr": sds(n, batch, max_len, m.rope_head_dim)}
+
+        def mk(n):
+            return {"ckv": sds(n, batch, max_len, m.kv_lora),
+                    "kr": sds(n, batch, max_len, m.rope_head_dim)}
     else:
-        mk = lambda n: {"k": sds(n, batch, max_len, cfg.n_kv, cfg.hd),
-                        "v": sds(n, batch, max_len, cfg.n_kv, cfg.hd)}
+        def mk(n):
+            return {"k": sds(n, batch, max_len, cfg.n_kv, cfg.hd),
+                    "v": sds(n, batch, max_len, cfg.n_kv, cfg.hd)}
     out = {"blocks": mk(n_scan)}
     if n_lead:
         out["lead"] = mk(n_lead)

@@ -19,7 +19,6 @@ from dataclasses import dataclass, field
 from typing import Any
 
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.broadcast import PartitionConfig
 from ..core.graph import ModelGraph

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import jax.numpy as jnp
 
 from ..kernels import ops as kops
 

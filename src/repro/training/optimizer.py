@@ -40,8 +40,9 @@ def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def adamw_init(params: Any) -> dict:
-    zeros = lambda p: jax.tree_util.tree_map(
-        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    def zeros(p):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p)
     return {"mu": zeros(params), "nu": zeros(params),
             "step": jnp.zeros((), jnp.int32)}
 

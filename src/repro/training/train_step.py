@@ -10,7 +10,6 @@ collective itself is XLA's to schedule).
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any
 
@@ -22,7 +21,6 @@ from ..distributed.context import activation_mesh
 from ..distributed.sharding import (
     batch_axes,
     cache_pspecs,
-    dp_axes,
     input_pspecs,
     param_pspecs,
     strip_dp,

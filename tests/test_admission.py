@@ -1,0 +1,166 @@
+"""Admission control: rho-ceiling rejection + re-admission once capacity
+frees, SLO pricing, defer queue semantics, and the admission-enabled fleet
+simulator staying out of saturation."""
+
+import numpy as np
+
+from repro.core import (
+    AdmissionKind,
+    AdmissionRequest,
+    FleetAdmissionController,
+    FleetOrchestrator,
+    InProcessAgent,
+    QOS_STANDARD,
+    QoSClass,
+    ReconfigurationBroadcast,
+    SystemState,
+    Thresholds,
+    Workload,
+)
+from repro.core.graph import GraphNode, ModelGraph
+from repro.core.profiling import CapacityProfiler
+from repro.edgesim import FleetScenarioParams, FleetSimConfig, build_fleet_scenario
+
+# patient QoS class with a latency SLO so loose that the rho ceiling is the
+# binding admission constraint
+_PATIENT = QoSClass("patient", latency_slo_s=1e3, defer_timeout_s=0.0)
+
+
+def _fleet(n=2, util=0.1):
+    bw = np.full((n, n), 1e9)
+    np.fill_diagonal(bw, np.inf)
+    state = SystemState(
+        flops_per_s=np.full(n, 1e13),
+        mem_bytes=np.full(n, 40e9),
+        background_util=np.full(n, util),
+        trusted=np.full(n, True),
+        link_bw=bw,
+        link_lat=np.full((n, n), 1e-3) * (1 - np.eye(n)),
+        mem_bw=np.full(n, 5e11),
+    )
+    orch = FleetOrchestrator(
+        profiler=CapacityProfiler(base_state=state),
+        broadcast=ReconfigurationBroadcast(
+            [InProcessAgent(i) for i in range(n)]
+        ),
+        thresholds=Thresholds(cooldown_s=1.0),
+    )
+    return orch, state
+
+
+def _graph(units=6, flops=2e10, act_bytes=8e3):
+    return ModelGraph("m", [
+        GraphNode(f"u{i}", flops, 5e8, act_bytes) for i in range(units)
+    ])
+
+
+# one session ≈ 0.8 offered load: λ · (t_in·F/rate + t_out·max(F/rate, W/bw))
+# ≈ 1.2 · (0.576 + 0.096) ≈ 0.81 — one fits a node, two do not.  Huge
+# boundary activations make splitting prohibitively expensive, so the DP
+# keeps each session on a single node and the load math stays predictable.
+_HEAVY_WL = Workload(tokens_in=48, tokens_out=8, arrival_rate=1.2)
+
+
+def _heavy_graph():
+    return _graph(act_bytes=1e9)
+
+
+def test_rejects_over_rho_ceiling_then_admits_after_departure():
+    """A session that would push some node's projected rho past 1 is refused;
+    the SAME request is admitted once a departure frees capacity."""
+    orch, state = _fleet()
+    ctrl = FleetAdmissionController(orch, max_sessions=16, rho_ceiling=1.0)
+    g = _heavy_graph()
+    wl = _HEAVY_WL
+    first = ctrl.request(AdmissionRequest(g, wl, qos=_PATIENT), now=0.0)
+    assert first.kind is AdmissionKind.ACCEPT
+    second = ctrl.request(AdmissionRequest(g, wl, qos=_PATIENT), now=1.0)
+    assert second.kind is AdmissionKind.ACCEPT
+    # fleet is now near-full: the third pushes projected max rho over 1.0
+    third = ctrl.request(AdmissionRequest(g, wl, qos=_PATIENT), now=2.0)
+    assert third.kind is AdmissionKind.REJECT
+    assert "rho" in third.reason
+    # capacity frees -> the identical request is admitted
+    orch.depart(second.sid)
+    retry = ctrl.request(AdmissionRequest(g, wl, qos=_PATIENT), now=3.0)
+    assert retry.kind is AdmissionKind.ACCEPT
+    assert ctrl.counters["accepted"] == 3
+    assert ctrl.counters["rejected"] == 1
+
+
+def test_rejects_on_latency_slo():
+    """A tight-SLO session is refused with an SLO-pricing reason even when
+    the fleet has rho headroom."""
+    orch, _ = _fleet(util=0.3)
+    ctrl = FleetAdmissionController(orch, rho_ceiling=10.0)
+    tight = QoSClass("tight", latency_slo_s=1e-4, defer_timeout_s=0.0)
+    v = ctrl.request(
+        AdmissionRequest(_graph(), Workload(48, 8, 0.5), qos=tight), now=0.0
+    )
+    assert v.kind is AdmissionKind.REJECT
+    assert "SLO" in v.reason
+    assert v.predicted_latency_s > 1e-4
+
+
+def test_defer_queue_admits_on_poll_and_expires():
+    orch, _ = _fleet()
+    ctrl = FleetAdmissionController(orch, max_sessions=16, rho_ceiling=1.0)
+    g = _heavy_graph()
+    wl = _HEAVY_WL
+    patient_q = QoSClass("patient-q", latency_slo_s=1e3, defer_timeout_s=5.0)
+    sids = [ctrl.request(AdmissionRequest(g, wl, qos=patient_q), now=0.0).sid
+            for _ in range(2)]
+    # full fleet: the next two requests are deferred, not rejected
+    d1 = ctrl.request(AdmissionRequest(g, wl, qos=patient_q), now=1.0)
+    d2 = ctrl.request(AdmissionRequest(g, wl, qos=patient_q), now=1.0)
+    assert d1.kind is AdmissionKind.DEFER and d2.kind is AdmissionKind.DEFER
+    assert ctrl.queued == 2
+    # nothing freed yet: poll admits nothing, queue intact (not yet expired)
+    assert ctrl.poll(2.0) == []
+    assert ctrl.queued == 2
+    # a departure frees one node's worth: exactly one queued request fits
+    orch.depart(sids[0])
+    events = ctrl.poll(3.0)
+    assert [v.kind for _, v in events] == [AdmissionKind.ACCEPT]
+    assert ctrl.queued == 1
+    assert ctrl.counters["accepted_from_queue"] == 1
+    # the survivor times out (deadline 1.0 + 5.0 < 7.0) -> final reject
+    events = ctrl.poll(7.0)
+    assert [v.kind for _, v in events] == [AdmissionKind.REJECT]
+    assert "timeout" in events[0][1].reason
+    assert ctrl.queued == 0
+    assert ctrl.counters["expired"] == 1
+
+
+def test_admitted_sessions_carry_qos_thresholds():
+    """QoS-tagged sessions trigger on their own SLO, not the fleet L_max."""
+    orch, _ = _fleet(util=0.2)
+    ctrl = FleetAdmissionController(orch, rho_ceiling=10.0)
+    v = ctrl.request(
+        AdmissionRequest(_graph(), Workload(32, 4, 0.5), qos=QOS_STANDARD),
+        now=0.0,
+    )
+    assert v.kind is AdmissionKind.ACCEPT
+    sess = orch.sessions[v.sid]
+    assert sess.qos is QOS_STANDARD
+    th = orch._session_thresholds(sess)
+    assert th.latency_max_s == QOS_STANDARD.latency_slo_s
+
+
+def test_fleet_sim_admission_bounds_saturation():
+    """Where the blind-admit fleet saturates (max_rho > 1), the priced fleet
+    stays bounded on the identical scenario/seed."""
+    def run(admission):
+        p = FleetScenarioParams(sim=FleetSimConfig(
+            duration_s=16.0, max_sessions=16, initial_sessions=2,
+            session_arrival_per_s=2.0, mean_lifetime_s=12.0, seed=5,
+            admission=admission,
+        ))
+        return build_fleet_scenario(p).run().kpis(4.0, 16.0)
+
+    blind = run(False)
+    priced = run(True)
+    assert priced["max_rho"] <= max(1.05, blind["max_rho"] - 0.1)
+    assert priced["p95_latency_s"] <= blind["p95_latency_s"]
+    # admission actually exercised: something was rejected or deferred
+    assert priced["rejected_per_s"] + priced["deferred_per_s"] > 0

@@ -9,7 +9,6 @@ from repro.core import (
     SystemState,
     Workload,
     brute_force_joint,
-    evaluate,
     greedy_placement,
     local_search,
     repair_capacity,

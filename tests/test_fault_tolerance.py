@@ -1,12 +1,9 @@
 """Fault drills: heartbeats, stragglers, elastic re-mesh, node-failure
 re-placement, kill/resume via the real training driver (subprocess)."""
 
-import json
 import subprocess
 import sys
-from pathlib import Path
 
-import numpy as np
 import pytest
 
 from repro.distributed import (

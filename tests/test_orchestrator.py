@@ -1,7 +1,5 @@
 """Alg. 1 semantics: triggers, cool-down, hysteresis, 2-phase broadcast."""
 
-import numpy as np
-
 from repro.core import (
     AdaptiveOrchestrator,
     CapacityProfiler,
@@ -10,7 +8,6 @@ from repro.core import (
     InProcessAgent,
     ReconfigurationBroadcast,
     SplitRevision,
-    SystemState,
     Thresholds,
     TriggerState,
     Workload,
@@ -109,3 +106,30 @@ def test_segments_for_node():
     assert cfg.segments_for(0) == [(0, 2), (5, 9)]
     assert cfg.segments_for(2) == [(2, 5)]
     assert cfg.segments_for(1) == []
+
+
+def test_warmup_is_dp_only(monkeypatch):
+    """Deploy-time warmup compiles the jitted DP WITHOUT running the Python
+    Φ local search (whose result a warmup would throw away anyway)."""
+    import repro.core.splitter as splitter_mod
+
+    calls = {"local_search": 0}
+    real = splitter_mod.local_search
+
+    def counting(*a, **k):
+        calls["local_search"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(splitter_mod, "local_search", counting)
+    state = base_system_state(MECScenarioParams())
+    graph = llama3_8b_graph()
+    wl = Workload(tokens_in=32, tokens_out=8, arrival_rate=2.0)
+    sr = SplitRevision()
+    sr.warmup(graph, state, wl, source_node=0)
+    assert calls["local_search"] == 0
+    # the warm compile covers the shape the first real revision hits: the
+    # revise() below reuses the cached program (and DOES refine with Φ)
+    assert len(sr._jax_dp._compiled) == 1
+    sr.revise(graph, state, wl, source_node=0)
+    assert calls["local_search"] == 1
+    assert len(sr._jax_dp._compiled) == 1

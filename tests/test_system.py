@@ -9,7 +9,6 @@ the numerics of inference are unchanged by any reconfiguration.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_bundle
 from repro.core import (

@@ -1,6 +1,5 @@
 """Training loop, optimizer, data determinism, checkpoint/restart."""
 
-import dataclasses
 from pathlib import Path
 
 import jax
@@ -8,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.checkpoint import latest_step, restore, save
 from repro.configs import get_bundle
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_small_mesh
