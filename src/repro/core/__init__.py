@@ -9,10 +9,21 @@ Modules mirror the reference architecture of §III-A:
   profiling    — Monitoring & Capacity Profiling (CP)
   orchestrator — Adaptive Orchestrator (AO), Alg. 1
   fleet        — multi-session AO: shared capacity + batched migrate/resplit
-  fleet_eval   — fleet-wide batched Φ evaluator + batched migration DP
+  fleet_eval   — fleet-wide batched Φ evaluator + batched migration DP +
+                 the device-resident fleet state (FleetStateBuffers /
+                 ResidentFleetKernel)
   admission    — latency-priced admission control (accept/defer/reject)
   broadcast    — Reconfiguration Broadcast (RB), 2-phase versioned rollout
   privacy      — trusted sets, Eq. (5)/(9)
+
+Fleet state lifecycle (PR 3): each ``FleetOrchestrator`` owns ONE
+``FleetStateBuffers`` — long-lived device tensors holding every live
+session as a row.  ``admit``/``depart``/``_commit`` are the only writers
+(row-level ``.at[b].set`` updates; amortized-doubling growth); monitoring
+cycles, the edge simulator, and admission pricing only read, through
+``step``/``price_fleet``/``resident_table``.  A cold rebuild
+(``invalidate_resident_state``) is bit-identical to the incremental state
+and exists for tests/benchmarks, not for the hot path.
 """
 
 from .admission import (
@@ -35,7 +46,10 @@ from .fleet import FleetDecision, FleetOrchestrator, FleetSession
 from .fleet_eval import (
     BatchedMigrationSolver,
     FleetCostEvaluator,
+    FleetStateBuffers,
     PackedSessions,
+    ResidentFleetKernel,
+    ResidentPrice,
     pack_sessions,
     packed_induced_loads,
 )
@@ -76,10 +90,11 @@ __all__ = [
     "AdmissionVerdict", "BatchedJointSplitter", "BatchedMigrationSolver",
     "CapacityProfiler", "CostBreakdown", "CostWeights", "Decision",
     "DecisionKind", "EWMA", "FleetAdmissionController", "FleetCostEvaluator",
-    "FleetDecision", "FleetOrchestrator", "FleetSession", "GraphNode",
-    "InProcessAgent", "JaxJointSplitter", "ModelGraph", "NodeSample",
-    "PackedSessions", "PartitionConfig", "QOS_BATCH", "QOS_CLASSES",
-    "QOS_INTERACTIVE", "QOS_STANDARD", "QoSClass", "ReconfigurationBroadcast",
+    "FleetDecision", "FleetOrchestrator", "FleetSession", "FleetStateBuffers",
+    "GraphNode", "InProcessAgent", "JaxJointSplitter", "ModelGraph",
+    "NodeSample", "PackedSessions", "PartitionConfig", "QOS_BATCH",
+    "QOS_CLASSES", "QOS_INTERACTIVE", "QOS_STANDARD", "QoSClass",
+    "ReconfigurationBroadcast", "ResidentFleetKernel", "ResidentPrice",
     "SessionProblem", "Solution", "SplitRevision", "SplitScheme",
     "SystemState", "Thresholds", "TriggerState", "TrustPolicy", "Workload",
     "assert_privacy_ok", "brute_force_joint", "chain_latency", "evaluate",

@@ -37,7 +37,7 @@ from .cost_model import Workload, chain_latency, memory_violations, node_loads
 from .fleet import FleetOrchestrator
 from .graph import ModelGraph
 from .placement import Solution, repair_capacity
-from .splitter import SessionProblem, coalesce_same_node
+from .splitter import PackedProblem, SessionProblem, coalesce_same_node
 from .triggers import QOS_STANDARD, QoSClass
 
 __all__ = [
@@ -96,10 +96,15 @@ class FleetAdmissionController:
         "requests": 0, "accepted": 0, "accepted_from_queue": 0,
         "rejected": 0, "deferred": 0, "expired": 0,
     })
-    _queue: deque = field(default_factory=deque)  # (deadline, AdmissionRequest)
+    # (deadline, AdmissionRequest, PackedProblem): a deferred request keeps
+    # its packed problem tensors, so every retry poll re-prices against the
+    # updated residual capacity WITHOUT re-coarsening/prefix-summing the
+    # graph from scratch (ROADMAP open item, retired in PR 3)
+    _queue: deque = field(default_factory=deque)
     # fleet load-table memo: a burst of arrivals (plus the defer-queue poll)
-    # prices against the SAME C(t), and the O(sessions) Python table scan
-    # only changes when the session set does — key on (now, live sids)
+    # prices against the SAME C(t), and the (device-resident) totals only
+    # change when the session set or a rollout does — key on (now, live
+    # sids, broadcast version)
     _table_key: tuple = ()
     _table_cache: tuple | None = None
 
@@ -108,15 +113,35 @@ class FleetAdmissionController:
     def queued(self) -> int:
         return len(self._queue)
 
+    def _prepack(
+        self, req: AdmissionRequest, pp: PackedProblem | None
+    ) -> PackedProblem | None:
+        """The request's state-independent problem tensors (packed ONCE).
+
+        Skipped while the fleet sits at the session cap: `_price_and_admit`
+        rejects those before solving, so packing would be wasted host work
+        on every arrival of a burst against a full fleet.  A deferred
+        request that was submitted at-cap picks its pack up on the first
+        below-cap poll.
+        """
+        if pp is None and len(self.orchestrator.sessions) < self.max_sessions:
+            orch = self.orchestrator
+            pp = orch.splitter.pack_problem(
+                req.graph, max_units=orch.max_units,
+                input_bytes_per_token=req.input_bytes_per_token,
+            )
+        return pp
+
     def request(self, req: AdmissionRequest, *, now: float = 0.0) -> AdmissionVerdict:
         """Admission decision for a fresh arrival (may enqueue a deferral)."""
         self.counters["requests"] += 1
-        v = self._price_and_admit(req, now)
+        pp = self._prepack(req, None)
+        v = self._price_and_admit(req, now, pp)
         if v.kind is AdmissionKind.ACCEPT:
             self.counters["accepted"] += 1
             return v
         if req.qos.defer_timeout_s > 0 and len(self._queue) < self.queue_cap:
-            self._queue.append((now + req.qos.defer_timeout_s, req))
+            self._queue.append((now + req.qos.defer_timeout_s, req, pp))
             self.counters["deferred"] += 1
             return AdmissionVerdict(
                 AdmissionKind.DEFER, None, v.predicted_latency_s, v.reason
@@ -130,12 +155,15 @@ class FleetAdmissionController:
         """Retry the defer queue; expired requests become final REJECTs.
 
         Returns the requests that left the queue this poll, with their
-        verdicts (ACCEPT or REJECT-by-timeout), in queue order.
+        verdicts (ACCEPT or REJECT-by-timeout), in queue order.  Each retry
+        re-solves against the CURRENT residual capacity but reuses the
+        request's cached packed tensors — polling is O(solve), not
+        O(pack + solve).
         """
         out: list[tuple[AdmissionRequest, AdmissionVerdict]] = []
         still: deque = deque()
         while self._queue:
-            deadline, req = self._queue.popleft()
+            deadline, req, pp = self._queue.popleft()
             if now > deadline:
                 self.counters["expired"] += 1
                 out.append((req, AdmissionVerdict(
@@ -143,13 +171,14 @@ class FleetAdmissionController:
                     reason=f"defer timeout ({req.qos.name})",
                 )))
                 continue
-            v = self._price_and_admit(req, now)
+            pp = self._prepack(req, pp)   # no-op unless submitted at-cap
+            v = self._price_and_admit(req, now, pp)
             if v.kind is AdmissionKind.ACCEPT:
                 self.counters["accepted"] += 1
                 self.counters["accepted_from_queue"] += 1
                 out.append((req, v))
             else:
-                still.append((deadline, req))
+                still.append((deadline, req, pp))
         self._queue = still
         return out
 
@@ -161,10 +190,15 @@ class FleetAdmissionController:
         key = (now, tuple(orch.sessions), orch.broadcast.active_version)
         if key != self._table_key:
             self._table_key = key
-            self._table_cache = orch.load_table(state)
+            self._table_cache = orch.resident_table(state)
         return self._table_cache
 
-    def _price_and_admit(self, req: AdmissionRequest, now: float) -> AdmissionVerdict:
+    def _price_and_admit(
+        self,
+        req: AdmissionRequest,
+        now: float,
+        prepacked: PackedProblem | None = None,
+    ) -> AdmissionVerdict:
         """Solve the joint split on residual capacity; admit iff inside QoS."""
         orch = self.orchestrator
         if len(orch.sessions) >= self.max_sessions:
@@ -179,7 +213,8 @@ class FleetAdmissionController:
         [sol] = orch.splitter.solve_batch(
             [SessionProblem(req.graph, req.workload,
                             source_node=req.source_node,
-                            input_bytes_per_token=req.input_bytes_per_token)],
+                            input_bytes_per_token=req.input_bytes_per_token,
+                            prepacked=prepacked)],
             eff, max_units=orch.max_units,
         )
         sol = coalesce_same_node(sol)
@@ -221,6 +256,7 @@ class FleetAdmissionController:
         sid = orch.admit(
             req.graph, req.workload, source_node=req.source_node,
             arch=req.arch, now=now, qos=req.qos, solution=sol,
+            prepacked=prepacked,
         )
         return AdmissionVerdict(AdmissionKind.ACCEPT, sid, lat,
                                 reason="within SLO and rho ceiling",

@@ -17,27 +17,31 @@ session *set* S = {s_1..s_m} sharing one C(t):
   Θ.L_max; utilization and bandwidth triggers are fleet-level (they fire for
   every session hosted on the affected node/link).  Cool-downs and the
   anti-thrash hysteresis are likewise per-session.
-* **Batched monitoring hot path** — the per-cycle decision loop does ZERO
-  per-session Python cost evaluation or local search.  Every session's
-  current latency is priced in one jitted
-  :class:`~repro.core.fleet_eval.FleetCostEvaluator` call (each against its
-  own effective C(t)); all triggered sessions' placement migrations (Eq. 7)
-  resolve in one :class:`~repro.core.fleet_eval.BatchedMigrationSolver`
-  call; and the sessions whose best migration still violates QoS are
-  re-split TOGETHER in one :class:`~repro.core.splitter.BatchedJointSplitter`
-  call (Eq. 8 vmapped over the batch).  A monitoring cycle therefore costs
-  a fixed number of XLA dispatches no matter how many sessions blow their
-  budget at once.  Sessions being re-split are removed from the shared-load
-  picture for that solve (their load is being re-planned); the survivors'
-  load stays pinned.  The PR-1 per-session Python path is preserved as
-  ``use_batched_eval=False`` for A/B benchmarking
-  (``benchmarks/fleet_scaling.py --monitor``).
+* **Device-resident monitoring hot path** (PR 3) — the fleet's problem
+  tensors live on device across cycles as a
+  :class:`~repro.core.fleet_eval.FleetStateBuffers` row per session,
+  updated incrementally on admit/depart/commit.  A monitoring cycle is one
+  fused :class:`~repro.core.fleet_eval.ResidentFleetKernel` pricing
+  dispatch (induced loads → effective C(t) → batched Φ → per-session
+  trigger env) returning only O(B) trigger scalars to host, plus — only on
+  cycles where something actually triggered — one fused migration dispatch
+  (Eq. 7 DP + device backtrack + candidate pricing) and, for sessions whose
+  best migration still violates QoS, one batched
+  :class:`~repro.core.splitter.BatchedJointSplitter` re-split (Eq. 8).
+  Per-cycle host work is therefore O(changed sessions), not O(fleet): a
+  steady KEEP cycle repacks nothing and transfers nothing but scalars.
+  (The PR-1 per-session Python loop and PR-2's per-cycle full
+  ``pack_sessions`` repack are both retired; a cold rebuild — bit-identical
+  to the incremental state, test-enforced — happens only via
+  :meth:`invalidate_resident_state`.)
 
 Churn (session admit/depart) is first-class: :meth:`admit` solves an initial
 split against the current fleet load and deploys it through the shared
 Reconfiguration Broadcast (admission *pricing* — accept/defer/reject against
 the residual capacity — lives in :mod:`repro.core.admission`);
-:meth:`depart` releases the session's capacity.
+:meth:`depart` releases the session's capacity.  Both apply row-level
+updates to the resident buffers; the orchestrator is the buffers' only
+writer (see the fleet-state lifecycle note in :mod:`repro.core.fleet_eval`).
 """
 
 from __future__ import annotations
@@ -58,24 +62,30 @@ from .cost_model import (
     segment_service_time,
 )
 from .fleet_eval import (
-    BatchedMigrationSolver,
     FleetCostEvaluator,
-    PackedSessions,
+    FleetStateBuffers,
+    ResidentFleetKernel,
+    gather_rows,
     pack_sessions,
-    packed_induced_loads,
 )
 from .graph import ModelGraph
 from .orchestrator import Decision, DecisionKind
-from .placement import Solution, local_search, repair_capacity, solve_placement_chain_dp
+from .placement import Solution, local_search, repair_capacity
 from .profiling import CapacityProfiler
-from .splitter import BatchedJointSplitter, SessionProblem, coalesce_same_node
+from .splitter import (
+    BatchedJointSplitter,
+    PackedProblem,
+    SessionProblem,
+    coalesce_same_node,
+)
 from .triggers import (
     EWMA,
     QoSClass,
     SolveThrottle,
     Thresholds,
     TriggerState,
-    should_reconfigure,
+    decision_gate,
+    hysteresis_keep,
 )
 
 __all__ = ["FleetSession", "FleetDecision", "FleetOrchestrator"]
@@ -99,11 +109,21 @@ class FleetSession:
     decisions: list[Decision] = field(default_factory=list)
     # per-session solver duty-cycle state (see triggers.SolveThrottle)
     throttle: SolveThrottle = field(default_factory=SolveThrottle)
+    # state-independent DP tensors, packed once per session: a re-split
+    # re-solves against fresh C(t) but never re-coarsens the graph
+    prepacked: PackedProblem | None = None
 
 
 @dataclass(frozen=True)
 class FleetDecision:
-    """One fleet monitoring cycle: per-session outcomes + aggregate counts."""
+    """One fleet monitoring cycle: per-session outcomes + aggregate counts.
+
+    ``solver_time_s`` is the whole cycle's wall time; ``eval_time_s`` the
+    fused device dispatches (price + migrate) and ``pack_time_s`` any
+    resident-buffer packing done within the cycle (row writes on commits;
+    0 in steady state — the breakdown ``benchmarks/fleet_scaling.py
+    --monitor`` tracks in ``BENCH_fleet.json``).
+    """
 
     t: float
     per_session: dict[int, Decision]
@@ -112,6 +132,8 @@ class FleetDecision:
     n_migrate: int
     n_resplit: int
     n_cooldown: int
+    eval_time_s: float = 0.0
+    pack_time_s: float = 0.0
 
 
 def session_induced_loads(
@@ -150,7 +172,11 @@ class FleetOrchestrator:
     broadcast: ReconfigurationBroadcast
     thresholds: Thresholds = field(default_factory=Thresholds)
     weights: CostWeights = field(default_factory=CostWeights)
-    splitter: BatchedJointSplitter = field(default_factory=BatchedJointSplitter)
+    # shared-units coarsening: heterogeneous catalog depths collapse into one
+    # DP bucket → one compiled re-split variant for the whole fleet
+    splitter: BatchedJointSplitter = field(
+        default_factory=lambda: BatchedJointSplitter(shared_units=32)
+    )
     max_units: int | None = 96         # DP coarsening cap (huge graphs)
     local_rounds: int = 6              # Φ local-search budget per decision
     min_improvement_frac: float = 0.10  # anti-thrash hysteresis
@@ -161,22 +187,26 @@ class FleetOrchestrator:
     # cycle in a degraded steady state
     solve_backoff_s: float = 5.0
     backoff_tol_frac: float = 0.10
-    # batched hot path (PR 2): one jitted evaluator call prices the fleet,
-    # one vmapped DP solves every triggered migration.  False restores the
-    # PR-1 per-session Python loop for A/B measurement.
-    use_batched_eval: bool = True
     evaluator: FleetCostEvaluator = field(default_factory=FleetCostEvaluator)
-    migrator: BatchedMigrationSolver = field(default_factory=BatchedMigrationSolver)
+    kernel: ResidentFleetKernel = field(default_factory=ResidentFleetKernel)
 
     sessions: dict[int, FleetSession] = field(default_factory=dict)
     decisions: list[FleetDecision] = field(default_factory=list)
     _next_sid: int = 0
+    # device-resident fleet state: rows owned by admit/depart/_commit ONLY
+    _buffers: FleetStateBuffers | None = None
+    full_rebuilds: int = 0             # cold repacks (≠ row-level updates)
 
     # ------------------------------------------------------------------ #
     # shared capacity accounting
     # ------------------------------------------------------------------ #
     def load_table(self, state: SystemState):
-        """Per-session induced (node ρ, link ρ, weight bytes) + fleet totals."""
+        """Per-session induced (node ρ, link ρ, weight bytes) + fleet totals.
+
+        Host-side reference path (O(fleet) Python); the monitoring cycle and
+        the simulator use the device-resident totals instead
+        (:meth:`resident_table` / :meth:`price_fleet`).
+        """
         per = {
             sid: session_induced_loads(s, state)
             for sid, s in self.sessions.items()
@@ -194,8 +224,8 @@ class FleetOrchestrator:
     def _fold_loads(self, state: SystemState, node, link, wb):
         """Derate capacities by induced load — THE effective-C(t) formula.
 
-        Shared by the scalar :meth:`effective_state` and the batched hot
-        path (arguments broadcast: ``(n,)`` rows or ``(B, n)`` batches), so
+        Shared by the scalar :meth:`effective_state` and the fused device
+        kernel (arguments broadcast: ``(n,)`` rows or ``(B, n)`` batches), so
         the two can never drift apart.  Returns ``(bg, link_bw, mem)``.
         """
         bg = np.clip(state.background_util + node, 0.0, 0.99)
@@ -215,7 +245,11 @@ class FleetOrchestrator:
         Other sessions' compute joins ``background_util``, their boundary
         traffic derates ``link_bw`` (capped at ``bw_floor_frac`` so a choked
         link stays expensive rather than free), and their resident weights
-        shrink ``mem_bytes``.
+        shrink ``mem_bytes``.  A ``_table`` built by :meth:`resident_table`
+        carries per-session entries only for its ``include`` set; an
+        excluded live sid missing from it is filled on demand here (O(K)),
+        never silently skipped — skipping would fold the session's own load
+        into its residual capacity.
         """
         per, tot_node, tot_link, tot_w = (
             self.load_table(state) if _table is None else _table
@@ -224,6 +258,8 @@ class FleetOrchestrator:
         link = tot_link.copy()
         wb = tot_w.copy()
         for sid in exclude:
+            if sid not in per and sid in self.sessions:
+                per[sid] = session_induced_loads(self.sessions[sid], state)
             if sid in per:
                 node -= per[sid][0]
                 link -= per[sid][1]
@@ -233,6 +269,91 @@ class FleetOrchestrator:
             state, node, link, wb
         )
         return eff
+
+    # ------------------------------------------------------------------ #
+    # device-resident fleet state
+    # ------------------------------------------------------------------ #
+    def _resident(self) -> FleetStateBuffers:
+        """The live buffers, cold-rebuilt only if they ever desync."""
+        buf = self._buffers
+        if buf is None or set(buf.row_of) != set(self.sessions):
+            stats = None if buf is None else buf.stats
+            buf = FleetStateBuffers.from_sessions([
+                (sid, (s.graph, s.config.boundaries, s.config.assignment,
+                       s.workload, s.source_node, s.input_bytes_per_token))
+                for sid, s in self.sessions.items()
+            ])
+            if stats is not None:  # carry counters across the rebuild
+                for k, v in stats.items():
+                    buf.stats[k] += v
+            self._buffers = buf
+            self.full_rebuilds += 1
+        return buf
+
+    def invalidate_resident_state(self) -> None:
+        """Drop the resident buffers; the next cycle cold-repacks the fleet.
+
+        Exists for the equivalence tests and the benchmark's repack-per-cycle
+        A/B mode — production code should never need it.
+        """
+        self._buffers = None
+
+    def _upsert_row(self, sess: FleetSession) -> None:
+        if self._buffers is not None:
+            self._buffers.upsert(
+                sess.sid, sess.graph, sess.config.boundaries,
+                sess.config.assignment, sess.workload, sess.source_node,
+                sess.input_bytes_per_token,
+            )
+
+    def price_fleet(
+        self, state: SystemState | None = None
+    ) -> tuple[list[int], np.ndarray, np.ndarray]:
+        """(sids, per-session current latency, fleet node-ρ totals) in one
+        fused dispatch — each session priced against its own effective C(t).
+
+        This is the read path the simulator uses every tick (replacing the
+        per-session Python ``chain_latency`` loop) — only O(B) scalars and
+        the (n,) totals come back to host.
+        """
+        if state is None:
+            state = self.profiler.system_state()
+        sids = list(self.sessions)
+        if not sids:
+            return [], np.zeros(0), state.background_util.astype(float).copy()
+        buf = self._resident()
+        price = self.kernel.price(
+            buf, state, weights=self.weights, bw_floor=self.bw_floor_frac
+        )
+        rows = [buf.row_of[sid] for sid in sids]
+        (lat,) = gather_rows(rows, price.lat)
+        return sids, lat, np.clip(
+            state.background_util + np.asarray(price.tot_node), 0.0, None
+        )
+
+    def resident_table(
+        self, state: SystemState, *, include: tuple[int, ...] = ()
+    ):
+        """Shared-load table with device-computed totals.
+
+        Same tuple shape as :meth:`load_table` but the per-session entries
+        are only materialized (host-side, O(K) each) for ``include`` — the
+        sids a caller intends to exclude/re-fold.  Everything else stays on
+        device.
+        """
+        n = state.num_nodes
+        if not self.sessions:
+            return {}, np.zeros(n), np.zeros((n, n)), np.zeros(n)
+        buf = self._resident()
+        price = self.kernel.price(
+            buf, state, weights=self.weights, bw_floor=self.bw_floor_frac
+        )
+        per = {
+            sid: session_induced_loads(self.sessions[sid], state)
+            for sid in include
+        }
+        return (per, np.array(price.tot_node), np.array(price.tot_link),
+                np.array(price.tot_w))
 
     # ------------------------------------------------------------------ #
     # churn
@@ -247,12 +368,15 @@ class FleetOrchestrator:
         now: float = 0.0,
         qos: QoSClass | None = None,
         solution: Solution | None = None,
+        prepacked: PackedProblem | None = None,
     ) -> int:
         """Admit a session: solve its split against current fleet load, deploy.
 
         ``solution`` short-circuits the solve — the admission controller has
         already priced the session against the residual capacity and hands
-        the winning (split, placement) over so deployment never re-solves.
+        the winning (split, placement) over so deployment never re-solves;
+        ``prepacked`` likewise hands over the problem tensors packed during
+        pricing, so the session's first re-split never re-coarsens either.
         """
         sid = self._next_sid
         self._next_sid += 1
@@ -260,12 +384,13 @@ class FleetOrchestrator:
             sid=sid, graph=graph, workload=workload, source_node=source_node,
             arch=arch, qos=qos, t_admitted=now,
             throttle=SolveThrottle(self.solve_backoff_s, self.backoff_tol_frac),
+            prepacked=prepacked,
         )
         if solution is None:
             state = self.profiler.system_state()
-            eff = self.effective_state(state)
+            eff = self.effective_state(state, _table=self.resident_table(state))
             [sol] = self.splitter.solve_batch(
-                [SessionProblem(graph, workload, source_node=source_node)],
+                [self._session_problem(sess)],
                 eff, max_units=self.max_units,
             )
             sol = coalesce_same_node(sol)
@@ -284,11 +409,15 @@ class FleetOrchestrator:
         sess.config = cfg
         sess.t_last_reconfig = now
         self.sessions[sid] = sess
+        self._upsert_row(sess)
         return sid
 
     def depart(self, sid: int) -> FleetSession:
         """Remove a session; its induced load vanishes from the shared C(t)."""
-        return self.sessions.pop(sid)
+        sess = self.sessions.pop(sid)
+        if self._buffers is not None and sid in self._buffers.row_of:
+            self._buffers.remove(sid)
+        return sess
 
     # ------------------------------------------------------------------ #
     # one monitoring cycle
@@ -297,23 +426,6 @@ class FleetOrchestrator:
         return chain_latency(
             sess.graph, sol.boundaries, sol.assignment, eff, sess.workload
         )
-
-    @staticmethod
-    def _session_env(sess: FleetSession, util_vec, eff_bw) -> tuple[float, float]:
-        """(max util, min bw) over the nodes/links THIS session touches.
-
-        Util and bandwidth triggers are targeted: a node spiking past U_max
-        only wakes the sessions with a segment on it (or entering through
-        it); a choked link only wakes the sessions whose boundary traffic
-        crosses it.  Sessions elsewhere stay in cheap KEEP cycles.
-        """
-        a = sess.config.assignment
-        nodes = set(a) | {sess.source_node}
-        max_util = float(util_vec[sorted(nodes)].max())
-        hops = [(sess.source_node, a[0])] + list(zip(a[:-1], a[1:]))
-        bws = [eff_bw[i, j] for i, j in hops
-               if i != j and np.isfinite(eff_bw[i, j])]
-        return max_util, float(min(bws)) if bws else float("inf")
 
     def _refresh_loads(self, table, sid: int, state: SystemState) -> None:
         """Fold a just-committed session's NEW placement into the shared
@@ -337,26 +449,18 @@ class FleetOrchestrator:
             sess.qos.latency_slo_s if sess.qos is not None else None
         )
 
-    def step(self, now: float) -> FleetDecision:
-        """Monitor every session, migrate cheap, batch-resplit the rest."""
-        if self.use_batched_eval:
-            return self._step_batched(now)
-        return self._step_legacy(now)
-
-    # -- batched hot path ---------------------------------------------- #
-    def _pack_fleet(self, sids: list[int]) -> PackedSessions:
-        """Current configs of ``sids`` as padded (B, K) tensors."""
-        return pack_sessions([
-            (
-                (s := self.sessions[sid]).graph,
-                s.config.boundaries,
-                s.config.assignment,
-                s.workload,
-                s.source_node,
-                s.input_bytes_per_token,
+    def _session_problem(self, sess: FleetSession) -> SessionProblem:
+        """The session's joint-DP problem, with its pack cached for life."""
+        if sess.prepacked is None:
+            sess.prepacked = self.splitter.pack_problem(
+                sess.graph, max_units=self.max_units,
+                input_bytes_per_token=sess.input_bytes_per_token,
             )
-            for sid in sids
-        ])
+        return SessionProblem(
+            sess.graph, sess.workload, source_node=sess.source_node,
+            input_bytes_per_token=sess.input_bytes_per_token,
+            prepacked=sess.prepacked,
+        )
 
     def _lat_py(self, sess: FleetSession, sol: Solution, state: SystemState,
                 table) -> float:
@@ -384,18 +488,19 @@ class FleetOrchestrator:
             lat = self._latency(sess, sol, eff)
         return sol, lat
 
-    def _step_batched(self, now: float) -> FleetDecision:
-        """One monitoring cycle with a constant number of XLA dispatches.
+    def step(self, now: float) -> FleetDecision:
+        """One monitoring cycle against the device-resident fleet state.
 
-        Structure mirrors :meth:`_step_legacy` (triggers → cool-down →
-        throttle → migrate → batched re-split → hysteresis → rollout), but
-        every per-session ``chain_latency``/``evaluate`` call and every
-        per-session migration DP + Φ local search is replaced by ONE batched
-        evaluator / solver invocation over the whole fleet.  Candidate
-        latencies are priced against the cycle-start load table; a session
-        committing *after* an earlier commit in the same cycle is re-priced
-        scalar-side against the refreshed table so two overloaded sessions
-        never chase the same idle node (the legacy path's herd guard).
+        Structure (triggers → cool-down → throttle → migrate → batched
+        re-split → hysteresis → rollout) is the PR-2 decision skeleton, but
+        the per-cycle data flow is inverted: nothing is packed, and the only
+        things crossing the device boundary are O(B) trigger scalars — plus,
+        on trigger-active cycles, the triggered rows' candidate assignments
+        and effective states.  Candidate latencies are priced against the
+        cycle-start load picture; a session committing *after* an earlier
+        commit in the same cycle is re-priced scalar-side against the
+        refreshed host table so two overloaded sessions never chase the same
+        idle node (the herd guard).
         """
         t0 = time.perf_counter()
         state = self.profiler.system_state()
@@ -407,93 +512,90 @@ class FleetOrchestrator:
             self.decisions.append(fd)
             return fd
 
-        packed = self._pack_fleet(sids)
-        node_r, link_r, wb = packed_induced_loads(packed, state)
-        tot_node = node_r.sum(axis=0)
-        tot_link = link_r.sum(axis=0)
-        tot_w = wb.sum(axis=0)
-        per = {sid: (node_r[i], link_r[i], wb[i]) for i, sid in enumerate(sids)}
-        table = (per, tot_node, tot_link, tot_w)
-
-        # per-session effective C(t): everyone else folded in as load (row i
-        # broadcasts through the same formula effective_state uses)
-        bg_eff, link_eff, mem_eff = self._fold_loads(
-            state,
-            tot_node[None, :] - node_r,
-            tot_link[None, :, :] - link_r,
-            tot_w[None, :] - wb,
+        # snapshot BEFORE _resident(): a cold rebuild inside this cycle is
+        # pack work and must show up in the reported breakdown
+        pack0 = (self._buffers.stats["pack_time_s"]
+                 if self._buffers is not None else 0.0)
+        buf = self._resident()
+        t_ev = time.perf_counter()
+        state_args = self.kernel.state_args(state)   # one upload per cycle
+        price = self.kernel.price(
+            buf, state, weights=self.weights, bw_floor=self.bw_floor_frac,
+            state_args=state_args,
         )
-        cur_lat, _, _ = self.evaluator.evaluate_batch(
-            packed, bg=bg_eff, link_bw=link_eff, mem_bytes=mem_eff,
-            state=state, weights=self.weights,
+        rows = {sid: buf.row_of[sid] for sid in sids}
+        rlist = [rows[sid] for sid in sids]
+        lat_h, util_h, bw_h = gather_rows(
+            rlist, price.lat, price.max_util, price.min_bw
         )
+        eval_t = time.perf_counter() - t_ev
+        cur_lat = {sid: float(lat_h[i]) for i, sid in enumerate(sids)}
 
-        # fleet-level trigger vectors (cycle-start snapshot)
-        util_vec = np.clip(state.background_util + tot_node, 0, 2)
-        eff_bw_all = state.link_bw * np.clip(
-            1.0 - tot_link, self.bw_floor_frac, 1.0
-        )
-
-        triggered: list[int] = []            # row indices into ``packed``
-        reasons_by_row: dict[int, tuple[str, ...]] = {}
+        triggered: list[int] = []            # sids, in monitoring order
+        reasons_by_sid: dict[int, tuple[str, ...]] = {}
         for i, sid in enumerate(sids):
             sess = self.sessions[sid]
-            sess.ewma_latency.update(float(cur_lat[i]))
-            max_util, min_bw = self._session_env(sess, util_vec, eff_bw_all)
+            sess.ewma_latency.update(cur_lat[sid])
             env = TriggerState(
                 ewma_latency_s=sess.ewma_latency.get(0.0),
-                max_node_util=max_util,
-                min_link_bw_bps=min_bw,
+                max_node_util=float(util_h[i]),
+                min_link_bw_bps=float(bw_h[i]),
             )
             th = self._session_thresholds(sess)
-            if not should_reconfigure(env, th):
-                per_session[sid] = Decision(
-                    DecisionKind.KEEP, sess.config, (), float(cur_lat[i]), 0.0
-                )
+            gate = decision_gate(
+                env, th, now=now, t_last_reconfig=sess.t_last_reconfig,
+                throttle=sess.throttle,
+            )
+            if gate == "solve":
+                triggered.append(sid)
+                reasons_by_sid[sid] = tuple(env.reasons)
                 continue
-            reasons = tuple(env.reasons)
-            if now - sess.t_last_reconfig < th.cooldown_s:
-                per_session[sid] = Decision(
-                    DecisionKind.COOLDOWN, sess.config, reasons,
-                    float(cur_lat[i]), 0.0,
-                )
-                continue
-            if sess.throttle.should_skip(env, now):
-                per_session[sid] = Decision(
-                    DecisionKind.KEEP, sess.config, reasons,
-                    float(cur_lat[i]), 0.0,
-                )
-                continue
-            triggered.append(i)
-            reasons_by_row[i] = reasons
+            kind = (DecisionKind.COOLDOWN if gate == "cooldown"
+                    else DecisionKind.KEEP)
+            reasons = () if gate == "keep" else tuple(env.reasons)
+            per_session[sid] = Decision(
+                kind, sess.config, reasons, cur_lat[sid], 0.0
+            )
 
-        resplit_rows: list[tuple[int, Solution, float]] = []  # (row, mig, lat)
+        resplit_rows: list[tuple[int, Solution, float]] = []  # (sid, mig, lat)
         dirty = False                       # any commit this cycle?
+        table = None
         if triggered:
-            sub = packed.rows(triggered)
-            migs = self.migrator.solve_batch(
-                sub, bg=bg_eff[triggered], link_bw=link_eff[triggered],
-                state=state,
+            t_ev = time.perf_counter()
+            assign_d, mig_lat_d, mig_cost_d = self.kernel.migrate(
+                buf, price, state, weights=self.weights,
+                state_args=state_args,
             )
-            mig_lat, _, _ = self.evaluator.evaluate_batch(
-                sub.with_assignment([m.assignment for m in migs]),
-                bg=bg_eff[triggered], link_bw=link_eff[triggered],
-                mem_bytes=mem_eff[triggered], state=state,
-                weights=self.weights,
+            trows = [rows[sid] for sid in triggered]
+            assign_h, mig_lat_h, mig_cost_h = gather_rows(
+                trows, assign_d, mig_lat_d, mig_cost_d
             )
-            for pos, i in enumerate(triggered):
-                sid = sids[i]
+            eval_t += time.perf_counter() - t_ev
+            # host load table, per-entries only for the triggered set (the
+            # only sids ever excluded/re-folded below)
+            table = (
+                {sid: session_induced_loads(self.sessions[sid], state)
+                 for sid in triggered},
+                np.array(price.tot_node), np.array(price.tot_link),
+                np.array(price.tot_w),
+            )
+            for pos, sid in enumerate(triggered):
                 sess = self.sessions[sid]
                 th = self._session_thresholds(sess)
-                mig = coalesce_same_node(migs[pos])
-                if mig_lat[pos] > th.latency_max_s:
-                    resplit_rows.append((i, mig, float(mig_lat[pos])))
+                k = len(sess.config.boundaries) - 1
+                mig = coalesce_same_node(Solution(
+                    sess.config.boundaries,
+                    tuple(int(x) for x in assign_h[pos, :k]),
+                    float(mig_cost_h[pos]),
+                ))
+                if mig_lat_h[pos] > th.latency_max_s:
+                    resplit_rows.append((sid, mig, float(mig_lat_h[pos])))
                     per_session[sid] = Decision(
-                        DecisionKind.RESPLIT, sess.config, reasons_by_row[i],
-                        float(mig_lat[pos]), 0.0,
+                        DecisionKind.RESPLIT, sess.config, reasons_by_sid[sid],
+                        float(mig_lat_h[pos]), 0.0,
                     )
                     continue
-                c_lat, m_lat = float(cur_lat[i]), float(mig_lat[pos])
+                c_lat, m_lat = cur_lat[sid], float(mig_lat_h[pos])
                 if dirty:  # re-price against the post-commit table
                     c_lat = self._lat_py(
                         sess, Solution(sess.config.boundaries,
@@ -503,39 +605,32 @@ class FleetOrchestrator:
                     m_lat = self._lat_py(sess, mig, state, table)
                 mig, m_lat = self._mem_guard(sess, mig, m_lat, state, table)
                 if self._commit(sid, mig, m_lat, c_lat, DecisionKind.MIGRATE,
-                                reasons_by_row[i], per_session, now):
+                                reasons_by_sid[sid], per_session, now):
                     self._refresh_loads(table, sid, state)
                     dirty = True
 
         # batched full re-split (Eq. 8): ONE vmapped DP for the failing set
         if resplit_rows:
-            exclude = tuple(sids[i] for i, *_ in resplit_rows)
+            exclude = tuple(sid for sid, *_ in resplit_rows)
             solve_state = self.effective_state(
                 state, exclude=exclude, _table=table
             )
             problems = [
-                SessionProblem(
-                    self.sessions[sids[i]].graph,
-                    self.sessions[sids[i]].workload,
-                    source_node=self.sessions[sids[i]].source_node,
-                    input_bytes_per_token=(
-                        self.sessions[sids[i]].input_bytes_per_token
-                    ),
-                )
-                for i, *_ in resplit_rows
+                self._session_problem(self.sessions[sid])
+                for sid, *_ in resplit_rows
             ]
             sols = self.splitter.solve_batch(
                 problems, solve_state, max_units=self.max_units
             )
             rs_sols: list[Solution] = []
             rs_items = []
-            for (i, _, _), rs in zip(resplit_rows, sols):
-                sess = self.sessions[sids[i]]
+            for (sid, _, _), rs in zip(resplit_rows, sols):
+                sess = self.sessions[sid]
                 rs = coalesce_same_node(rs)
                 # memory repair only when actually violated (event-driven;
                 # the hot path stays free of Python Φ search)
                 eff_i = self.effective_state(
-                    state, exclude=(sess.sid,), _table=table
+                    state, exclude=(sid,), _table=table
                 )
                 if memory_violations(
                     sess.graph, rs.boundaries, rs.assignment, eff_i
@@ -546,17 +641,19 @@ class FleetOrchestrator:
                     sess.graph, rs.boundaries, rs.assignment, sess.workload,
                     sess.source_node, sess.input_bytes_per_token,
                 ))
-            rows = [i for i, *_ in resplit_rows]
+            rrows = [rows[sid] for sid, *_ in resplit_rows]
+            bg_h, lbw_h, mem_h = gather_rows(
+                rrows, price.bg, price.link_bw, price.mem
+            )
             rs_lat, _, _ = self.evaluator.evaluate_batch(
-                pack_sessions(rs_items, min_k=packed.max_segs), bg=bg_eff[rows],
-                link_bw=link_eff[rows], mem_bytes=mem_eff[rows], state=state,
+                pack_sessions(rs_items, min_k=buf.max_segs), bg=bg_h,
+                link_bw=lbw_h, mem_bytes=mem_h, state=state,
                 weights=self.weights,
             )
-            for pos, (i, mig, m_lat) in enumerate(resplit_rows):
-                sid = sids[i]
+            for pos, (sid, mig, m_lat) in enumerate(resplit_rows):
                 sess = self.sessions[sid]
                 rs, r_lat = rs_sols[pos], float(rs_lat[pos])
-                c_lat = float(cur_lat[i])
+                c_lat = cur_lat[sid]
                 if dirty:
                     # earlier commits this cycle moved the cost surface:
                     # re-price BOTH candidates (and the incumbent) against
@@ -579,7 +676,7 @@ class FleetOrchestrator:
                         sess, chosen, chosen_lat, state, table
                     )
                 if self._commit(sid, chosen, chosen_lat, c_lat, kind,
-                                reasons_by_row[i], per_session, now):
+                                reasons_by_sid[sid], per_session, now):
                     self._refresh_loads(table, sid, state)
                     dirty = True
 
@@ -593,127 +690,8 @@ class FleetOrchestrator:
             n_migrate=sum(k == DecisionKind.MIGRATE for k in kinds),
             n_resplit=sum(k == DecisionKind.RESPLIT for k in kinds),
             n_cooldown=sum(k == DecisionKind.COOLDOWN for k in kinds),
-        )
-        self.decisions.append(fd)
-        for sid, d in per_session.items():
-            self.sessions[sid].decisions.append(d)
-        return fd
-
-    # -- PR-1 per-session path (kept for A/B benchmarking) ------------- #
-    def _step_legacy(self, now: float) -> FleetDecision:
-        """Monitor every session with per-session Python pricing (PR-1)."""
-        t0 = time.perf_counter()
-        state = self.profiler.system_state()
-        table = self.load_table(state)
-        _, tot_node, tot_link, _ = table
-
-        per_session: dict[int, Decision] = {}
-        resplit_pool: list[tuple[int, Solution, float, SystemState]] = []
-
-        for sid, sess in self.sessions.items():
-            eff = self.effective_state(state, exclude=(sid,), _table=table)
-            cur = Solution(sess.config.boundaries, sess.config.assignment, 0.0)
-            cur_lat = self._latency(sess, cur, eff)
-            sess.ewma_latency.update(cur_lat)
-            # trigger vectors from LIVE totals (earlier commits this cycle
-            # are already folded in by _refresh_loads)
-            util_vec = np.clip(state.background_util + tot_node, 0, 2)
-            eff_bw_all = state.link_bw * np.clip(
-                1.0 - tot_link, self.bw_floor_frac, 1.0
-            )
-            max_util, min_bw = self._session_env(sess, util_vec, eff_bw_all)
-            env = TriggerState(
-                ewma_latency_s=sess.ewma_latency.get(0.0),
-                max_node_util=max_util,
-                min_link_bw_bps=min_bw,
-            )
-            # per-session Θ (QoS SLO), matching the batched path so the
-            # use_batched_eval A/B compares implementations, not policies
-            th = self._session_thresholds(sess)
-            if not should_reconfigure(env, th):
-                per_session[sid] = Decision(
-                    DecisionKind.KEEP, sess.config, (), cur_lat, 0.0
-                )
-                continue
-            reasons = tuple(env.reasons)
-            if now - sess.t_last_reconfig < th.cooldown_s:
-                per_session[sid] = Decision(
-                    DecisionKind.COOLDOWN, sess.config, reasons, cur_lat, 0.0
-                )
-                continue
-            if sess.throttle.should_skip(env, now):
-                per_session[sid] = Decision(
-                    DecisionKind.KEEP, sess.config, reasons, cur_lat, 0.0
-                )
-                continue
-
-            # attempt 1: placement migration under the current split (Eq. 7)
-            mig = solve_placement_chain_dp(
-                sess.graph, sess.config.boundaries, eff, sess.workload,
-                source_node=sess.source_node,
-            )
-            mig = local_search(
-                sess.graph, mig, eff, sess.workload,
-                max_rounds=self.local_rounds, allow_resplit=False,
-            )
-            mig_lat = self._latency(sess, mig, eff)
-            if mig_lat > th.latency_max_s:
-                # queue for the batched full re-split (Eq. 8)
-                resplit_pool.append((sid, mig, mig_lat, eff))
-                per_session[sid] = Decision(
-                    DecisionKind.RESPLIT, sess.config, reasons, mig_lat, 0.0
-                )
-            else:
-                if self._commit(sid, mig, mig_lat, cur_lat,
-                                DecisionKind.MIGRATE, reasons, per_session,
-                                now):
-                    self._refresh_loads(table, sid, state)
-
-        # attempt 2, batched: one vmapped DP call for every failing session.
-        if resplit_pool:
-            exclude = tuple(sid for sid, *_ in resplit_pool)
-            solve_state = self.effective_state(state, exclude=exclude, _table=table)
-            problems = [
-                SessionProblem(
-                    self.sessions[sid].graph, self.sessions[sid].workload,
-                    source_node=self.sessions[sid].source_node,
-                    input_bytes_per_token=self.sessions[sid].input_bytes_per_token,
-                )
-                for sid, *_ in resplit_pool
-            ]
-            sols = self.splitter.solve_batch(
-                problems, solve_state, max_units=self.max_units
-            )
-            for (sid, mig, mig_lat, eff), rs in zip(resplit_pool, sols):
-                sess = self.sessions[sid]
-                rs = coalesce_same_node(rs)
-                # same contract as the single-session SR path: the DP is
-                # surrogate-exact, the full-Φ terms get a bounded refinement
-                rs = local_search(sess.graph, rs, eff, sess.workload,
-                                  max_rounds=self.local_rounds)
-                rs = repair_capacity(sess.graph, rs, eff, sess.workload)
-                rs_lat = self._latency(sess, rs, eff)
-                reasons = per_session[sid].reasons
-                cur = Solution(sess.config.boundaries, sess.config.assignment, 0.0)
-                cur_lat = self._latency(sess, cur, eff)
-                kind = DecisionKind.RESPLIT
-                chosen, chosen_lat = rs, rs_lat
-                if mig_lat < rs_lat:
-                    kind, chosen, chosen_lat = DecisionKind.MIGRATE, mig, mig_lat
-                if self._commit(sid, chosen, chosen_lat, cur_lat, kind,
-                                reasons, per_session, now):
-                    self._refresh_loads(table, sid, state)
-
-        solver_time = time.perf_counter() - t0
-        kinds = [d.kind for d in per_session.values()]
-        fd = FleetDecision(
-            t=now,
-            per_session=per_session,
-            solver_time_s=solver_time,
-            n_keep=sum(k == DecisionKind.KEEP for k in kinds),
-            n_migrate=sum(k == DecisionKind.MIGRATE for k in kinds),
-            n_resplit=sum(k == DecisionKind.RESPLIT for k in kinds),
-            n_cooldown=sum(k == DecisionKind.COOLDOWN for k in kinds),
+            eval_time_s=eval_t,
+            pack_time_s=buf.stats["pack_time_s"] - pack0,
         )
         self.decisions.append(fd)
         for sid, d in per_session.items():
@@ -735,14 +713,15 @@ class FleetOrchestrator:
         """Hysteresis + two-phase rollout; KEEP on no-gain or abort.
 
         Returns True iff a new config was actually committed (callers then
-        refresh the shared load table for the rest of the cycle).
+        refresh the shared load table for the rest of the cycle; the
+        session's resident-buffer row is updated here).
         """
         sess = self.sessions[sid]
-        unchanged = (chosen.boundaries == sess.config.boundaries
-                     and chosen.assignment == sess.config.assignment)
-        if not unchanged and chosen_lat > cur_lat * (1.0 - self.min_improvement_frac):
-            unchanged = True
-        if unchanged:
+        if hysteresis_keep(
+            (sess.config.boundaries, sess.config.assignment),
+            (chosen.boundaries, chosen.assignment),
+            chosen_lat, cur_lat, self.min_improvement_frac,
+        ):
             per_session[sid] = Decision(
                 DecisionKind.KEEP, sess.config, reasons, chosen_lat, 0.0
             )
@@ -759,4 +738,5 @@ class FleetOrchestrator:
         sess.config = cfg
         sess.t_last_reconfig = now
         per_session[sid] = Decision(kind, cfg, reasons, chosen_lat, 0.0)
+        self._upsert_row(sess)
         return True

@@ -29,10 +29,41 @@ Exactness: the evaluator reproduces the numpy cost model to float64 rounding;
 the migration DP is exact on the same additive surrogate as
 :func:`repro.core.placement.solve_placement_chain_dp` (both property-tested in
 ``tests/test_fleet_eval.py``).
+
+Resident fleet state (PR 3)
+---------------------------
+
+PR 2 still rebuilt the whole fleet's (B, K) tensors from Python session
+objects every monitoring cycle (``FleetOrchestrator._pack_fleet`` →
+:func:`pack_sessions`), folded induced loads with host-side ``np.add.at``
+scatters, and re-transferred everything to device — O(fleet) host work per
+tick even when nothing changed.  :class:`FleetStateBuffers` inverts the
+ownership: sessions live as ROWS of long-lived device tensors,
+
+* admit / depart / commit apply row-level ``.at[b].set(...)`` updates
+  (amortized-doubling growth of the row axis, power-of-two growth of the
+  segment axis, so compiled variants stay O(log B · log K)),
+* the induced-load fold moves onto jitted scatter-adds inside
+  :class:`ResidentFleetKernel`'s fused pricing program (loads → effective
+  C(t) → batched Φ → per-session trigger env in ONE dispatch), and
+* the migration DP + candidate pricing run as a second fused program with a
+  device-side backtrack, so only O(B) trigger scalars and the triggered
+  set's assignments ever return to host.
+
+**Lifecycle / ownership**: a :class:`~repro.core.fleet.FleetOrchestrator`
+owns exactly one :class:`FleetStateBuffers`; the orchestrator's ``admit`` /
+``depart`` / ``_commit`` are the only writers.  Anything else (simulator
+ticks, admission pricing, benchmarks) reads through the orchestrator's
+``price_fleet`` / ``resident_table`` accessors.  Mutating a
+``FleetSession``'s config without going through the orchestrator desyncs
+the buffers; ``FleetOrchestrator.invalidate_resident_state()`` forces a
+cold rebuild (bit-identical to a fresh :func:`pack_sessions` repack — the
+equivalence is test-enforced in ``tests/test_resident_state.py``).
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -48,6 +79,10 @@ __all__ = [
     "packed_induced_loads",
     "FleetCostEvaluator",
     "BatchedMigrationSolver",
+    "FleetStateBuffers",
+    "ResidentFleetKernel",
+    "ResidentPrice",
+    "gather_rows",
 ]
 
 _BIG = 1e30
@@ -487,3 +522,470 @@ class BatchedMigrationSolver:
                 Solution(packed.boundaries[b], tuple(assign), float(C[b].min()))
             )
         return out
+
+
+# --------------------------------------------------------------------------- #
+# device-resident incremental fleet state (PR 3)
+# --------------------------------------------------------------------------- #
+# buffer attrs deliberately share PackedSessions' field names, so rows copy
+# between the two layouts by getattr on the same name
+_ROW_FIELDS = ("seg_flops", "seg_wbytes", "seg_priv", "seg_node", "valid",
+               "xfer_bytes_tok")
+_VEC_FIELDS = ("n_segs", "t_in", "t_out", "lam", "source", "input_bytes_tok")
+
+
+def gather_rows(rows: Sequence[int], *arrays) -> tuple[np.ndarray, ...]:
+    """Fetch a row subset of device arrays to host.
+
+    The per-cycle host round-trip is supposed to be O(triggered set), not
+    O(fleet) — every device→host row gather goes through here so that stays
+    auditable in one place.  ``np.asarray`` on a committed array is a
+    zero-copy view on CPU (and a single contiguous D2H copy elsewhere), and
+    the numpy take that follows costs O(rows) — both far cheaper per cycle
+    than dispatching a jitted gather per tensor.
+    """
+    ix = np.asarray(rows, dtype=np.int64)
+    return tuple(np.asarray(a)[ix] for a in arrays)
+
+
+class FleetStateBuffers:
+    """Persistent device-resident (B, K) fleet tensors, updated row-wise.
+
+    Row ``b`` holds one live session in the :class:`PackedSessions` layout
+    (``active[b]`` masks free rows).  The row axis grows by amortized
+    doubling and the segment axis by powers of two, so the fused kernels
+    compile O(log B · log K) variants over a fleet's lifetime.  Rows are
+    written with ``.at[b].set(...)`` — a departure-then-admit reuses the
+    freed slot, so steady-state churn never reallocates.
+
+    Invariant (test-enforced): an inactive row is all-zeros, and every
+    active row is bit-identical to what a cold :func:`pack_sessions` repack
+    of the same session would produce — :meth:`upsert` builds the row
+    through :func:`pack_sessions` itself.
+    """
+
+    def __init__(self, *, rows: int = 8, segs: int = 4) -> None:
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        rows = _pow2(max(1, rows))
+        segs = _pow2(max(1, segs))
+        with enable_x64(True):
+            self.seg_flops = jnp.zeros((rows, segs))
+            self.seg_wbytes = jnp.zeros((rows, segs))
+            self.seg_priv = jnp.zeros((rows, segs), dtype=bool)
+            self.seg_node = jnp.zeros((rows, segs), dtype=jnp.int64)
+            self.valid = jnp.zeros((rows, segs), dtype=bool)
+            self.xfer_bytes_tok = jnp.zeros((rows, segs))
+            self.n_segs = jnp.zeros(rows, dtype=jnp.int64)
+            self.t_in = jnp.zeros(rows)
+            self.t_out = jnp.zeros(rows)
+            self.lam = jnp.zeros(rows)
+            self.source = jnp.zeros(rows, dtype=jnp.int64)
+            self.input_bytes_tok = jnp.zeros(rows)
+            self.active = jnp.zeros(rows, dtype=bool)
+        self.row_of: dict[int, int] = {}
+        self._free: list[int] = list(range(rows - 1, -1, -1))
+        self._boundaries: list[tuple[int, ...] | None] = [None] * rows
+        self.stats = {"row_writes": 0, "rebuilds": 0, "grow_rows": 0,
+                      "grow_segs": 0, "pack_time_s": 0.0}
+
+    # -- capacity ------------------------------------------------------- #
+    @property
+    def n_rows(self) -> int:
+        return int(self.seg_flops.shape[0])
+
+    @property
+    def max_segs(self) -> int:
+        return int(self.seg_flops.shape[1])
+
+    def __len__(self) -> int:
+        return len(self.row_of)
+
+    def _grow_rows(self, need: int) -> None:
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        old = self.n_rows
+        new = _pow2(max(need, 2 * old))
+        with enable_x64(True):
+            for name in _ROW_FIELDS:
+                a = getattr(self, name)
+                pad = jnp.zeros((new - old, a.shape[1]), dtype=a.dtype)
+                setattr(self, name, jnp.concatenate([a, pad], axis=0))
+            for name in (*_VEC_FIELDS, "active"):
+                a = getattr(self, name)
+                pad = jnp.zeros(new - old, dtype=a.dtype)
+                setattr(self, name, jnp.concatenate([a, pad]))
+        self._free.extend(range(new - 1, old - 1, -1))
+        self._boundaries.extend([None] * (new - old))
+        self.stats["grow_rows"] += 1
+
+    def _grow_segs(self, need: int) -> None:
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        old = self.max_segs
+        new = _pow2(need)
+        if new <= old:
+            return
+        with enable_x64(True):
+            for name in _ROW_FIELDS:
+                a = getattr(self, name)
+                pad = jnp.zeros((a.shape[0], new - old), dtype=a.dtype)
+                setattr(self, name, jnp.concatenate([a, pad], axis=1))
+        self.stats["grow_segs"] += 1
+
+    # -- row updates ---------------------------------------------------- #
+    def upsert(
+        self,
+        sid: int,
+        graph: ModelGraph,
+        boundaries: Sequence[int],
+        assignment: Sequence[int],
+        workload: Workload,
+        source_node: int,
+        input_bytes_per_token: float,
+    ) -> None:
+        """Write one session's current config into its row (allocating one)."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        t0 = time.perf_counter()
+        self._grow_segs(len(boundaries) - 1)
+        row = self.row_of.get(sid)
+        if row is None:
+            if not self._free:
+                self._grow_rows(self.n_rows + 1)
+            row = self._free.pop()
+            self.row_of[sid] = row
+        one = pack_sessions(
+            [(graph, tuple(boundaries), tuple(assignment), workload,
+              source_node, input_bytes_per_token)],
+            pad_pow2=False, min_k=self.max_segs,
+        )
+        with enable_x64(True):
+            for name in (*_ROW_FIELDS, *_VEC_FIELDS):
+                a = getattr(self, name)
+                setattr(self, name,
+                        a.at[row].set(jnp.asarray(getattr(one, name)[0])))
+            self.active = self.active.at[row].set(True)
+        self._boundaries[row] = one.boundaries[0]
+        self.stats["row_writes"] += 1
+        self.stats["pack_time_s"] += time.perf_counter() - t0
+
+    def remove(self, sid: int) -> None:
+        """Free a departed session's row (zeroed: inactive rows stay zeros)."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        row = self.row_of.pop(sid)
+        with enable_x64(True):
+            for name in (*_ROW_FIELDS, *_VEC_FIELDS, "active"):
+                a = getattr(self, name)
+                setattr(self, name, a.at[row].set(jnp.zeros((), a.dtype)))
+        self._boundaries[row] = None
+        self._free.append(row)
+
+    @classmethod
+    def from_sessions(
+        cls,
+        items: Sequence[tuple[int, tuple]],
+        *,
+        min_rows: int = 8,
+        min_segs: int = 4,
+    ) -> "FleetStateBuffers":
+        """Cold full repack: ``items`` is [(sid, pack_sessions item), ...].
+
+        Rows land densely in ``items`` order and are bit-identical to a
+        :func:`pack_sessions` call over the same items — this IS the
+        reference the incremental path is equivalence-tested against.
+        """
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        t0 = time.perf_counter()
+        n = len(items)
+        if n == 0:
+            return cls(rows=min_rows, segs=min_segs)
+        packed = pack_sessions([it for _, it in items], pad_pow2=True,
+                               min_k=min_segs)
+        buf = cls(rows=max(min_rows, n), segs=packed.max_segs)
+        with enable_x64(True):
+            for name in (*_ROW_FIELDS, *_VEC_FIELDS):
+                a = getattr(buf, name)
+                setattr(buf, name,
+                        a.at[:n].set(jnp.asarray(getattr(packed, name))))
+            buf.active = buf.active.at[:n].set(True)
+        buf.row_of = {sid: i for i, (sid, _) in enumerate(items)}
+        buf._free = list(range(buf.n_rows - 1, n - 1, -1))
+        for i, b in enumerate(packed.boundaries):
+            buf._boundaries[i] = b
+        buf.stats["rebuilds"] += 1
+        buf.stats["pack_time_s"] += time.perf_counter() - t0
+        return buf
+
+    # -- host views ----------------------------------------------------- #
+    def rows_packed(self, sids: Sequence[int]) -> PackedSessions:
+        """Host :class:`PackedSessions` view of the given sessions' rows."""
+        rows = [self.row_of[s] for s in sids]
+        fields = gather_rows(
+            rows, *(getattr(self, name) for name in (*_ROW_FIELDS, *_VEC_FIELDS))
+        )
+        return PackedSessions(
+            *fields,
+            boundaries=tuple(self._boundaries[r] for r in rows),
+        )
+
+
+# --------------------------------------------------------------------------- #
+# fused monitoring-step kernels over the resident buffers
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ResidentPrice:
+    """Device-side outputs of one fused pricing dispatch (row-indexed).
+
+    Only ``lat`` / ``max_util`` / ``min_bw`` — O(B) scalars — are meant to
+    be pulled to host every cycle; the effective-state tensors stay on
+    device and are row-gathered only for the triggered set.
+    """
+
+    lat: object        # (B,)   current-config latency per row
+    max_util: object   # (B,)   max node util over the nodes the row touches
+    min_bw: object     # (B,)   min effective bw over the row's cross hops
+    bg: object         # (B, n) effective background util (others folded in)
+    link_bw: object    # (B, n, n) effective link bandwidth
+    mem: object        # (B, n) residual memory
+    tot_node: object   # (n,)   fleet-total induced node rho
+    tot_link: object   # (n, n) fleet-total link rho
+    tot_w: object      # (n,)   fleet-total resident weight bytes
+
+
+def _make_fused_price(n: int, alpha: float, beta: float, gamma: float,
+                      mem_penalty: float, bw_floor: float):
+    """Induced loads → effective C(t) → batched Φ → trigger env, one program.
+
+    Mirrors the PR-2 cycle-start sequence exactly: jitted scatter-adds
+    replace :func:`packed_induced_loads`'s ``np.add.at``, the fold replicates
+    ``FleetOrchestrator._fold_loads``, pricing reuses :func:`_make_eval`, and
+    the per-row (max util, min bw) reductions replicate
+    ``FleetOrchestrator._session_env``.
+    """
+    import jax.numpy as jnp
+
+    ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
+
+    def price(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes,
+              t_in, t_out, lam, source, active,
+              bg0, link_bw, link_lat, flops_per_s, mem_bw, trusted,
+              mem_bytes):
+        B, K = seg_flops.shape
+        bidx = jnp.arange(B)[:, None]
+        av = valid & active[:, None]
+        # induced loads: raw (un-derated) λ·service scattered onto nodes
+        f_raw = jnp.maximum(flops_per_s[seg_node], _EPS)
+        m_raw = jnp.maximum(mem_bw[seg_node], _EPS)
+        ft = seg_flops / f_raw
+        svc = t_in[:, None] * ft + t_out[:, None] * jnp.maximum(
+            ft, seg_w / m_raw
+        )
+        svc = jnp.where(av, svc, 0.0)
+        node_r = jnp.zeros((B, n)).at[bidx, seg_node].add(lam[:, None] * svc)
+        wb = jnp.zeros((B, n)).at[bidx, seg_node].add(
+            jnp.where(av, seg_w, 0.0)
+        )
+        prev = jnp.concatenate([source[:, None], seg_node[:, :-1]], axis=1)
+        total_tok = t_in + t_out
+        cross = (prev != seg_node) & av & (xbytes > 0)
+        lrho = jnp.where(
+            cross,
+            lam[:, None] * xbytes * total_tok[:, None]
+            / jnp.maximum(link_bw[prev, seg_node], _EPS),
+            0.0,
+        )
+        link_r = jnp.zeros((B, n, n)).at[bidx, prev, seg_node].add(lrho)
+        tot_node = node_r.sum(axis=0)
+        tot_link = link_r.sum(axis=0)
+        tot_w = wb.sum(axis=0)
+        # per-row effective C(t): everyone else folded in (_fold_loads)
+        bg = jnp.clip(bg0[None, :] + (tot_node[None, :] - node_r), 0.0, 0.99)
+        lbw = link_bw[None] * jnp.clip(
+            1.0 - (tot_link[None] - link_r), bw_floor, 1.0
+        )
+        mem = jnp.maximum(0.0, mem_bytes[None, :] - (tot_w[None, :] - wb))
+        lat, _, _ = ev(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes,
+                       t_in, t_out, lam, bg, lbw, link_lat, flops_per_s,
+                       mem_bw, trusted, mem)
+        # trigger env per row (_session_env): fleet-level vectors, reduced
+        # over the nodes/links THIS row touches
+        util_vec = jnp.clip(bg0 + tot_node, 0.0, 2.0)
+        u_seg = jnp.where(valid, util_vec[seg_node], -jnp.inf)
+        max_util = jnp.maximum(u_seg.max(axis=1), util_vec[source])
+        ebw = link_bw * jnp.clip(1.0 - tot_link, bw_floor, 1.0)
+        hop_ok = valid & (prev != seg_node)
+        min_bw = jnp.where(hop_ok, ebw[prev, seg_node], jnp.inf).min(axis=1)
+        return (lat, max_util, min_bw, bg, lbw, mem,
+                tot_node, tot_link, tot_w)
+
+    return price
+
+
+def _make_fused_migrate(K: int, n: int, alpha: float, beta: float,
+                        gamma: float, mem_penalty: float):
+    """Placement DP + device backtrack + candidate pricing for ALL rows.
+
+    Same surrogate prep as :class:`BatchedMigrationSolver` (moved from numpy
+    onto device) and the same DP; running every row — triggered or not —
+    keeps the compiled shape fixed at (B, K, n), so the varying triggered-set
+    size never recompiles and never round-trips the fleet through host.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    dp = _make_migration_dp(K, n)
+    ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
+
+    def migrate(seg_flops, seg_w, seg_priv, valid, xbytes, n_segs,
+                t_in, t_out, lam, source, input_bytes_tok,
+                bg, lbw, mem, link_lat, flops_per_s, mem_bw, trusted):
+        B = seg_flops.shape[0]
+        untrusted = ~trusted
+        derate = jnp.maximum(_EPS, 1.0 - bg)                      # (B, n)
+        f_eff = jnp.maximum(flops_per_s[None, :] * derate, _EPS)
+        m_eff = jnp.maximum(mem_bw[None, :] * derate, _EPS)
+        ft = seg_flops[:, :, None] / f_eff[:, None, :]            # (B, K, n)
+        svc = (t_in[:, None, None] * ft
+               + t_out[:, None, None]
+               * jnp.maximum(ft, seg_w[:, :, None] / m_eff[:, None, :]))
+        load = jnp.minimum(lam[:, None, None] * svc, 0.9)
+        exec_cost = svc / (1.0 - load)
+        exec_cost = jnp.where(
+            seg_priv[:, :, None] & untrusted[None, None, :], _BIG, exec_cost
+        )
+        total_tok = (t_in + t_out)[:, None, None, None]
+        xfer = (xbytes[:, :, None, None] * total_tok
+                / jnp.maximum(lbw[:, None], _EPS)) + link_lat[None, None]
+        xfer = jnp.where(jnp.eye(n, dtype=bool)[None, None], 0.0, xfer)
+        src_bytes = input_bytes_tok * (t_in + t_out)
+        src_xfer = (src_bytes[:, None]
+                    / jnp.maximum(lbw[jnp.arange(B), source], _EPS)
+                    + link_lat[source])
+        src_xfer = jnp.where(
+            source[:, None] == jnp.arange(n)[None, :], 0.0, src_xfer
+        )
+        C, parents = jax.vmap(dp)(exec_cost, xfer, n_segs, src_xfer)
+        # backtrack on device: rows shorter than K hold the carry until the
+        # scan enters their chain, so position k-1 lands the argmin row-end
+        j0 = jnp.argmin(C, axis=1)                                # (B,)
+        rows = jnp.arange(B)
+
+        def bt(j, step):
+            j = jnp.where(step <= n_segs - 2, parents[rows, step, j], j)
+            return j, j
+
+        _, ys = jax.lax.scan(bt, j0, jnp.arange(K - 2, -1, -1))   # (K-1, B)
+        assign = jnp.concatenate(
+            [jnp.flip(ys, axis=0).T, j0[:, None]], axis=1
+        )                                                         # (B, K)
+        mig_lat, _, _ = ev(seg_flops, seg_w, seg_priv, assign, valid, xbytes,
+                           t_in, t_out, lam, bg, lbw, link_lat, flops_per_s,
+                           mem_bw, trusted, mem)
+        return assign, mig_lat, C.min(axis=1)
+
+    return migrate
+
+
+class ResidentFleetKernel:
+    """Compiled fused-step programs, keyed by (rows, segs, n, weights).
+
+    Two programs per shape: ``price`` (every cycle) and ``migrate`` (only
+    on cycles with a non-empty triggered set).  The buffer axes grow
+    pow2/doubling, so a fleet compiles O(log B · log K) variants total.
+    """
+
+    def __init__(self) -> None:
+        self._price_c: dict[tuple, object] = {}
+        self._mig_c: dict[tuple, object] = {}
+
+    @staticmethod
+    def state_args(state: SystemState):
+        """C(t) vectors uploaded once per cycle; ``price`` and ``migrate``
+        share the same upload when the caller passes it through."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        with enable_x64(True):
+            return (
+                jnp.asarray(state.background_util),
+                jnp.asarray(np.nan_to_num(state.link_bw, posinf=_BIG)),
+                jnp.asarray(np.nan_to_num(state.link_lat, posinf=_BIG)),
+                jnp.asarray(state.flops_per_s),
+                jnp.asarray(state.mem_bw),
+                jnp.asarray(state.trusted.astype(bool)),
+                jnp.asarray(state.mem_bytes),
+            )
+
+    def price(
+        self,
+        buf: FleetStateBuffers,
+        state: SystemState,
+        *,
+        weights: CostWeights = CostWeights(),
+        mem_penalty: float = 1e3,
+        bw_floor: float = 0.05,
+        state_args: tuple | None = None,
+    ) -> ResidentPrice:
+        import jax
+        from jax.experimental import enable_x64
+
+        n = state.num_nodes
+        key = (buf.n_rows, buf.max_segs, n, weights, float(mem_penalty),
+               float(bw_floor))
+        if key not in self._price_c:
+            self._price_c[key] = jax.jit(_make_fused_price(
+                n, weights.alpha, weights.beta, weights.gamma,
+                mem_penalty, bw_floor,
+            ))
+        if state_args is None:
+            state_args = self.state_args(state)
+        with enable_x64(True):
+            out = self._price_c[key](
+                buf.seg_flops, buf.seg_wbytes, buf.seg_priv, buf.seg_node,
+                buf.valid, buf.xfer_bytes_tok, buf.t_in, buf.t_out, buf.lam,
+                buf.source, buf.active, *state_args,
+            )
+        return ResidentPrice(*out)
+
+    def migrate(
+        self,
+        buf: FleetStateBuffers,
+        price: ResidentPrice,
+        state: SystemState,
+        *,
+        weights: CostWeights = CostWeights(),
+        mem_penalty: float = 1e3,
+        state_args: tuple | None = None,
+    ):
+        """(assignments (B, K), candidate latency (B,), DP cost (B,))."""
+        import jax
+        from jax.experimental import enable_x64
+
+        n = state.num_nodes
+        key = (buf.n_rows, buf.max_segs, n, weights, float(mem_penalty))
+        if key not in self._mig_c:
+            self._mig_c[key] = jax.jit(_make_fused_migrate(
+                buf.max_segs, n, weights.alpha, weights.beta, weights.gamma,
+                mem_penalty,
+            ))
+        if state_args is None:
+            state_args = self.state_args(state)
+        (_, _, link_lat, flops_per_s, mem_bw, trusted, _) = state_args
+        with enable_x64(True):
+            assign, mig_lat, cost = self._mig_c[key](
+                buf.seg_flops, buf.seg_wbytes, buf.seg_priv, buf.valid,
+                buf.xfer_bytes_tok, buf.n_segs, buf.t_in, buf.t_out,
+                buf.lam, buf.source, buf.input_bytes_tok,
+                price.bg, price.link_bw, price.mem,
+                link_lat, flops_per_s, mem_bw, trusted,
+            )
+        return assign, mig_lat, cost

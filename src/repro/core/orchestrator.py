@@ -19,7 +19,7 @@ from .graph import ModelGraph
 from .placement import Solution, local_search, solve_placement_chain_dp
 from .profiling import CapacityProfiler
 from .splitter import SplitRevision
-from .triggers import SolveThrottle, Thresholds, should_reconfigure
+from .triggers import SolveThrottle, Thresholds, decision_gate, hysteresis_keep
 
 __all__ = ["DecisionKind", "Decision", "AdaptiveOrchestrator"]
 
@@ -97,25 +97,20 @@ class AdaptiveOrchestrator:
         state = self.profiler.system_state()
         t0 = time.perf_counter()
 
-        if not should_reconfigure(env, self.thresholds):
-            d = Decision(DecisionKind.KEEP, self.current, (),
-                         self._predicted_latency(
-                             Solution(self.current.boundaries,
-                                      self.current.assignment, 0.0), state),
-                         time.perf_counter() - t0)
-            self.decisions.append(d)
-            return d
-
+        # trigger → cool-down → solver-duty-cycle gate (one skeleton shared
+        # with the fleet orchestrator — see triggers.decision_gate)
+        gate = decision_gate(env, self.thresholds, now=now,
+                             t_last_reconfig=self.t_last_reconfig,
+                             throttle=self.throttle)
         reasons = tuple(env.reasons)
-        if now - self.t_last_reconfig < self.thresholds.cooldown_s:
+        if gate == "cooldown":
             d = Decision(DecisionKind.COOLDOWN, self.current, reasons, 0.0,
                          time.perf_counter() - t0)
             self.decisions.append(d)
             return d
-
-        # --- solver duty-cycle limit: same degraded context, recent solve ---
-        if self.throttle.should_skip(env, now):
-            d = Decision(DecisionKind.KEEP, self.current, reasons,
+        if gate != "solve":  # "keep" (no trigger) or "throttled" (reuse answer)
+            d = Decision(DecisionKind.KEEP, self.current,
+                         reasons if gate == "throttled" else (),
                          self._predicted_latency(
                              Solution(self.current.boundaries,
                                       self.current.assignment, 0.0), state),
@@ -149,13 +144,11 @@ class AdaptiveOrchestrator:
 
         cur_sol = Solution(self.current.boundaries, self.current.assignment, 0.0)
         cur_lat = self._predicted_latency(cur_sol, state)
-        unchanged = (chosen.boundaries == self.current.boundaries
-                     and chosen.assignment == self.current.assignment)
-        # hysteresis: a reconfiguration costs a broadcast + weight staging —
-        # only worth it if the predicted gain is material
-        if not unchanged and chosen_lat > cur_lat * (1.0 - self.min_improvement_frac):
-            unchanged = True
-        if unchanged:
+        if hysteresis_keep(
+            (self.current.boundaries, self.current.assignment),
+            (chosen.boundaries, chosen.assignment),
+            chosen_lat, cur_lat, self.min_improvement_frac,
+        ):
             d = Decision(DecisionKind.KEEP, self.current, reasons, chosen_lat,
                          solver_time)
             self.decisions.append(d)

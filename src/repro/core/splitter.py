@@ -45,12 +45,73 @@ __all__ = [
     "brute_force_joint",
     "JaxJointSplitter",
     "BatchedJointSplitter",
+    "PackedProblem",
+    "pack_problem",
     "SessionProblem",
     "SplitRevision",
 ]
 
 _INF = float("inf")
 _BIG = 1e30  # finite stand-in for +inf inside jitted code
+
+
+@dataclass(frozen=True)
+class PackedProblem:
+    """State-independent DP inputs for one (graph, coarsening, input width).
+
+    Everything here depends only on the model graph, the coarsening cap it
+    was built with, and the ingress byte width — NOT on C(t).  Callers that
+    re-solve the same problem against a moving state (the admission defer
+    queue re-pricing a parked request every poll) compute this once and pass
+    it back through :attr:`SessionProblem.prepacked`; the per-solve work is
+    then only the state-dependent transfer matrix and effective rates.
+    """
+
+    graph: ModelGraph               # the graph this pack was built FROM
+    flops_ps: np.ndarray            # (L+1,) FLOPs/token prefix sums
+    wbytes_ps: np.ndarray           # (L+1,) weight-byte prefix sums
+    priv_ps: np.ndarray             # (L+1,) privacy-count prefix sums
+    boundary_bytes: np.ndarray      # (L+1,) bytes/token cut at l; [0]=ingress
+    unit_map: tuple[int, ...]       # coarse unit i ends before unit_map[i]
+    units: int | None               # the coarsen cap this was built with
+    input_bytes_per_token: float
+
+    @property
+    def L(self) -> int:
+        return len(self.unit_map)
+
+
+def pack_problem(
+    graph: ModelGraph,
+    *,
+    units: int | None = None,
+    input_bytes_per_token: float = 4.0,
+) -> PackedProblem:
+    """Coarsen + prefix-sum a graph into its reusable DP form (O(L), once)."""
+    flops = graph.flops
+    wbytes = graph.weight_bytes
+    abytes = graph.act_out_bytes
+    priv = graph.privacy.astype(np.float64)
+    if units is not None and len(graph) > units:
+        # coarsen: group consecutive units so the DP stays small on huge graphs
+        groups = np.array_split(np.arange(len(graph)), units)
+        flops = np.array([graph.flops[g].sum() for g in groups])
+        wbytes = np.array([graph.weight_bytes[g].sum() for g in groups])
+        abytes = np.array([graph.act_out_bytes[g[-1]] for g in groups])
+        priv = np.array([graph.privacy[g].any() for g in groups], dtype=np.float64)
+        unit_map = [int(g[-1]) + 1 for g in groups]  # group i ends before unit_map[i]
+    else:
+        unit_map = list(range(1, len(graph) + 1))
+    L = len(flops)
+    flops_ps = np.concatenate([[0.0], np.cumsum(flops)])
+    wbytes_ps = np.concatenate([[0.0], np.cumsum(wbytes)])
+    priv_ps = np.concatenate([[0.0], np.cumsum(priv)])
+    # boundary bytes per token when cutting at l (l=0 is the raw input)
+    bb = np.zeros(L + 1)
+    bb[0] = input_bytes_per_token
+    bb[1:L] = abytes[: L - 1]
+    return PackedProblem(graph, flops_ps, wbytes_ps, priv_ps, bb,
+                         tuple(unit_map), units, float(input_bytes_per_token))
 
 
 def _problem_arrays(
@@ -61,41 +122,33 @@ def _problem_arrays(
     source_node: int,
     input_bytes_per_token: float,
     max_units: int | None = None,
+    prepacked: PackedProblem | None = None,
 ):
-    """Pack the DP inputs into dense arrays (optionally coarsened)."""
-    flops = graph.flops
-    wbytes = graph.weight_bytes
-    abytes = graph.act_out_bytes
-    priv = graph.privacy.astype(np.float64)
-    if max_units is not None and len(graph) > max_units:
-        # coarsen: group consecutive units so the DP stays small on huge graphs
-        groups = np.array_split(np.arange(len(graph)), max_units)
-        flops = np.array([graph.flops[g].sum() for g in groups])
-        wbytes = np.array([graph.weight_bytes[g].sum() for g in groups])
-        abytes = np.array([graph.act_out_bytes[g[-1]] for g in groups])
-        priv = np.array([graph.privacy[g].any() for g in groups], dtype=np.float64)
-        unit_map = [int(g[-1]) + 1 for g in groups]  # group i ends before unit_map[i]
-    else:
-        unit_map = list(range(1, len(graph) + 1))
-    L = len(flops)
+    """Pack the DP inputs into dense arrays (optionally coarsened).
+
+    ``prepacked`` skips the state-independent half when it matches the
+    requested (graph, coarsening, input width); any mismatch — including a
+    pack built from a DIFFERENT graph object — silently repacks, so a stale
+    cache can never deploy another graph's boundaries.
+    """
+    pp = prepacked
+    if (pp is None or pp.graph is not graph or pp.units != max_units
+            or pp.input_bytes_per_token != float(input_bytes_per_token)):
+        pp = pack_problem(graph, units=max_units,
+                          input_bytes_per_token=input_bytes_per_token)
+    L = pp.L
     tokens = float(wl.total_tokens)
     derate = np.maximum(1e-12, 1.0 - state.background_util)
     eff_f = state.flops_per_s * derate
     eff_m = state.mem_bw * derate
-
-    flops_ps = np.concatenate([[0.0], np.cumsum(flops)])
-    wbytes_ps = np.concatenate([[0.0], np.cumsum(wbytes)])
-    priv_ps = np.concatenate([[0.0], np.cumsum(priv)])
-    # boundary bytes per token when cutting at l (l=0 is the raw input)
-    bb = np.zeros(L + 1)
-    bb[0] = input_bytes_per_token
-    bb[1:L] = abytes[: L - 1]
+    bb = pp.boundary_bytes
     xfer = bb[:, None, None] * tokens / np.maximum(state.link_bw, 1e-12)[None] + (
         state.link_lat[None] * (bb[:, None, None] > 0)
     )
     idx = np.arange(state.num_nodes)
     xfer[:, idx, idx] = 0.0  # same node: no transfer
-    return flops_ps, wbytes_ps, priv_ps, xfer, eff_f, eff_m, unit_map, L
+    return (pp.flops_ps, pp.wbytes_ps, pp.priv_ps, xfer, eff_f, eff_m,
+            list(pp.unit_map), L)
 
 
 def _backtrack(
@@ -273,12 +326,15 @@ class SessionProblem:
 
     Sessions in a batch share the fleet ``SystemState`` but differ in model
     graph (hence privacy mask), workload, ingress node, and input width.
+    ``prepacked`` (see :func:`pack_problem`) carries the state-independent
+    arrays across repeated solves of the same problem.
     """
 
     graph: ModelGraph
     workload: Workload
     source_node: int = 0
     input_bytes_per_token: float = 4.0
+    prepacked: PackedProblem | None = None
 
 
 class BatchedJointSplitter:
@@ -292,14 +348,49 @@ class BatchedJointSplitter:
     bucket the batch dimension is padded to the next power of two, bounding
     compiled variants at O(#distinct L × log max_batch).
 
+    ``shared_units`` is the shared-coarsening policy: every graph at least
+    that deep is coarsened to EXACTLY ``shared_units`` DP units, so a
+    heterogeneous catalog (34–64-layer archs) collapses into ONE bucket and
+    one compiled variant per batch size, instead of one per distinct depth.
+    Graphs shallower than the cap keep their native depth (units cannot be
+    manufactured).  ``None`` preserves the per-depth bucketing.
+
     Equivalent to per-session :func:`solve_joint_dp` on the additive
     surrogate (property-tested in ``tests/test_fleet.py``); the win is
     amortization — one dispatch + one XLA program for dozens of sessions.
     """
 
-    def __init__(self, *, pad_pow2: bool = True) -> None:
+    def __init__(self, *, pad_pow2: bool = True,
+                 shared_units: int | None = None) -> None:
         self._compiled: dict[tuple[int, int, int], object] = {}
         self.pad_pow2 = pad_pow2
+        self.shared_units = shared_units
+
+    def units_for(self, graph_len: int, max_units: int | None) -> int | None:
+        """Effective coarsen cap for a graph under the shared-units policy.
+
+        ``None`` means "no coarsening" — returned for graphs already at or
+        below the cap, so this method (not the pack) is authoritative for
+        the shallow-graph exemption.
+        """
+        u = max_units
+        if self.shared_units is not None:
+            u = self.shared_units if u is None else min(u, self.shared_units)
+        return None if u is None or graph_len <= u else u
+
+    def pack_problem(
+        self,
+        graph: ModelGraph,
+        *,
+        max_units: int | None = None,
+        input_bytes_per_token: float = 4.0,
+    ) -> PackedProblem:
+        """Policy-consistent :func:`pack_problem` (cacheable per request)."""
+        return pack_problem(
+            graph,
+            units=self.units_for(len(graph), max_units),
+            input_bytes_per_token=input_bytes_per_token,
+        )
 
     def _build(self, B: int, L: int, n: int):
         import jax
@@ -329,13 +420,15 @@ class BatchedJointSplitter:
         untrusted = jnp.asarray(~state.trusted.astype(bool))
 
         # pack per-session arrays, bucketing by coarsened DP depth L
+        # (shared_units collapses heterogeneous depths into one bucket)
         packed = []
         buckets: dict[int, list[int]] = {}
         for i, p in enumerate(problems):
             arrs = _problem_arrays(
                 p.graph, state, p.workload, source_node=p.source_node,
                 input_bytes_per_token=p.input_bytes_per_token,
-                max_units=max_units,
+                max_units=self.units_for(len(p.graph), max_units),
+                prepacked=p.prepacked,
             )
             packed.append(arrs)
             buckets.setdefault(arrs[-1], []).append(i)

@@ -7,7 +7,7 @@ from dataclasses import dataclass, field
 
 __all__ = ["Thresholds", "TriggerState", "should_reconfigure", "EWMA",
            "SolveThrottle", "QoSClass", "QOS_INTERACTIVE", "QOS_STANDARD",
-           "QOS_BATCH", "QOS_CLASSES"]
+           "QOS_BATCH", "QOS_CLASSES", "decision_gate", "hysteresis_keep"]
 
 
 @dataclass(frozen=True)
@@ -113,6 +113,60 @@ class TriggerState:
     # unlike ``reasons``, these carry no live values, so orchestrators can
     # compare trigger CONTEXT across cycles (solver duty-cycle limiting)
     kinds: tuple[str, ...] = ()
+
+
+def decision_gate(
+    env: TriggerState,
+    th: Thresholds,
+    *,
+    now: float,
+    t_last_reconfig: float,
+    throttle: SolveThrottle | None = None,
+) -> str:
+    """The trigger → cool-down → duty-cycle gate every orchestrator runs.
+
+    One copy of the decision skeleton shared by the single-session
+    :class:`~repro.core.orchestrator.AdaptiveOrchestrator` and the fleet
+    monitoring cycle (:meth:`~repro.core.fleet.FleetOrchestrator.step`), so
+    the two can never drift.  Returns one of:
+
+    * ``"keep"``      — no trigger fired; stay on the current config.
+    * ``"cooldown"``  — a trigger fired inside the T_cool window.
+    * ``"throttled"`` — same degraded context as the last (rejected) solve;
+      reuse that answer instead of re-solving (see :class:`SolveThrottle`).
+    * ``"solve"``     — run the migrate/re-split machinery.
+
+    Ordering matters: ``should_reconfigure`` populates ``env.reasons``/
+    ``env.kinds``, and the throttle only records a context once the
+    cool-down has passed (matching both pre-existing call sites).
+    """
+    if not should_reconfigure(env, th):
+        return "keep"
+    if now - t_last_reconfig < th.cooldown_s:
+        return "cooldown"
+    if throttle is not None and throttle.should_skip(env, now):
+        return "throttled"
+    return "solve"
+
+
+def hysteresis_keep(
+    current: tuple[tuple[int, ...], tuple[int, ...]],
+    candidate: tuple[tuple[int, ...], tuple[int, ...]],
+    candidate_lat: float,
+    current_lat: float,
+    min_improvement_frac: float,
+) -> bool:
+    """Anti-thrash hysteresis shared by the single- and multi-session AOs.
+
+    ``current``/``candidate`` are (boundaries, assignment) pairs.  True →
+    KEEP: the candidate is identical to the incumbent, or its predicted
+    latency does not beat the incumbent's by at least
+    ``min_improvement_frac`` (a reconfiguration costs a broadcast + weight
+    staging — only worth it if the predicted gain is material).
+    """
+    if candidate == current:
+        return True
+    return candidate_lat > current_lat * (1.0 - min_improvement_frac)
 
 
 def should_reconfigure(env: TriggerState, th: Thresholds) -> bool:

@@ -314,11 +314,12 @@ class FleetSimulator:
     Session arrivals are Poisson; each session draws an architecture from
     ``catalog`` (heterogeneous model graphs), a workload from the configured
     ranges, an ingress node, and an exponential lifetime.  Every tick all
-    active sessions are priced through :func:`chain_latency` against their
-    *effective* state (other sessions folded into background/link load via
-    the orchestrator's shared capacity accounting), and the
-    :class:`FleetOrchestrator` runs a batched monitoring cycle at the
-    configured interval.
+    active sessions are priced in ONE fused device dispatch over the
+    orchestrator's resident fleet state
+    (:meth:`~repro.core.fleet.FleetOrchestrator.price_fleet` — each session
+    against its effective C(t), other sessions folded into background/link
+    load), and the :class:`FleetOrchestrator` runs a monitoring cycle at
+    the configured interval.
     """
 
     def __init__(
@@ -460,20 +461,16 @@ class FleetSimulator:
                     rejected += 1
 
             # ---- price every session against the shared fleet state ----
-            table = orch.load_table(state)
-            lats = []
-            slos = []
-            for sid, sess in orch.sessions.items():
-                eff = orch.effective_state(state, exclude=(sid,), _table=table)
-                lats.append(chain_latency(
-                    sess.graph, sess.config.boundaries, sess.config.assignment,
-                    eff, sess.workload,
-                ))
-                slos.append(
-                    sess.qos.latency_slo_s if sess.qos is not None
-                    else orch.thresholds.latency_max_s
-                )
-            rho = np.clip(state.background_util + table[1], 0.0, None)
+            # one fused device dispatch over the orchestrator's resident
+            # buffers (each row against its own effective C(t)) replaces the
+            # per-session Python chain_latency loop + O(fleet) load table
+            sids, lat_arr, rho = orch.price_fleet(state)
+            slo_arr = np.asarray([
+                orch.sessions[sid].qos.latency_slo_s
+                if orch.sessions[sid].qos is not None
+                else orch.thresholds.latency_max_s
+                for sid in sids
+            ])
 
             # ---- feed Monitoring & CP ----
             for i in range(state.num_nodes):
@@ -483,8 +480,8 @@ class FleetSimulator:
                     util_background=float(state.background_util[i]),
                 ))
             orch.profiler.observe_links(state.link_bw)
-            if lats:
-                orch.profiler.observe_latency(float(np.mean(lats)))
+            if lat_arr.size:
+                orch.profiler.observe_latency(float(lat_arr.mean()))
 
             n_mig = n_rs = 0
             solver_t = 0.0
@@ -494,14 +491,12 @@ class FleetSimulator:
                 n_mig, n_rs = fd.n_migrate, fd.n_resplit
                 solver_t = fd.solver_time_s
 
-            lat_arr = np.asarray(lats)
-            slo_arr = np.asarray(slos)
             ticks.append(FleetTickMetrics(
                 t=t,
                 n_sessions=len(orch.sessions),
                 latencies=lat_arr,
                 qos_violation_frac=(
-                    float((lat_arr > slo_arr).mean()) if lats else 0.0
+                    float((lat_arr > slo_arr).mean()) if lat_arr.size else 0.0
                 ),
                 node_rho=rho,
                 admitted=admitted, departed=departed, rejected=rejected,

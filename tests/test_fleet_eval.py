@@ -222,14 +222,15 @@ def test_batched_step_runs_no_python_local_search(monkeypatch):
     )
 
 
-def test_batched_step_preserves_invariants_vs_legacy():
-    """Batched and legacy paths keep identical config invariants (privacy,
-    boundary validity) on the same fleet; decisions may differ (the batched
-    path skips the Φ refinement by design)."""
-    for batched in (True, False):
+def test_resident_step_preserves_invariants_vs_cold_repack():
+    """Incremental resident buffers and a repack-every-cycle fleet keep
+    identical config invariants (privacy, boundary validity) on the same
+    fleet (full decision equivalence lives in test_resident_state.py)."""
+    for cold_repack in (False, True):
         orch = _hot_fleet(seed=1)
-        orch.use_batched_eval = batched
         for t in range(4):
+            if cold_repack:
+                orch.invalidate_resident_state()
             orch.step(now=float(t))
         for sess in orch.sessions.values():
             b, a = sess.config.boundaries, sess.config.assignment

@@ -1,0 +1,450 @@
+"""Device-resident incremental fleet state ≡ cold full repack.
+
+The PR-3 contract: `FleetStateBuffers` rows updated incrementally across
+admit / depart / commit / capacity-change sequences are bit-identical to a
+cold `pack_sessions`-based rebuild of the same sessions, monitoring
+decisions are identical between the incremental and repack-every-cycle
+modes, steady-state cycles do ZERO packing, and deferred admission requests
+re-price without re-packing.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchedJointSplitter,
+    FleetOrchestrator,
+    FleetStateBuffers,
+    InProcessAgent,
+    ReconfigurationBroadcast,
+    SystemState,
+    Thresholds,
+    Workload,
+    solve_joint_dp,
+)
+from repro.core.admission import AdmissionKind, AdmissionRequest, FleetAdmissionController
+from repro.core.graph import GraphNode, ModelGraph
+from repro.core.placement import surrogate_cost
+from repro.core.profiling import CapacityProfiler
+from repro.core.splitter import SessionProblem
+from repro.core.triggers import QOS_STANDARD
+
+N_NODES = 4
+
+BUFFER_FIELDS = (
+    "seg_flops", "seg_wbytes", "seg_priv", "seg_node", "valid",
+    "xfer_bytes_tok", "n_segs", "t_in", "t_out", "lam", "source",
+    "input_bytes_tok",
+)
+
+
+def _state(seed=0, n=N_NODES, util=0.55):
+    rng = np.random.default_rng(seed)
+    bw = np.full((n, n), 2e7)
+    np.fill_diagonal(bw, np.inf)
+    return SystemState(
+        flops_per_s=np.full(n, 5e12),
+        mem_bytes=np.full(n, 40e9),
+        background_util=np.full(n, util) + rng.uniform(0, 0.05, n),
+        trusted=np.array([True] * (n - 1) + [False]),
+        link_bw=bw,
+        link_lat=np.full((n, n), 2e-3) * (1 - np.eye(n)),
+        mem_bw=np.full(n, 2e11),
+    )
+
+
+def _graph(L, seed=0, heavy=False):
+    rng = np.random.default_rng(seed)
+    scale = 4.0 if heavy else 1.0
+    return ModelGraph(f"g{L}-{seed}", [
+        GraphNode(f"u{i}", scale * float(rng.uniform(2e10, 6e10)),
+                  float(rng.uniform(2e8, 6e8)),
+                  float(rng.uniform(4e4, 1e5)),
+                  privacy_critical=(i == 0))
+        for i in range(L)
+    ])
+
+
+def _orch(state, *, cooldown=0.5):
+    return FleetOrchestrator(
+        profiler=CapacityProfiler(base_state=state),
+        broadcast=ReconfigurationBroadcast(
+            [InProcessAgent(i) for i in range(state.num_nodes)]
+        ),
+        thresholds=Thresholds(cooldown_s=cooldown),
+        solve_backoff_s=0.0,
+    )
+
+
+def _assert_rows_match_cold_repack(orch):
+    """Every live session's resident row ≡ its cold pack_sessions row."""
+    buf = orch._resident()   # lazily built on first use; incremental after
+    cold = FleetStateBuffers.from_sessions([
+        (sid, (s.graph, s.config.boundaries, s.config.assignment,
+               s.workload, s.source_node, s.input_bytes_per_token))
+        for sid, s in orch.sessions.items()
+    ], min_segs=buf.max_segs)
+    assert set(buf.row_of) == set(cold.row_of)
+    for name in BUFFER_FIELDS:
+        inc = np.asarray(getattr(buf, name))
+        ref = np.asarray(getattr(cold, name))
+        for sid in orch.sessions:
+            np.testing.assert_array_equal(
+                inc[buf.row_of[sid]], ref[cold.row_of[sid]],
+                err_msg=f"{name} row for sid {sid}",
+            )
+    # inactive rows stay zeroed (so a hole can never leak into the fold)
+    act = np.asarray(buf.active)
+    for name in BUFFER_FIELDS:
+        arr = np.asarray(getattr(buf, name))
+        assert (arr[~act] == 0).all(), name
+
+
+def test_incremental_rows_bitwise_equal_cold_repack_under_churn():
+    """admit/depart/commit/capacity sequences, incl. row-axis growth, seg-axis
+    growth, and slot reuse: incremental rows == pack_sessions rows, bitwise."""
+    state = _state(0)
+    orch = _orch(state)
+    rng = np.random.default_rng(7)
+    # depths straddle the fleet splitter's shared_units coarsening cap (32)
+    depths = (8, 16, 30, 34, 40)
+    live = []
+    for step in range(40):
+        op = rng.random()
+        if op < 0.5 or not live:
+            L = int(depths[rng.integers(len(depths))])
+            sid = orch.admit(
+                _graph(L, seed=step), Workload(64, 16, float(rng.uniform(1, 4))),
+                source_node=int(rng.integers(0, 3)), now=float(step),
+            )
+            live.append(sid)
+        elif op < 0.75:
+            sid = live.pop(int(rng.integers(len(live))))
+            orch.depart(sid)
+        else:
+            # capacity change + a monitoring cycle (commits rewrite rows)
+            orch.profiler.base_state.background_util[:] = np.clip(
+                orch.profiler.base_state.background_util
+                + rng.uniform(-0.1, 0.1, N_NODES), 0.0, 0.9,
+            )
+            orch.step(now=float(step))
+        if orch.sessions:
+            _assert_rows_match_cold_repack(orch)
+    assert orch._buffers.stats["grow_rows"] >= 1      # row axis doubled
+    assert orch.full_rebuilds <= 1                    # never re-packed wholesale
+
+
+def test_seg_axis_growth_keeps_rows_equal():
+    """A re-split/admit with more segments than the padded K grows the seg
+    axis in place; all resident rows stay bit-identical to a cold repack."""
+    state = _state(1)
+    orch = _orch(state)
+    g = _graph(12, seed=1)
+    orch.admit(g, Workload(64, 16, 2.0), now=0.0)
+    assert orch._resident().max_segs == 4
+    # force a 6-segment config through the commit path
+    sid2 = orch.admit(_graph(12, seed=2), Workload(64, 16, 2.0), now=0.0)
+    sess = orch.sessions[sid2]
+    from repro.core.placement import Solution
+    b = (0, 2, 4, 6, 8, 10, 12)
+    a = (0, 1, 0, 2, 1, 0)
+    cfg = orch.broadcast.rollout(b, a, reason="test", now=0.0)
+    sess.config = cfg
+    orch._upsert_row(sess)
+    buf = orch._buffers
+    assert buf.max_segs == 8 and buf.stats["grow_segs"] == 1
+    _assert_rows_match_cold_repack(orch)
+    assert Solution(b, a, 0.0).boundaries == buf.rows_packed([sid2]).boundaries[0]
+
+
+def test_resident_decisions_equal_cold_repack_decisions():
+    """Paired saturated fleets — one incremental, one forced to cold-repack
+    every cycle — produce identical decisions (kinds, boundaries,
+    assignments) and matching latencies through churn and trace changes."""
+    def build():
+        state = _state(3, util=0.6)
+        orch = _orch(state)
+        rng = np.random.default_rng(11)
+        for k in range(8):
+            orch.admit(
+                _graph(10, seed=k, heavy=True),
+                Workload(64, 16, float(rng.uniform(2.0, 4.0))),
+                source_node=int(rng.integers(0, 3)), now=0.0,
+            )
+        return orch
+
+    inc, cold = build(), build()
+    rng = np.random.default_rng(5)
+    for t in range(8):
+        # identical capacity fluctuation on both fleets
+        delta = rng.uniform(-0.05, 0.1, N_NODES)
+        for o in (inc, cold):
+            o.profiler.base_state.background_util[:] = np.clip(
+                o.profiler.base_state.background_util + delta, 0.0, 0.9
+            )
+        cold.invalidate_resident_state()           # force full repack
+        fd_i = inc.step(now=float(t))
+        fd_c = cold.step(now=float(t))
+        assert set(fd_i.per_session) == set(fd_c.per_session)
+        for sid, di in fd_i.per_session.items():
+            dc = fd_c.per_session[sid]
+            assert di.kind == dc.kind, (t, sid)
+            assert di.config.boundaries == dc.config.boundaries, (t, sid)
+            assert di.config.assignment == dc.config.assignment, (t, sid)
+            assert di.predicted_latency_s == pytest.approx(
+                dc.predicted_latency_s, rel=1e-9
+            )
+        # churn between cycles exercises slot reuse on the incremental side
+        if t == 3:
+            for o in (inc, cold):
+                o.depart(sorted(o.sessions)[1])
+    assert cold.full_rebuilds >= 8
+    assert inc.full_rebuilds <= 1
+
+
+def test_admission_verdicts_equal_cold_repack():
+    """The admission controller prices identically against incremental
+    buffers and a repack-every-request orchestrator."""
+    def build():
+        state = _state(4, util=0.5)
+        orch = _orch(state)
+        return orch, FleetAdmissionController(orch, max_sessions=8,
+                                              rho_ceiling=1.0)
+
+    (orch_i, ctrl_i), (orch_c, ctrl_c) = build(), build()
+    rng = np.random.default_rng(9)
+    for k in range(10):
+        g = _graph(10, seed=100 + k, heavy=True)
+        wl = Workload(64, 16, float(rng.uniform(1.0, 3.0)))
+        req = AdmissionRequest(g, wl, source_node=int(rng.integers(0, 3)),
+                               qos=QOS_STANDARD, t_submit=float(k))
+        orch_c.invalidate_resident_state()
+        v_i = ctrl_i.request(req, now=float(k))
+        v_c = ctrl_c.request(req, now=float(k))
+        assert v_i.kind == v_c.kind, (k, v_i, v_c)
+        assert v_i.predicted_latency_s == pytest.approx(
+            v_c.predicted_latency_s, rel=1e-9
+        )
+        if v_i.kind is AdmissionKind.ACCEPT:
+            assert v_i.solution.boundaries == v_c.solution.boundaries
+            assert v_i.solution.assignment == v_c.solution.assignment
+    assert ctrl_i.counters == ctrl_c.counters
+
+
+def test_steady_state_cycle_packs_nothing(monkeypatch):
+    """Under no triggers, a warm monitoring cycle performs ZERO pack work:
+    no pack_sessions call, no buffer rebuild, no row write."""
+    import repro.core.fleet as fleet_mod
+    import repro.core.fleet_eval as fe
+
+    state = _state(6, util=0.1)            # light load → KEEP every cycle
+    orch = _orch(state)
+    # genuinely untriggered steady state: latency far inside Θ.L_max
+    orch.thresholds = Thresholds(latency_max_s=30.0, cooldown_s=0.5)
+    for k in range(6):
+        orch.admit(_graph(8, seed=k), Workload(16, 4, 0.2),
+                   source_node=k % 3, now=0.0)
+    orch.step(now=0.0)                     # warm: builds buffers + compiles
+
+    calls = {"pack": 0}
+    real = fe.pack_sessions
+
+    def counting_pack(*a, **k):
+        calls["pack"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(fe, "pack_sessions", counting_pack)
+    monkeypatch.setattr(fleet_mod, "pack_sessions", counting_pack)
+    writes0 = orch._buffers.stats["row_writes"]
+    rebuilds0 = orch.full_rebuilds
+    for t in range(1, 6):
+        fd = orch.step(now=float(t))
+        assert fd.n_keep == len(orch.sessions)
+        assert fd.pack_time_s == 0.0
+    assert calls["pack"] == 0
+    assert orch._buffers.stats["row_writes"] == writes0
+    assert orch.full_rebuilds == rebuilds0
+
+
+def test_deferred_request_repacks_zero_times_across_polls(monkeypatch):
+    """A deferred admission request is packed once at submit; every retry
+    poll re-prices against updated residual capacity with the cached
+    tensors (ROADMAP open item)."""
+    import repro.core.splitter as sp
+
+    state = _state(8, util=0.2)
+    orch = _orch(state)
+    ctrl = FleetAdmissionController(orch, max_sessions=8, rho_ceiling=0.2)
+
+    calls = {"pack": 0}
+    real = sp.pack_problem
+
+    def counting(*a, **k):
+        calls["pack"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(sp, "pack_problem", counting)
+    light = ModelGraph("light34", [
+        GraphNode(f"u{i}", 2e9, 4e8, 4e4) for i in range(34)
+    ])
+    req = AdmissionRequest(light, Workload(8, 2, 0.5), qos=QOS_STANDARD)
+    v = ctrl.request(req, now=0.0)
+    assert v.kind is AdmissionKind.DEFER   # rho ceiling blocks it
+    assert calls["pack"] == 1
+    for t in range(1, 5):                  # retries re-solve, never re-pack
+        ctrl.poll(float(t))
+    assert calls["pack"] == 1
+    # capacity frees up → the cached pack is used for the accepting solve too
+    orch.profiler.base_state.background_util[:] = 0.05
+    ctrl.rho_ceiling = 5.0
+    out = ctrl.poll(5.0)
+    assert out and out[0][1].kind is AdmissionKind.ACCEPT
+    assert calls["pack"] == 1
+
+
+def _random_items(rng, n_sessions, n=N_NODES):
+    items = []
+    for k in range(n_sessions):
+        L = int(rng.integers(3, 9))
+        g = _graph(L, seed=1000 + k)
+        wl = Workload(tokens_in=int(rng.integers(8, 128)),
+                      tokens_out=int(rng.integers(1, 32)),
+                      arrival_rate=float(rng.uniform(0.1, 8.0)))
+        kseg = int(rng.integers(1, min(4, L) + 1))
+        cuts = sorted(rng.choice(np.arange(1, L), size=kseg - 1,
+                                 replace=False).tolist())
+        b = tuple([0] + cuts + [L])
+        a = tuple(int(x) for x in rng.integers(0, n, len(b) - 1))
+        items.append((g, b, a, wl, int(rng.integers(0, n)), 4.0))
+    return items
+
+
+def test_fused_kernels_match_scalar_reference():
+    """Ground truth for the fused device programs: induced-load fold,
+    per-session pricing, trigger-env reductions, and the migration DP +
+    device backtrack all reproduce the numpy/scalar reference path — NOT
+    just the kernel against itself."""
+    from repro.core import (
+        BatchedMigrationSolver,
+        FleetCostEvaluator,
+        chain_latency,
+        pack_sessions,
+        packed_induced_loads,
+        solve_placement_chain_dp,
+    )
+    from repro.core.fleet_eval import FleetStateBuffers, ResidentFleetKernel
+
+    rng = np.random.default_rng(21)
+    state = _state(21, util=0.4)
+    # heterogeneous links so the min-bw reduction is non-trivial
+    state.link_bw = rng.uniform(5e6, 5e7, (N_NODES, N_NODES))
+    state.link_bw = (state.link_bw + state.link_bw.T) / 2
+    np.fill_diagonal(state.link_bw, np.inf)
+    items = _random_items(rng, 7)
+    buf = FleetStateBuffers.from_sessions(list(enumerate(items)))
+    kern = ResidentFleetKernel()
+    price = kern.price(buf, state)
+
+    # reference: numpy induced loads → _fold_loads formula → scalar pricing
+    packed = pack_sessions(items)
+    node_r, link_r, wb = packed_induced_loads(packed, state)
+    tot_n, tot_l, tot_w = node_r.sum(0), link_r.sum(0), wb.sum(0)
+    bg = np.clip(state.background_util + (tot_n[None] - node_r), 0, 0.99)
+    lbw = state.link_bw * np.clip(1 - (tot_l[None] - link_r), 0.05, 1.0)
+    mem = np.maximum(0.0, state.mem_bytes - (tot_w[None] - wb))
+    B = len(items)
+    lat = np.asarray(price.lat)[:B]
+    for i, (g, b, a, wl, src, _) in enumerate(items):
+        st = state.copy()
+        st.background_util, st.link_bw, st.mem_bytes = (
+            bg[i].copy(), lbw[i].copy(), mem[i].copy()
+        )
+        assert lat[i] == pytest.approx(chain_latency(g, b, a, st, wl),
+                                       rel=1e-12)
+        # trigger env: the retired _session_env formula, recomputed here
+        util_vec = np.clip(state.background_util + tot_n, 0, 2)
+        nodes = sorted(set(a) | {src})
+        assert float(np.asarray(price.max_util)[i]) == pytest.approx(
+            float(util_vec[nodes].max()), rel=1e-12
+        )
+        ebw = state.link_bw * np.clip(1 - tot_l, 0.05, 1.0)
+        hops = [(src, a[0])] + list(zip(a[:-1], a[1:]))
+        bws = [ebw[x, y] for x, y in hops if x != y and np.isfinite(ebw[x, y])]
+        ref_bw = float(min(bws)) if bws else float("inf")
+        got_bw = float(np.asarray(price.min_bw)[i])
+        if np.isfinite(ref_bw):
+            assert got_bw == pytest.approx(ref_bw, rel=1e-12)
+        else:
+            assert got_bw > 1e20          # _BIG stand-in for the inf case
+    np.testing.assert_allclose(np.asarray(price.tot_node), tot_n, rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(price.tot_link), tot_l, rtol=1e-12)
+
+    # migration kernel ≡ BatchedMigrationSolver ≡ per-session chain DP
+    assign, mig_lat, cost = kern.migrate(buf, price, state)
+    sols = BatchedMigrationSolver().solve_batch(packed, bg=bg, link_bw=lbw,
+                                               state=state)
+    cand_lat, _, _ = FleetCostEvaluator().evaluate_batch(
+        packed.with_assignment([s.assignment for s in sols]),
+        bg=bg, link_bw=lbw, mem_bytes=mem, state=state,
+    )
+    for i, sol in enumerate(sols):
+        k = len(sol.assignment)
+        assert tuple(int(x) for x in np.asarray(assign)[i, :k]) == sol.assignment
+        assert float(np.asarray(cost)[i]) == pytest.approx(sol.cost, rel=1e-12)
+        assert float(np.asarray(mig_lat)[i]) == pytest.approx(
+            float(cand_lat[i]), rel=1e-12
+        )
+        g, b, _, wl, src, _ = items[i]
+        st = state.copy()
+        st.background_util, st.link_bw = bg[i].copy(), lbw[i].copy()
+        ref = solve_placement_chain_dp(g, b, st, wl, source_node=src)
+        sc = surrogate_cost(g, sol.boundaries, sol.assignment, st, wl,
+                            source_node=src)
+        sc_ref = surrogate_cost(g, ref.boundaries, ref.assignment, st, wl,
+                                source_node=src)
+        assert sc == pytest.approx(sc_ref, rel=1e-9)
+
+
+def test_admission_pack_flows_into_session():
+    """An accepted request's PackedProblem is inherited by the session —
+    its first re-split never re-coarsens (pack once per session, period)."""
+    state = _state(12, util=0.1)
+    orch = _orch(state)
+    ctrl = FleetAdmissionController(orch, max_sessions=8, rho_ceiling=5.0)
+    g = ModelGraph("light8", [
+        GraphNode(f"u{i}", 2e9, 4e8, 4e4) for i in range(8)
+    ])
+    v = ctrl.request(AdmissionRequest(g, Workload(8, 2, 0.5),
+                                      qos=QOS_STANDARD), now=0.0)
+    assert v.kind is AdmissionKind.ACCEPT
+    sess = orch.sessions[v.sid]
+    assert sess.prepacked is not None
+    assert orch._session_problem(sess).prepacked is sess.prepacked
+
+
+def test_shared_units_coarsening_collapses_buckets():
+    """Heterogeneous depths share ONE compiled DP variant under the
+    shared-units policy, and each solution matches the per-session reference
+    DP at the same coarsening."""
+    state = _state(10)
+    bs = BatchedJointSplitter(shared_units=32)
+    depths = (34, 40, 50, 64)
+    probs = [
+        SessionProblem(_graph(L, seed=L), Workload(48, 8, 1.0),
+                       source_node=L % 3)
+        for L in depths
+    ]
+    sols = bs.solve_batch(probs, state, max_units=96)
+    assert len(bs._compiled) == 1          # one (B, L, n) variant, not 4
+    for p, s in zip(probs, sols):
+        ref = solve_joint_dp(p.graph, state, p.workload,
+                             source_node=p.source_node, max_units=32)
+        sc = surrogate_cost(p.graph, s.boundaries, s.assignment, state,
+                            p.workload, source_node=p.source_node)
+        sc_ref = surrogate_cost(p.graph, ref.boundaries, ref.assignment,
+                                state, p.workload, source_node=p.source_node)
+        assert sc == pytest.approx(sc_ref, rel=1e-9)
+    # graphs shallower than the cap keep native depth (second bucket)
+    shallow = SessionProblem(_graph(12, seed=12), Workload(48, 8, 1.0))
+    bs.solve_batch([shallow], state, max_units=96)
+    assert len(bs._compiled) == 2
