@@ -1,0 +1,121 @@
+"""CI perf regression gate for the fleet monitoring sweep.
+
+Compares a fresh ``fleet_scaling.py --monitor --json`` run against the
+committed ``BENCH_fleet.json`` baseline, per fleet size and per metric, and
+exits nonzero when any watched metric regresses beyond the tolerance.  The
+scheduled ``full-sweep`` CI job snapshots the committed baseline BEFORE the
+sweep overwrites ``BENCH_fleet.json``, then runs::
+
+    cp BENCH_fleet.json bench_baseline.json
+    PYTHONPATH=src python benchmarks/fleet_scaling.py --monitor --json fleet_monitor.json
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        --baseline bench_baseline.json --fresh BENCH_fleet.json
+
+Watched metrics (higher = worse): ``resident_cycle_ms`` p50/p90/p95,
+``eval_ms`` p50, and ``repair_calls_per_cycle`` (must stay 0 — the PR-4
+hot path makes no host `repair_capacity` calls).  A fresh value passes iff
+
+    fresh <= baseline * tolerance + abs_floor
+
+where the absolute floor (2 ms for timings, 0.5 for call counts) keeps
+near-zero baselines from failing on scheduler jitter.  The default 1.3x
+tolerance can be overridden for noisy runners with ``--tolerance`` or the
+``BENCH_TOLERANCE`` environment variable (documented in
+``benchmarks/README.md``); metrics absent from an older-schema baseline are
+skipped with a note, so a v1 baseline gates a v2 run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+# (path into a monitor row, absolute slack added on top of the tolerance)
+METRICS = (
+    (("resident_cycle_ms", "p50"), 2.0),
+    (("resident_cycle_ms", "p90"), 2.0),
+    (("resident_cycle_ms", "p95"), 2.0),
+    (("eval_ms", "p50"), 2.0),
+    (("repair_calls_per_cycle",), 0.5),
+)
+
+
+def _rows(doc: dict) -> dict[int, dict]:
+    """Monitor rows keyed by fleet size, from either artifact shape:
+    ``BENCH_fleet.json`` (``{"schema", "monitor": [...]}``) or a
+    ``fleet_scaling.py --json`` dump (``{"monitoring_cost": [...]}``)."""
+    rows = doc.get("monitor") or doc.get("monitoring_cost") or []
+    return {int(r["sessions"]): r for r in rows}
+
+
+def _get(row: dict, path: tuple[str, ...]):
+    cur = row
+    for k in path:
+        if not isinstance(cur, dict) or k not in cur:
+            return None
+        cur = cur[k]
+    return float(cur)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_fleet.json",
+                    help="committed baseline (default: BENCH_fleet.json)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated monitor sweep to gate")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE", "1.3")),
+                    help="per-metric multiplier (env: BENCH_TOLERANCE; "
+                         "default 1.3)")
+    args = ap.parse_args()
+
+    base_path = pathlib.Path(args.baseline)
+    if not base_path.exists():
+        print(f"no baseline at {base_path} — bootstrap run, nothing to gate")
+        return 0
+    base = _rows(json.loads(base_path.read_text()))
+    fresh = _rows(json.loads(pathlib.Path(args.fresh).read_text()))
+    if not fresh:
+        print(f"ERROR: no monitor rows in {args.fresh}")
+        return 2
+
+    failures: list[str] = []
+    for sessions, frow in sorted(fresh.items()):
+        brow = base.get(sessions)
+        if brow is None:
+            print(f"[{sessions:>4} sessions] no baseline row — skipped")
+            continue
+        for path, floor in METRICS:
+            name = ".".join(path)
+            b, f = _get(brow, path), _get(frow, path)
+            if f is None:
+                failures.append(f"{sessions}s {name}: missing from fresh run")
+                continue
+            if b is None:  # older-schema baseline (e.g. v1 without repairs)
+                print(f"[{sessions:>4} sessions] {name}: no baseline — skipped")
+                continue
+            limit = b * args.tolerance + floor
+            verdict = "OK " if f <= limit else "REGRESSION"
+            print(f"[{sessions:>4} sessions] {name}: {f:.3f} vs "
+                  f"baseline {b:.3f} (limit {limit:.3f}) {verdict}")
+            if f > limit:
+                failures.append(
+                    f"{sessions}s {name}: {f:.3f} > {limit:.3f} "
+                    f"(baseline {b:.3f} x {args.tolerance} + {floor})"
+                )
+
+    if failures:
+        print(f"\n{len(failures)} perf regression(s):")
+        for f in failures:
+            print(f"  - {f}")
+        print("(override for a noisy runner: --tolerance / BENCH_TOLERANCE)")
+        return 1
+    print("\nno perf regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,7 +49,7 @@ from repro.core import (
     Thresholds,
     Workload,
 )
-from repro.core.placement import surrogate_cost
+from repro.core.placement import repair_capacity, surrogate_cost
 from repro.core.profiling import CapacityProfiler
 from repro.edgesim import (
     FleetScenarioParams,
@@ -169,10 +169,14 @@ def monitoring_cost(*, sessions=(32, 64, 128), cycles: int = 15,
     PR-3's fused kernels and pack caches — it isolates the repack cost,
     it does not reproduce the PR-2 baseline.)
 
-    ``eval_ms`` is the fused device dispatches (price + migrate) and
-    ``pack_ms`` resident-buffer packing inside the cycle (row writes on
-    commits; 0 in steady state) — the repack-vs-eval breakdown tracked in
-    ``BENCH_fleet.json``.
+    ``eval_ms`` is the fused device dispatches (price + migrate + batched
+    Eq. 4 repair) and ``pack_ms`` resident-buffer packing inside the cycle
+    (row writes on commits; 0 in steady state) — the repack-vs-eval
+    breakdown tracked in ``BENCH_fleet.json``.  ``repair_calls_per_cycle``
+    counts host `placement.repair_capacity` invocations per measured cycle:
+    0 since PR 4 folded Eq. 4 into the batched solver + fused repair pass
+    (was ~56/cycle at 32 saturated sessions), regression-gated by
+    ``benchmarks/check_regression.py``.
     """
     def _warm(orch, *, cold: bool) -> float:
         """Step until compiles are done AND buffer shapes stop growing —
@@ -201,12 +205,14 @@ def monitoring_cost(*, sessions=(32, 64, 128), cycles: int = 15,
         orch = _saturated_fleet(n, seed)
         t = _warm(orch, cold=False)
         t_res, t_eval, t_pack = [], [], []
+        repair0 = repair_capacity.calls
         for c in range(cycles):
             t0 = time.perf_counter()
             fd = orch.step(now=t + float(c))
             t_res.append(time.perf_counter() - t0)
             t_eval.append(fd.eval_time_s)
             t_pack.append(fd.pack_time_s)
+        repair_per_cycle = (repair_capacity.calls - repair0) / cycles
 
         # A/B: identical fleet, but the resident state is dropped before
         # every cycle so each step pays the full O(fleet) repack + transfer
@@ -226,6 +232,7 @@ def monitoring_cost(*, sessions=(32, 64, 128), cycles: int = 15,
             cold_repack_cycle_ms=p_cold,
             eval_ms=_pcts(t_eval),
             pack_ms=_pcts(t_pack),
+            repair_calls_per_cycle=round(repair_per_cycle, 2),
             repack_overhead_ms_p50=round(p_cold["p50"] - p_res["p50"], 3),
             speedup_p50=round(p_cold["p50"] / max(p_res["p50"], 1e-9), 2),
         ))
@@ -234,9 +241,10 @@ def monitoring_cost(*, sessions=(32, 64, 128), cycles: int = 15,
 
 def write_bench_fleet(rows: list[dict], path: pathlib.Path) -> None:
     """Stable-schema perf artifact: cycle-time percentiles by fleet size
-    plus the repack-vs-eval breakdown, appendable to PR over PR."""
+    plus the repack-vs-eval breakdown and the host repair-call count,
+    appendable to PR over PR (v2 adds ``repair_calls_per_cycle``)."""
     doc = {
-        "schema": "bench-fleet/v1",
+        "schema": "bench-fleet/v2",
         "source": "benchmarks/fleet_scaling.py --monitor",
         "monitor": rows,
     }

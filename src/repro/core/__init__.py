@@ -40,11 +40,14 @@ from .cost_model import (
     Workload,
     chain_latency,
     evaluate,
+    memory_violations,
+    memory_violations_packed,
     phi,
 )
 from .fleet import FleetDecision, FleetOrchestrator, FleetSession
 from .fleet_eval import (
     BatchedMigrationSolver,
+    BatchedRepairPass,
     FleetCostEvaluator,
     FleetStateBuffers,
     PackedSessions,
@@ -88,6 +91,7 @@ from .triggers import (
 __all__ = [
     "AdaptiveOrchestrator", "AdmissionKind", "AdmissionRequest",
     "AdmissionVerdict", "BatchedJointSplitter", "BatchedMigrationSolver",
+    "BatchedRepairPass",
     "CapacityProfiler", "CostBreakdown", "CostWeights", "Decision",
     "DecisionKind", "EWMA", "FleetAdmissionController", "FleetCostEvaluator",
     "FleetDecision", "FleetOrchestrator", "FleetSession", "FleetStateBuffers",
@@ -99,6 +103,7 @@ __all__ = [
     "SystemState", "Thresholds", "TriggerState", "TrustPolicy", "Workload",
     "assert_privacy_ok", "brute_force_joint", "chain_latency", "evaluate",
     "greedy_placement", "local_search", "make_transformer_graph",
+    "memory_violations", "memory_violations_packed",
     "pack_sessions", "packed_induced_loads", "phi", "repair_capacity",
     "should_reconfigure", "solve_joint_dp", "solve_placement_chain_dp",
     "surrogate_cost",

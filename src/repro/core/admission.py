@@ -36,7 +36,7 @@ from dataclasses import dataclass, field
 from .cost_model import Workload, chain_latency, memory_violations, node_loads
 from .fleet import FleetOrchestrator
 from .graph import ModelGraph
-from .placement import Solution, repair_capacity
+from .placement import Solution
 from .splitter import PackedProblem, SessionProblem, coalesce_same_node
 from .triggers import QOS_STANDARD, QoSClass
 
@@ -221,7 +221,13 @@ class FleetAdmissionController:
         if memory_violations(
             req.graph, sol.boundaries, sol.assignment, eff
         ).any():
-            sol = repair_capacity(req.graph, sol, eff, req.workload)
+            # Eq. 4 repair through the fleet's batched device pass (the
+            # scalar repair_capacity stays off the admission control plane)
+            sol = orch.repair_solution(
+                req.graph, sol, eff, req.workload,
+                source_node=req.source_node,
+                input_bytes_per_token=req.input_bytes_per_token,
+            )
             if memory_violations(
                 req.graph, sol.boundaries, sol.assignment, eff
             ).any():

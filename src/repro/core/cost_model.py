@@ -32,6 +32,8 @@ __all__ = [
     "node_loads",
     "utilization_term",
     "privacy_violations",
+    "memory_violations",
+    "memory_violations_packed",
     "phi",
     "evaluate",
 ]
@@ -301,6 +303,32 @@ def memory_violations(
     for j, (lo, hi) in enumerate(zip(boundaries[:-1], boundaries[1:])):
         used[assignment[j]] += graph.segment_weight_bytes(lo, hi)
     return np.maximum(0.0, used - state.mem_bytes)
+
+
+def memory_violations_packed(
+    seg_wbytes: np.ndarray,
+    seg_node: np.ndarray,
+    valid: np.ndarray,
+    mem_bytes: np.ndarray,
+) -> np.ndarray:
+    """Batched Eq. 4: per-(session, node) bytes over capacity, vectorized.
+
+    ``seg_wbytes`` / ``seg_node`` / ``valid`` are (B, K) packed session rows
+    (the :class:`repro.core.fleet_eval.PackedSessions` layout); ``mem_bytes``
+    is (B, n) per-session residual capacity or (n,) shared.  One shot of
+    scatter-adds replaces B :func:`memory_violations` loops.  Returns (B, n).
+    """
+    seg_wbytes = np.asarray(seg_wbytes, dtype=np.float64)
+    seg_node = np.asarray(seg_node)
+    valid = np.asarray(valid, dtype=bool)
+    mem = np.asarray(mem_bytes, dtype=np.float64)
+    B, K = seg_wbytes.shape
+    n = mem.shape[-1]
+    used = np.zeros((B, n))
+    rows = np.repeat(np.arange(B), K)
+    np.add.at(used, (rows, seg_node.ravel()),
+              np.where(valid, seg_wbytes, 0.0).ravel())
+    return np.maximum(0.0, used - mem)
 
 
 # --------------------------------------------------------------------------- #

@@ -25,9 +25,14 @@ session *set* S = {s_1..s_m} sharing one C(t):
   dispatch (induced loads → effective C(t) → batched Φ → per-session
   trigger env) returning only O(B) trigger scalars to host, plus — only on
   cycles where something actually triggered — one fused migration dispatch
-  (Eq. 7 DP + device backtrack + candidate pricing) and, for sessions whose
+  (Eq. 7 DP with the Eq. 4 memory mask + device backtrack + batched greedy
+  memory repair + candidate pricing, PR 4) and, for sessions whose
   best migration still violates QoS, one batched
-  :class:`~repro.core.splitter.BatchedJointSplitter` re-split (Eq. 8).
+  :class:`~repro.core.splitter.BatchedJointSplitter` re-split (Eq. 8) whose
+  solutions are memory-repaired by ONE fused
+  :class:`~repro.core.fleet_eval.BatchedRepairPass` dispatch over the
+  violating set (the per-session Python ``repair_capacity`` Φ loops are
+  gone from the hot path; commits only re-check feasibility, O(K) numpy).
   Per-cycle host work is therefore O(changed sessions), not O(fleet): a
   steady KEEP cycle repacks nothing and transfers nothing but scalars.
   (The PR-1 per-session Python loop and PR-2's per-cycle full
@@ -57,11 +62,14 @@ from .cost_model import (
     SystemState,
     Workload,
     chain_latency,
+    evaluate,
     link_loads,
     memory_violations,
+    memory_violations_packed,
     segment_service_time,
 )
 from .fleet_eval import (
+    BatchedRepairPass,
     FleetCostEvaluator,
     FleetStateBuffers,
     ResidentFleetKernel,
@@ -70,7 +78,7 @@ from .fleet_eval import (
 )
 from .graph import ModelGraph
 from .orchestrator import Decision, DecisionKind
-from .placement import Solution, local_search, repair_capacity
+from .placement import Solution, local_search
 from .profiling import CapacityProfiler
 from .splitter import (
     BatchedJointSplitter,
@@ -189,6 +197,7 @@ class FleetOrchestrator:
     backoff_tol_frac: float = 0.10
     evaluator: FleetCostEvaluator = field(default_factory=FleetCostEvaluator)
     kernel: ResidentFleetKernel = field(default_factory=ResidentFleetKernel)
+    repairer: BatchedRepairPass = field(default_factory=BatchedRepairPass)
 
     sessions: dict[int, FleetSession] = field(default_factory=dict)
     decisions: list[FleetDecision] = field(default_factory=list)
@@ -396,7 +405,8 @@ class FleetOrchestrator:
             sol = coalesce_same_node(sol)
             sol = local_search(graph, sol, eff, workload,
                                max_rounds=self.local_rounds)
-            sol = repair_capacity(graph, sol, eff, workload)
+            sol = self.repair_solution(graph, sol, eff, workload,
+                                       source_node=source_node)
         else:
             sol = solution
         cfg = self.broadcast.rollout(
@@ -468,25 +478,64 @@ class FleetOrchestrator:
         eff = self.effective_state(state, exclude=(sess.sid,), _table=table)
         return self._latency(sess, sol, eff)
 
-    def _mem_guard(
-        self, sess: FleetSession, sol: Solution, lat: float,
-        state: SystemState, table,
-    ) -> tuple[Solution, float]:
-        """Event-driven memory-feasibility guard before a commit.
+    def repair_solution(
+        self,
+        graph: ModelGraph,
+        sol: Solution,
+        eff: SystemState,
+        workload: Workload,
+        *,
+        source_node: int = 0,
+        input_bytes_per_token: float = 4.0,
+    ) -> Solution:
+        """Event-driven Eq. 4 repair through the batched device pass.
 
-        The batched migration DP prices the additive surrogate, which has no
-        memory term; a candidate overflowing its hosts is repaired (the same
-        Eq. 4 repair the re-split branch applies) and re-priced scalar-side.
-        The check itself is O(K) numpy — the Python Φ machinery only runs
-        when a violation actually exists.
+        A feasible solution returns unchanged without any dispatch; a
+        violating one becomes a single-row :class:`BatchedRepairPass` call —
+        the same fused program the monitoring cycle runs over the whole
+        re-split set — re-priced with the scalar evaluator.  Used by
+        deployment (:meth:`admit`) and the admission controller, so
+        ``placement.repair_capacity`` stays entirely off the control plane
+        (it remains the pinned scalar reference).
+        """
+        if not memory_violations(
+            graph, sol.boundaries, sol.assignment, eff
+        ).any():
+            return sol
+        min_k = self._buffers.max_segs if self._buffers is not None else 0
+        packed = pack_sessions(
+            [(graph, sol.boundaries, sol.assignment, workload, source_node,
+              input_bytes_per_token)],
+            min_k=min_k,
+        )
+        [assign] = self.repairer.repair_batch(
+            packed,
+            bg=np.asarray(eff.background_util, dtype=float)[None],
+            link_bw=np.asarray(eff.link_bw, dtype=float)[None],
+            mem=np.asarray(eff.mem_bytes, dtype=float)[None],
+            state=eff,
+        )
+        a = tuple(int(x) for x in assign[: len(sol.assignment)])
+        return Solution(
+            sol.boundaries, a, evaluate(graph, sol.boundaries, a, eff, workload)
+        )
+
+    def _mem_feasible(
+        self, sess: FleetSession, sol: Solution, state: SystemState, table
+    ) -> bool:
+        """Commit gate for Eq. 4 (O(K) numpy, no repair on the hot path).
+
+        Candidates arrive already repaired on device against the
+        cycle-start residuals; an earlier commit in the same cycle may have
+        claimed the memory this candidate counted on, so the gate re-checks
+        against the refreshed table.  On violation the session KEEPs its
+        (feasible) incumbent config and re-prices next cycle with correct
+        residuals — strictly safer than the old Python repair-and-commit.
         """
         eff = self.effective_state(state, exclude=(sess.sid,), _table=table)
-        if memory_violations(
+        return not memory_violations(
             sess.graph, sol.boundaries, sol.assignment, eff
-        ).any():
-            sol = repair_capacity(sess.graph, sol, eff, sess.workload)
-            lat = self._latency(sess, sol, eff)
-        return sol, lat
+        ).any()
 
     def step(self, now: float) -> FleetDecision:
         """One monitoring cycle against the device-resident fleet state.
@@ -567,15 +616,24 @@ class FleetOrchestrator:
                 state_args=state_args,
             )
             trows = [rows[sid] for sid in triggered]
-            assign_h, mig_lat_h, mig_cost_h = gather_rows(
-                trows, assign_d, mig_lat_d, mig_cost_d
+            assign_h, mig_lat_h, mig_cost_h, segw_t, valid_t, mem_t = (
+                gather_rows(trows, assign_d, mig_lat_d, mig_cost_d,
+                            buf.seg_wbytes, buf.valid, price.mem)
             )
             eval_t += time.perf_counter() - t_ev
-            # host load table, per-entries only for the triggered set (the
-            # only sids ever excluded/re-folded below)
+            # commit gate, vectorized: ONE Eq. 4 check over every triggered
+            # candidate against its cycle-start residuals (the per-session
+            # effective-state rebuild only runs after a commit dirtied them)
+            over_t = memory_violations_packed(segw_t, assign_h, valid_t, mem_t)
+            mig_feasible = {
+                sid: not over_t[pos].any()
+                for pos, sid in enumerate(triggered)
+            }
+            # host load table with device-computed totals; per-session
+            # entries are filled lazily by effective_state for the sids it
+            # actually excludes (re-split set, post-commit re-pricing)
             table = (
-                {sid: session_induced_loads(self.sessions[sid], state)
-                 for sid in triggered},
+                {},
                 np.array(price.tot_node), np.array(price.tot_link),
                 np.array(price.tot_w),
             )
@@ -603,7 +661,23 @@ class FleetOrchestrator:
                         state, table,
                     )
                     m_lat = self._lat_py(sess, mig, state, table)
-                mig, m_lat = self._mem_guard(sess, mig, m_lat, state, table)
+                # device-repaired against cycle-start residuals; the gate
+                # only re-checks vs memory claimed by earlier commits
+                feasible = (self._mem_feasible(sess, mig, state, table)
+                            if dirty else mig_feasible[sid])
+                if not feasible:
+                    # record the KEPT incumbent's latency, not the price of
+                    # the candidate just rejected
+                    per_session[sid] = Decision(
+                        DecisionKind.KEEP, sess.config, reasons_by_sid[sid],
+                        c_lat, 0.0,
+                    )
+                    continue
+                # capture the OLD config's loads before _commit overwrites
+                # it: _refresh_loads subtracts this entry from the shared
+                # totals, and the lazy table may not hold it yet
+                if sid not in table[0]:
+                    table[0][sid] = session_induced_loads(sess, state)
                 if self._commit(sid, mig, m_lat, c_lat, DecisionKind.MIGRATE,
                                 reasons_by_sid[sid], per_session, now):
                     self._refresh_loads(table, sid, state)
@@ -622,34 +696,49 @@ class FleetOrchestrator:
             sols = self.splitter.solve_batch(
                 problems, solve_state, max_units=self.max_units
             )
-            rs_sols: list[Solution] = []
-            rs_items = []
-            for (sid, _, _), rs in zip(resplit_rows, sols):
-                sess = self.sessions[sid]
-                rs = coalesce_same_node(rs)
-                # memory repair only when actually violated (event-driven;
-                # the hot path stays free of Python Φ search)
-                eff_i = self.effective_state(
-                    state, exclude=(sid,), _table=table
-                )
-                if memory_violations(
-                    sess.graph, rs.boundaries, rs.assignment, eff_i
-                ).any():
-                    rs = repair_capacity(sess.graph, rs, eff_i, sess.workload)
-                rs_sols.append(rs)
-                rs_items.append((
-                    sess.graph, rs.boundaries, rs.assignment, sess.workload,
-                    sess.source_node, sess.input_bytes_per_token,
-                ))
+            rs_sols = [coalesce_same_node(rs) for rs in sols]
+            rs_items = [
+                (self.sessions[sid].graph, rs.boundaries, rs.assignment,
+                 self.sessions[sid].workload, self.sessions[sid].source_node,
+                 self.sessions[sid].input_bytes_per_token)
+                for (sid, *_), rs in zip(resplit_rows, rs_sols)
+            ]
             rrows = [rows[sid] for sid, *_ in resplit_rows]
             bg_h, lbw_h, mem_h = gather_rows(
                 rrows, price.bg, price.link_bw, price.mem
             )
-            rs_lat, _, _ = self.evaluator.evaluate_batch(
-                pack_sessions(rs_items, min_k=buf.max_segs), bg=bg_h,
-                link_bw=lbw_h, mem_bytes=mem_h, state=state,
-                weights=self.weights,
+            packed_rs = pack_sessions(rs_items, min_k=buf.max_segs)
+            # Eq. 4 over the WHOLE re-split set at once: one vectorized
+            # check, and — only when something violates — ONE fused
+            # repair-and-price dispatch (no per-session Python Φ loops, no
+            # second pricing round-trip on the hot path)
+            over_rs = memory_violations_packed(
+                packed_rs.seg_wbytes, packed_rs.seg_node, packed_rs.valid,
+                mem_h,
             )
+            t_ev = time.perf_counter()
+            if over_rs.any():
+                rep_a, rs_lat = self.repairer.repair_and_price_batch(
+                    packed_rs, bg=bg_h, link_bw=lbw_h, mem=mem_h,
+                    state=state, weights=self.weights,
+                )
+                # a repaired row's DP surrogate cost no longer describes its
+                # assignment — carry the repaired candidate's latency instead
+                new_sols = []
+                for i, rs in enumerate(rs_sols):
+                    na = tuple(int(x) for x in rep_a[i, : len(rs.assignment)])
+                    cost = rs.cost if na == rs.assignment else float(rs_lat[i])
+                    new_sols.append(Solution(rs.boundaries, na, cost))
+                rs_sols = new_sols
+                over_rs = memory_violations_packed(
+                    packed_rs.seg_wbytes, rep_a, packed_rs.valid, mem_h,
+                )
+            else:
+                rs_lat, _, _ = self.evaluator.evaluate_batch(
+                    packed_rs, bg=bg_h, link_bw=lbw_h, mem_bytes=mem_h,
+                    state=state, weights=self.weights,
+                )
+            eval_t += time.perf_counter() - t_ev
             for pos, (sid, mig, m_lat) in enumerate(resplit_rows):
                 sess = self.sessions[sid]
                 rs, r_lat = rs_sols[pos], float(rs_lat[pos])
@@ -669,12 +758,27 @@ class FleetOrchestrator:
                 kind, chosen, chosen_lat = DecisionKind.RESPLIT, rs, r_lat
                 if m_lat < r_lat:
                     kind, chosen, chosen_lat = DecisionKind.MIGRATE, mig, m_lat
-                if kind is DecisionKind.MIGRATE:
-                    # the re-split candidate was memory-guarded before
-                    # pricing; a winning migration needs the same check
-                    chosen, chosen_lat = self._mem_guard(
-                        sess, chosen, chosen_lat, state, table
+                # both candidates were batch-repaired against cycle-start
+                # residuals; the vectorized gate applies until an earlier
+                # commit dirties the residuals this cycle
+                if dirty:
+                    feasible = self._mem_feasible(sess, chosen, state, table)
+                elif kind is DecisionKind.MIGRATE:
+                    feasible = mig_feasible[sid]
+                else:
+                    feasible = not over_rs[pos].any()
+                if not feasible:
+                    # as in the migrate branch: the KEEP records the kept
+                    # incumbent's latency
+                    per_session[sid] = Decision(
+                        DecisionKind.KEEP, sess.config, reasons_by_sid[sid],
+                        c_lat, 0.0,
                     )
+                    continue
+                # old-config loads must be in the table before the commit
+                # replaces the config (see the migrate branch above)
+                if sid not in table[0]:
+                    table[0][sid] = session_induced_loads(sess, state)
                 if self._commit(sid, chosen, chosen_lat, c_lat, kind,
                                 reasons_by_sid[sid], per_session, now):
                     self._refresh_loads(table, sid, state)

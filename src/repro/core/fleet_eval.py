@@ -79,6 +79,7 @@ __all__ = [
     "packed_induced_loads",
     "FleetCostEvaluator",
     "BatchedMigrationSolver",
+    "BatchedRepairPass",
     "FleetStateBuffers",
     "ResidentFleetKernel",
     "ResidentPrice",
@@ -393,6 +394,64 @@ class FleetCostEvaluator:
 # --------------------------------------------------------------------------- #
 # batched migration DP (Eq. 7 vmapped over the triggered set)
 # --------------------------------------------------------------------------- #
+def _surrogate_inputs(
+    packed: PackedSessions,
+    *,
+    bg: np.ndarray,
+    link_bw: np.ndarray,
+    state: SystemState,
+    mem: np.ndarray | None = None,
+):
+    """Additive Eq. 7 surrogate tensors for B sessions (host-side numpy).
+
+    Returns ``(exec_cost (B, K, n), xfer (B, K, n, n), src_xfer (B, n))``:
+    per-segment M/M/1-inflated derated service with privacy +``_BIG`` masks,
+    per-boundary transfer matrices, and the ingress transfer row.  ``mem``
+    (B, n) adds the Eq. 4 single-segment mask — a node whose residual memory
+    cannot hold a segment's weights alone is +``_BIG`` for that segment,
+    masked exactly like a privacy breach (multi-segment accumulation on one
+    node is outside the DP state; the repair pass handles it).  Shared by
+    :class:`BatchedMigrationSolver` and :class:`BatchedRepairPass` so solver
+    and repairer can never price different surrogates.
+    """
+    B, K = packed.seg_flops.shape
+    n = state.num_nodes
+    derate = np.maximum(_EPS, 1.0 - bg)                      # (B, n)
+    f_eff = np.maximum(state.flops_per_s[None, :] * derate, _EPS)
+    m_eff = np.maximum(state.mem_bw[None, :] * derate, _EPS)
+    ft = packed.seg_flops[:, :, None] / f_eff[:, None, :]    # (B, K, n)
+    svc = (packed.t_in[:, None, None] * ft
+           + packed.t_out[:, None, None]
+           * np.maximum(ft, packed.seg_wbytes[:, :, None] / m_eff[:, None, :]))
+    load = np.minimum(packed.lam[:, None, None] * svc, 0.9)
+    exec_cost = svc / (1.0 - load)
+    untrusted = ~state.trusted.astype(bool)
+    exec_cost = np.where(
+        packed.seg_priv[:, :, None] & untrusted[None, None, :],
+        _BIG, exec_cost,
+    )
+    if mem is not None:
+        exec_cost = np.where(
+            packed.seg_wbytes[:, :, None] > mem[:, None, :], _BIG, exec_cost
+        )
+
+    total_tok = (packed.t_in + packed.t_out)[:, None, None, None]
+    bw = np.nan_to_num(link_bw, posinf=_BIG)                 # (B, n, n)
+    lat = np.nan_to_num(state.link_lat, posinf=_BIG)
+    xfer = (packed.xfer_bytes_tok[:, :, None, None] * total_tok
+            / np.maximum(bw[:, None], _EPS)) + lat[None, None]
+    diag = np.eye(n, dtype=bool)
+    xfer[:, :, diag] = 0.0
+
+    src_bytes = packed.input_bytes_tok * (packed.t_in + packed.t_out)
+    src_xfer = (src_bytes[:, None]
+                / np.maximum(bw[np.arange(B), packed.source], _EPS)
+                + lat[packed.source])
+    same = packed.source[:, None] == np.arange(n)[None, :]
+    src_xfer = np.where(same, 0.0, src_xfer)
+    return exec_cost, xfer, src_xfer
+
+
 def _make_migration_dp(K: int, n: int):
     """Single-session masked placement DP; lifted over the batch by vmap."""
     import jax
@@ -450,42 +509,19 @@ class BatchedMigrationSolver:
         bg: np.ndarray,
         link_bw: np.ndarray,
         state: SystemState,
+        mem: np.ndarray | None = None,
     ) -> list[Solution]:
+        """``mem`` (B, n) residual memory enables the Eq. 4 per-step mask
+        (see :func:`_surrogate_inputs`); ``None`` keeps the memory-blind
+        PR-2 surrogate, bit-compatible with the scalar reference DP."""
         import jax.numpy as jnp
         from jax.experimental import enable_x64
 
         B, K = packed.seg_flops.shape
         n = state.num_nodes
-
-        derate = np.maximum(_EPS, 1.0 - bg)                      # (B, n)
-        f_eff = np.maximum(state.flops_per_s[None, :] * derate, _EPS)
-        m_eff = np.maximum(state.mem_bw[None, :] * derate, _EPS)
-        ft = packed.seg_flops[:, :, None] / f_eff[:, None, :]    # (B, K, n)
-        svc = (packed.t_in[:, None, None] * ft
-               + packed.t_out[:, None, None]
-               * np.maximum(ft, packed.seg_wbytes[:, :, None] / m_eff[:, None, :]))
-        load = np.minimum(packed.lam[:, None, None] * svc, 0.9)
-        exec_cost = svc / (1.0 - load)
-        untrusted = ~state.trusted.astype(bool)
-        exec_cost = np.where(
-            packed.seg_priv[:, :, None] & untrusted[None, None, :],
-            _BIG, exec_cost,
+        exec_cost, xfer, src_xfer = _surrogate_inputs(
+            packed, bg=bg, link_bw=link_bw, state=state, mem=mem
         )
-
-        total_tok = (packed.t_in + packed.t_out)[:, None, None, None]
-        bw = np.nan_to_num(link_bw, posinf=_BIG)                 # (B, n, n)
-        lat = np.nan_to_num(state.link_lat, posinf=_BIG)
-        xfer = (packed.xfer_bytes_tok[:, :, None, None] * total_tok
-                / np.maximum(bw[:, None], _EPS)) + lat[None, None]
-        diag = np.eye(n, dtype=bool)
-        xfer[:, :, diag] = 0.0
-
-        src_bytes = packed.input_bytes_tok * (packed.t_in + packed.t_out)
-        src_xfer = (src_bytes[:, None]
-                    / np.maximum(bw[np.arange(B), packed.source], _EPS)
-                    + lat[packed.source])
-        same = packed.source[:, None] == np.arange(n)[None, :]
-        src_xfer = np.where(same, 0.0, src_xfer)
 
         # pow2 batch padding: the triggered-session count varies per cycle;
         # without it every distinct B would recompile (see FleetCostEvaluator)
@@ -522,6 +558,212 @@ class BatchedMigrationSolver:
                 Solution(packed.boundaries[b], tuple(assign), float(C[b].min()))
             )
         return out
+
+
+# --------------------------------------------------------------------------- #
+# batched Eq. 4 repair (greedy heaviest-segment moves, vmapped)
+# --------------------------------------------------------------------------- #
+def _make_repair_core(K: int, n: int):
+    """Single-session greedy memory repair; lifted over the batch by vmap.
+
+    Device mirror of :func:`repro.core.placement.repair_capacity`'s
+    feasibility loop: each iteration moves the heaviest *movable* segment
+    off the most overfull node to the cheapest destination that fits
+    (movable = some destination has room for it).  A move never creates a
+    new violation — the fit check admits only in-capacity destinations — so
+    every segment relocates at most once and K iterations suffice; a row
+    with no violation is an exact no-op, and a stuck row (nothing movable
+    off the worst node) stays put, same as the scalar ``break``.
+
+    Destination choice prices the additive surrogate (exec + the two
+    adjacent boundary transfers) instead of the scalar path's full Φ, so
+    the chosen node may differ; feasibility restoration is what must match
+    (property-tested in ``tests/test_repair_batch.py``).  Privacy enters
+    through the +``_BIG`` exec mask: a breaching destination is taken only
+    when nothing else fits, exactly like the scalar path's γ-dominated Φ.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def repair(seg_w, valid, n_segs, assign, mem, exec_cost, xfer, src_xfer):
+        # seg_w/valid (K,), assign (K,) int64, mem (n,), exec_cost (K, n),
+        # xfer (K, n, n) — boundary k's transfer matrix, src_xfer (n,)
+        idx = jnp.arange(n)
+
+        def body(_, a):
+            used = jnp.zeros(n).at[a].add(jnp.where(valid, seg_w, 0.0))
+            over = jnp.maximum(0.0, used - mem)
+            bad = jnp.argmax(over)
+            has_over = over[bad] > 0.0
+            fits = ((used[None, :] + seg_w[:, None] <= mem[None, :])
+                    & (idx[None, :] != bad))                  # (K, n)
+            movable = valid & (a == bad) & fits.any(axis=1)
+            k_star = jnp.argmax(jnp.where(movable, seg_w, -1.0))
+            can_move = has_over & movable.any()
+            prev = a[jnp.maximum(k_star - 1, 0)]
+            in_c = jnp.where(k_star == 0, src_xfer, xfer[k_star, prev])
+            nxt_k = jnp.minimum(k_star + 1, K - 1)
+            out_c = jnp.where(k_star + 1 < n_segs, xfer[nxt_k, :, a[nxt_k]], 0.0)
+            cost = exec_cost[k_star] + in_c + out_c
+            dest = jnp.argmin(jnp.where(fits[k_star], cost, jnp.inf))
+            return jnp.where(can_move, a.at[k_star].set(dest), a)
+
+        return jax.lax.fori_loop(0, K, body, assign)
+
+    return repair
+
+
+def _make_repair_price(K: int, n: int, alpha: float, beta: float,
+                       gamma: float, mem_penalty: float):
+    """Batched repair + Φ pricing of the repaired assignments, one program."""
+    import jax
+    import jax.numpy as jnp
+
+    rep = _make_repair_core(K, n)
+    ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
+
+    def run(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes, n_segs,
+            t_in, t_out, lam, bg, lbw, mem, link_lat, flops_per_s, mem_bw,
+            trusted, exec_cost, xfer, src_xfer):
+        assign = jax.vmap(rep)(seg_w, valid, n_segs, seg_node, mem,
+                               exec_cost, xfer, src_xfer)
+        lat, _, _ = ev(seg_flops, seg_w, seg_priv, assign, valid, xbytes,
+                       t_in, t_out, lam, bg, lbw, link_lat, flops_per_s,
+                       mem_bw, trusted, mem)
+        return assign, lat
+
+    return run
+
+
+class BatchedRepairPass:
+    """All violating sessions' Eq. 4 repairs in ONE jitted call.
+
+    Replaces the per-session ``repair_capacity`` Python Φ loops on the fleet
+    control plane (ROADMAP measured ~56 invocations per saturated 32-session
+    cycle): the greedy heaviest-segment moves for B sessions run as one
+    vmapped device program, pow2-padded on B like the other batched solvers
+    so compiled variants stay O(log B) per (K, n).  Rows already feasible
+    come back bit-unchanged.  :meth:`repair_and_price_batch` additionally
+    prices the repaired assignments (the batched Φ mirror) inside the same
+    dispatch, so a violating re-split set costs ONE device round-trip for
+    repair *and* latency.  The scalar
+    :func:`repro.core.placement.repair_capacity` remains the pinned
+    reference path.
+    """
+
+    def __init__(self) -> None:
+        self._compiled: dict[tuple, object] = {}
+        self.dispatches = 0
+
+    def _build(self, B: int, K: int, n: int):
+        import jax
+
+        key = (B, K, n)
+        if key not in self._compiled:
+            self._compiled[key] = jax.jit(jax.vmap(_make_repair_core(K, n)))
+        return self._compiled[key]
+
+    def _build_priced(self, B: int, K: int, n: int, weights: CostWeights,
+                      mem_penalty: float):
+        import jax
+
+        key = (B, K, n, weights, float(mem_penalty))
+        if key not in self._compiled:
+            self._compiled[key] = jax.jit(_make_repair_price(
+                K, n, weights.alpha, weights.beta, weights.gamma, mem_penalty
+            ))
+        return self._compiled[key]
+
+    @staticmethod
+    def _padded(packed: PackedSessions, bg, link_bw, mem, state):
+        exec_cost, xfer, src_xfer = _surrogate_inputs(
+            packed, bg=bg, link_bw=link_bw, state=state
+        )
+        args = {
+            "seg_flops": packed.seg_flops,
+            "seg_w": packed.seg_wbytes,
+            "seg_priv": packed.seg_priv,
+            "seg_node": packed.seg_node,
+            "valid": packed.valid,
+            "xbytes": packed.xfer_bytes_tok,
+            "n_segs": packed.n_segs,
+            "t_in": packed.t_in, "t_out": packed.t_out, "lam": packed.lam,
+            "bg": np.asarray(bg, dtype=np.float64),
+            "lbw": np.nan_to_num(link_bw, posinf=_BIG),
+            "mem": np.asarray(mem, dtype=np.float64),
+            "exec_cost": exec_cost, "xfer": xfer, "src_xfer": src_xfer,
+        }
+        B = packed.batch
+        Bp = _pow2(B)
+        if Bp > B:
+            args = {
+                k: np.concatenate([a, np.repeat(a[-1:], Bp - B, axis=0)])
+                for k, a in args.items()
+            }
+        return args, Bp
+
+    def repair_batch(
+        self,
+        packed: PackedSessions,
+        *,
+        bg: np.ndarray,
+        link_bw: np.ndarray,
+        mem: np.ndarray,
+        state: SystemState,
+    ) -> np.ndarray:
+        """Repaired assignments (B, K) for the packed rows' current
+        ``seg_node`` against per-row residual memory ``mem`` (B, n)."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        B, K = packed.seg_flops.shape
+        a, Bp = self._padded(packed, bg, link_bw, mem, state)
+        fn = self._build(Bp, K, state.num_nodes)
+        self.dispatches += 1
+        with enable_x64(True):
+            out = fn(*(jnp.asarray(a[k]) for k in
+                       ("seg_w", "valid", "n_segs", "seg_node", "mem",
+                        "exec_cost", "xfer", "src_xfer")))
+        return np.asarray(out)[:B]
+
+    def repair_and_price_batch(
+        self,
+        packed: PackedSessions,
+        *,
+        bg: np.ndarray,
+        link_bw: np.ndarray,
+        mem: np.ndarray,
+        state: SystemState,
+        weights: CostWeights = CostWeights(),
+        mem_penalty: float = 1e3,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(repaired assignments (B, K), latency (B,) of the repaired
+        assignment) in one fused dispatch — the batched Φ mirror prices
+        exactly what :class:`FleetCostEvaluator` would."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        B, K = packed.seg_flops.shape
+        n = state.num_nodes
+        a, Bp = self._padded(packed, bg, link_bw, mem, state)
+        fn = self._build_priced(Bp, K, n, weights, mem_penalty)
+        self.dispatches += 1
+        with enable_x64(True):
+            assign, lat = fn(
+                jnp.asarray(a["seg_flops"]), jnp.asarray(a["seg_w"]),
+                jnp.asarray(a["seg_priv"]), jnp.asarray(a["seg_node"]),
+                jnp.asarray(a["valid"]), jnp.asarray(a["xbytes"]),
+                jnp.asarray(a["n_segs"]), jnp.asarray(a["t_in"]),
+                jnp.asarray(a["t_out"]), jnp.asarray(a["lam"]),
+                jnp.asarray(a["bg"]), jnp.asarray(a["lbw"]),
+                jnp.asarray(a["mem"]),
+                jnp.asarray(np.nan_to_num(state.link_lat, posinf=_BIG)),
+                jnp.asarray(state.flops_per_s), jnp.asarray(state.mem_bw),
+                jnp.asarray(state.trusted.astype(bool)),
+                jnp.asarray(a["exec_cost"]), jnp.asarray(a["xfer"]),
+                jnp.asarray(a["src_xfer"]),
+            )
+        return np.asarray(assign)[:B], np.asarray(lat)[:B]
 
 
 # --------------------------------------------------------------------------- #
@@ -832,18 +1074,28 @@ def _make_fused_price(n: int, alpha: float, beta: float, gamma: float,
 
 def _make_fused_migrate(K: int, n: int, alpha: float, beta: float,
                         gamma: float, mem_penalty: float):
-    """Placement DP + device backtrack + candidate pricing for ALL rows.
+    """Placement DP + device backtrack + Eq. 4 repair + candidate pricing.
 
     Same surrogate prep as :class:`BatchedMigrationSolver` (moved from numpy
     onto device) and the same DP; running every row — triggered or not —
     keeps the compiled shape fixed at (B, K, n), so the varying triggered-set
     size never recompiles and never round-trips the fleet through host.
+
+    Memory feasibility is first-class (PR 4): the DP's per-step exec cost
+    carries the Eq. 4 single-segment mask against each row's residual memory
+    (masked like the privacy/validity masks), and the backtracked optimum
+    then runs the vmapped greedy repair (:func:`_make_repair_core`) for the
+    accumulation violations the additive DP cannot see.  The candidate
+    latency returned to host is priced on the REPAIRED assignment, so a
+    violating candidate can never look cheap: it either repairs on device
+    or surfaces its true (post-repair) price.
     """
     import jax
     import jax.numpy as jnp
 
     dp = _make_migration_dp(K, n)
     ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
+    rep = _make_repair_core(K, n)
 
     def migrate(seg_flops, seg_w, seg_priv, valid, xbytes, n_segs,
                 t_in, t_out, lam, source, input_bytes_tok,
@@ -861,6 +1113,11 @@ def _make_fused_migrate(K: int, n: int, alpha: float, beta: float,
         exec_cost = svc / (1.0 - load)
         exec_cost = jnp.where(
             seg_priv[:, :, None] & untrusted[None, None, :], _BIG, exec_cost
+        )
+        # Eq. 4 per-step mask: a segment that alone overflows a node's
+        # residual memory loses that node inside the DP, not at commit time
+        exec_cost = jnp.where(
+            seg_w[:, :, None] > mem[:, None, :], _BIG, exec_cost
         )
         total_tok = (t_in + t_out)[:, None, None, None]
         xfer = (xbytes[:, :, None, None] * total_tok
@@ -887,6 +1144,10 @@ def _make_fused_migrate(K: int, n: int, alpha: float, beta: float,
         assign = jnp.concatenate(
             [jnp.flip(ys, axis=0).T, j0[:, None]], axis=1
         )                                                         # (B, K)
+        # batched Eq. 4 repair of the accumulation violations the DP's
+        # per-step mask cannot express (several segments sharing one node)
+        assign = jax.vmap(rep)(seg_w, valid, n_segs, assign, mem,
+                               exec_cost, xfer, src_xfer)
         mig_lat, _, _ = ev(seg_flops, seg_w, seg_priv, assign, valid, xbytes,
                            t_in, t_out, lam, bg, lbw, link_lat, flops_per_s,
                            mem_bw, trusted, mem)
@@ -966,7 +1227,8 @@ class ResidentFleetKernel:
         mem_penalty: float = 1e3,
         state_args: tuple | None = None,
     ):
-        """(assignments (B, K), candidate latency (B,), DP cost (B,))."""
+        """(repaired assignments (B, K), candidate latency (B,) priced on
+        the repaired assignment, DP surrogate cost (B,))."""
         import jax
         from jax.experimental import enable_x64
 

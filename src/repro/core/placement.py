@@ -139,7 +139,18 @@ def solve_placement_chain_dp(
     *,
     source_node: int = 0,
     input_bytes_per_token: float = 4.0,
+    mem_residual: np.ndarray | None = None,
 ) -> Solution:
+    """Exact chain DP on the additive surrogate.
+
+    ``mem_residual`` (n,) adds the Eq. 4 single-segment mask: a node whose
+    residual memory cannot hold a segment's weights alone costs +inf for
+    that segment, exactly like the privacy mask.  This is the pinned scalar
+    reference for the memory-masked batched solvers
+    (:class:`repro.core.fleet_eval.BatchedMigrationSolver` and the fused
+    migrate kernel); multi-segment accumulation on one node is outside the
+    DP state and handled by the repair pass.
+    """
     validate_boundaries(boundaries, len(graph))
     n = state.num_nodes
     segs = list(zip(boundaries[:-1], boundaries[1:]))
@@ -161,6 +172,8 @@ def solve_placement_chain_dp(
         exec_cost[j] = svc / (1.0 - load)
         if graph.segment_has_private(lo, hi):
             exec_cost[j][~state.trusted] = _INF
+        if mem_residual is not None:
+            exec_cost[j][sw > np.asarray(mem_residual, dtype=float)] = _INF
 
     # xfer[i_prev, i]: boundary act bytes over link (0 on diagonal)
     def xfer(bytes_per_tok: float) -> np.ndarray:
@@ -292,35 +305,53 @@ def repair_capacity(
     *,
     max_moves: int = 32,
 ) -> Solution:
-    """Greedy repair of Eq. (4) violations: move segments off overfull nodes."""
-    from .cost_model import memory_violations
+    """Greedy repair of Eq. (4) violations: move segments off overfull nodes.
 
+    Pinned scalar reference for the batched device pass
+    (:class:`repro.core.fleet_eval.BatchedRepairPass`); the fleet monitoring
+    hot path must never call it (``repair_capacity.calls`` counts
+    invocations so that stays regression-testable).  Per-node residuals are
+    computed once and updated incrementally per move — the destination
+    feasibility check is O(1), not an O(K·N) ``memory_violations`` recompute
+    per candidate node.
+    """
+    repair_capacity.calls += 1
     b, a = list(sol.boundaries), list(sol.assignment)
+    seg_w = [graph.segment_weight_bytes(lo, hi)
+             for lo, hi in zip(b[:-1], b[1:])]
+    mem = np.asarray(state.mem_bytes, dtype=np.float64)
+    used = np.zeros(state.num_nodes)
+    for j, node in enumerate(a):
+        used[node] += seg_w[j]
     for _ in range(max_moves):
-        over = memory_violations(graph, b, a, state)
+        over = np.maximum(0.0, used - mem)
         if not over.any():
             break
         bad = int(np.argmax(over))
         # largest segment on the overfull node
         seg_ids = [j for j, node in enumerate(a) if node == bad]
-        seg_ids.sort(key=lambda j: -graph.segment_weight_bytes(b[j], b[j + 1]))
+        seg_ids.sort(key=lambda j: -seg_w[j])
         moved = False
         for j in seg_ids:
             best, best_c = None, _INF
             for i in range(state.num_nodes):
-                if i == bad:
+                # destination must stay within capacity after the move
+                if i == bad or used[i] + seg_w[j] > mem[i]:
                     continue
                 trial = a[:]
                 trial[j] = i
-                if memory_violations(graph, b, trial, state)[i] > 0:
-                    continue
                 c = evaluate(graph, b, trial, state, wl)
                 if c < best_c:
                     best, best_c = i, c
             if best is not None:
+                used[bad] -= seg_w[j]
+                used[best] += seg_w[j]
                 a[j] = best
                 moved = True
                 break
         if not moved:
             break  # infeasible under current split; SR must re-split
     return Solution(tuple(b), tuple(a), evaluate(graph, b, a, state, wl))
+
+
+repair_capacity.calls = 0  # host-invocation counter (hot-path regression hook)

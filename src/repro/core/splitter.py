@@ -36,7 +36,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .cost_model import SystemState, Workload, evaluate
+from .cost_model import SystemState, Workload, evaluate, memory_violations
 from .graph import ModelGraph
 from .placement import Solution, local_search, repair_capacity, surrogate_cost
 
@@ -137,18 +137,24 @@ def _problem_arrays(
         pp = pack_problem(graph, units=max_units,
                           input_bytes_per_token=input_bytes_per_token)
     L = pp.L
-    tokens = float(wl.total_tokens)
     derate = np.maximum(1e-12, 1.0 - state.background_util)
     eff_f = state.flops_per_s * derate
     eff_m = state.mem_bw * derate
-    bb = pp.boundary_bytes
+    # boundary bytes stay a (L+1,) vector: the jitted DPs expand them to the
+    # (L+1, n, n) transfer tensor ON DEVICE (see _xfer_matrix / _make_dp), so
+    # the per-solve host work and upload are O(L), not O(L·n²)
+    return (pp.flops_ps, pp.wbytes_ps, pp.priv_ps, pp.boundary_bytes,
+            eff_f, eff_m, list(pp.unit_map), L)
+
+
+def _xfer_matrix(bb: np.ndarray, tokens: float, state: SystemState) -> np.ndarray:
+    """(L+1, n, n) transfer tensor for the numpy reference DP."""
     xfer = bb[:, None, None] * tokens / np.maximum(state.link_bw, 1e-12)[None] + (
         state.link_lat[None] * (bb[:, None, None] > 0)
     )
     idx = np.arange(state.num_nodes)
     xfer[:, idx, idx] = 0.0  # same node: no transfer
-    return (pp.flops_ps, pp.wbytes_ps, pp.priv_ps, xfer, eff_f, eff_m,
-            list(pp.unit_map), L)
+    return xfer
 
 
 def _backtrack(
@@ -186,10 +192,11 @@ def solve_joint_dp(
     max_units: int | None = None,
 ) -> Solution:
     n = state.num_nodes
-    flops_ps, wbytes_ps, priv_ps, xfer, eff_f, eff_m, unit_map, L = _problem_arrays(
+    flops_ps, wbytes_ps, priv_ps, bb, eff_f, eff_m, unit_map, L = _problem_arrays(
         graph, state, wl, source_node=source_node,
         input_bytes_per_token=input_bytes_per_token, max_units=max_units,
     )
+    xfer = _xfer_matrix(bb, float(wl.total_tokens), state)
     untrusted = ~state.trusted.astype(bool)
     t_in, t_out = float(wl.tokens_in), float(wl.tokens_out)
     lam = float(wl.arrival_rate)
@@ -229,13 +236,21 @@ def _make_dp(L: int, n: int):
     """Pure single-session DP function for a fixed (L, n) problem shape.
 
     Returned un-jitted so callers can wrap it once (``jax.jit``) or lift it
-    over a batch of sessions (``jax.vmap`` + ``jax.jit``).
+    over a batch of sessions (``jax.vmap`` + ``jax.jit``).  The boundary
+    transfer tensor is expanded from the (L+1,) boundary-bytes vector
+    inside the program — per-session host prep and upload stay O(L) while
+    the O(L·n²) broadcast happens on device, fused into the solve.
     """
     import jax
     import jax.numpy as jnp
 
-    def dp(flops_ps, wbytes_ps, priv_ps, xfer, eff_f, eff_m, t_in, t_out,
-           lam, untrusted, source_onehot):
+    def dp(flops_ps, wbytes_ps, priv_ps, bb, eff_f, eff_m, t_in, t_out,
+           lam, untrusted, source_onehot, link_bw, link_lat):
+        tokens = t_in + t_out
+        xfer = (bb[:, None, None] * tokens / jnp.maximum(link_bw, 1e-12)
+                + link_lat * (bb[:, None, None] > 0))
+        xfer = jnp.where(jnp.eye(n, dtype=bool)[None], 0.0, xfer)
+
         def step(C, l2):
             l1s = jnp.arange(L + 1)
             valid = l1s < l2
@@ -296,7 +311,7 @@ class JaxJointSplitter:
         import jax.numpy as jnp
 
         n = state.num_nodes
-        flops_ps, wbytes_ps, priv_ps, xfer, eff_f, eff_m, unit_map, L = _problem_arrays(
+        flops_ps, wbytes_ps, priv_ps, bb, eff_f, eff_m, unit_map, L = _problem_arrays(
             graph, state, wl, source_node=source_node,
             input_bytes_per_token=input_bytes_per_token, max_units=max_units,
         )
@@ -307,9 +322,10 @@ class JaxJointSplitter:
         src[source_node] = 1.0
         C, par_l, par_j = self._compiled[key](
             jnp.asarray(flops_ps), jnp.asarray(wbytes_ps), jnp.asarray(priv_ps),
-            jnp.asarray(xfer), jnp.asarray(eff_f), jnp.asarray(eff_m),
+            jnp.asarray(bb), jnp.asarray(eff_f), jnp.asarray(eff_m),
             float(wl.tokens_in), float(wl.tokens_out), float(wl.arrival_rate),
             jnp.asarray(~state.trusted.astype(bool)), jnp.asarray(src),
+            jnp.asarray(state.link_bw), jnp.asarray(state.link_lat),
         )
         C = np.asarray(C)
         par_l = np.concatenate([np.zeros((1, n), np.int64), np.asarray(par_l)])
@@ -400,7 +416,8 @@ class BatchedJointSplitter:
             self._compiled[key] = jax.jit(
                 jax.vmap(
                     _make_dp(L, n),
-                    in_axes=(0, 0, 0, 0, None, None, 0, 0, 0, None, 0),
+                    in_axes=(0, 0, 0, 0, None, None, 0, 0, 0, None, 0,
+                             None, None),
                 )
             )
         return self._compiled[key]
@@ -442,7 +459,7 @@ class BatchedJointSplitter:
             f_ps = np.stack([packed[i][0] for i in rows])
             w_ps = np.stack([packed[i][1] for i in rows])
             p_ps = np.stack([packed[i][2] for i in rows])
-            xfer = np.stack([packed[i][3] for i in rows])
+            bb = np.stack([packed[i][3] for i in rows])
             t_in = np.array([float(problems[i].workload.tokens_in) for i in rows])
             t_out = np.array([float(problems[i].workload.tokens_out) for i in rows])
             lam = np.array([float(problems[i].workload.arrival_rate) for i in rows])
@@ -453,9 +470,10 @@ class BatchedJointSplitter:
 
             C, par_l, par_j = self._build(Bp, L, n)(
                 jnp.asarray(f_ps), jnp.asarray(w_ps), jnp.asarray(p_ps),
-                jnp.asarray(xfer), jnp.asarray(eff_f), jnp.asarray(eff_m),
+                jnp.asarray(bb), jnp.asarray(eff_f), jnp.asarray(eff_m),
                 jnp.asarray(t_in), jnp.asarray(t_out), jnp.asarray(lam),
                 untrusted, jnp.asarray(src),
+                jnp.asarray(state.link_bw), jnp.asarray(state.link_lat),
             )
             C = np.asarray(C)
             zeros = np.zeros((Bp, 1, n), np.int64)
@@ -588,7 +606,10 @@ class SplitRevision:
             )
         else:
             sol = local_search(graph, sol, sub, wl, max_rounds=self.local_rounds)
-        sol = repair_capacity(graph, sol, sub, wl)
+        # Eq. 4 repair only when actually violated (event-driven, like the
+        # fleet path; repair_capacity is the pinned scalar reference there)
+        if memory_violations(graph, sol.boundaries, sol.assignment, sub).any():
+            sol = repair_capacity(graph, sol, sub, wl)
         sol = coalesce_same_node(sol)
         if len(idx) < state.num_nodes:  # map back to fleet node ids
             sol = Solution(

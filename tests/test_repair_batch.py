@@ -1,0 +1,387 @@
+"""Batched Eq. 4 memory feasibility (PR 4): the vectorized violation check,
+the migration DP's memory mask vs the memory-masked scalar reference DP, and
+the fused greedy repair pass vs the pinned scalar `repair_capacity` — plus
+the hot-path regression: steady-state saturated monitoring cycles make ZERO
+host `repair_capacity` calls."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    BatchedMigrationSolver,
+    BatchedRepairPass,
+    FleetOrchestrator,
+    InProcessAgent,
+    ReconfigurationBroadcast,
+    SystemState,
+    Thresholds,
+    Workload,
+    memory_violations,
+    memory_violations_packed,
+    pack_sessions,
+    repair_capacity,
+    solve_placement_chain_dp,
+    surrogate_cost,
+)
+from repro.core.fleet_eval import FleetStateBuffers, ResidentFleetKernel
+from repro.core.graph import GraphNode, ModelGraph
+from repro.core.placement import Solution
+from repro.core.profiling import CapacityProfiler
+
+N_NODES = 4
+
+
+def _random_state(seed, n=N_NODES):
+    rng = np.random.default_rng(seed)
+    bw = rng.uniform(1e6, 1e8, (n, n))
+    bw = (bw + bw.T) / 2
+    np.fill_diagonal(bw, np.inf)
+    trusted = rng.random(n) < 0.6
+    trusted[0] = True
+    return SystemState(
+        flops_per_s=rng.uniform(1e12, 1e14, n),
+        mem_bytes=rng.uniform(5e8, 5e9, n),
+        background_util=rng.uniform(0.0, 0.8, n),
+        trusted=trusted,
+        link_bw=bw,
+        link_lat=np.full((n, n), 4e-3) * (1 - np.eye(n)),
+        mem_bw=rng.uniform(1e11, 2e12, n),
+    )
+
+
+def _random_items(rng, n_sessions, n=N_NODES, *, wscale=5e8, stack=False):
+    """(graph, boundaries, assignment, workload, source, ibt) per session.
+
+    ``stack=True`` piles every segment onto one node — the canonical
+    overfull instance the repair pass must untangle.
+    """
+    items = []
+    for _ in range(n_sessions):
+        L = int(rng.integers(3, 9))
+        g = ModelGraph("g", [
+            GraphNode(f"u{i}", float(rng.uniform(1e8, 2e9)),
+                      float(rng.uniform(0.2, 1.0) * wscale),
+                      float(rng.uniform(1e3, 2e4)),
+                      privacy_critical=bool(rng.random() < 0.2))
+            for i in range(L)
+        ])
+        wl = Workload(tokens_in=int(rng.integers(8, 128)),
+                      tokens_out=int(rng.integers(1, 32)),
+                      arrival_rate=float(rng.uniform(0.1, 4.0)))
+        k = int(rng.integers(2, min(4, L) + 1))
+        cuts = sorted(rng.choice(np.arange(1, L), size=k - 1,
+                                 replace=False).tolist())
+        b = tuple([0] + cuts + [L])
+        if stack:
+            a = tuple([int(rng.integers(0, n))] * (len(b) - 1))
+        else:
+            a = tuple(int(x) for x in rng.integers(0, n, len(b) - 1))
+        items.append((g, b, a, wl, int(rng.integers(0, n)), 4.0))
+    return items
+
+
+def _row_state(state, mem_row):
+    st = state.copy()
+    st.mem_bytes = np.asarray(mem_row, dtype=float).copy()
+    return st
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_memory_violations_packed_matches_scalar(seed):
+    """One scatter-add shot ≡ per-session memory_violations, for both a
+    shared (n,) capacity vector and per-row (B, n) residuals."""
+    rng = np.random.default_rng(seed)
+    state = _random_state(seed)
+    items = _random_items(rng, 6, wscale=2e9)
+    packed = pack_sessions(items)
+    B = packed.batch
+    mem_rows = np.stack([
+        state.mem_bytes * rng.uniform(0.3, 1.0) for _ in range(B)
+    ])
+    shared = memory_violations_packed(
+        packed.seg_wbytes, packed.seg_node, packed.valid, state.mem_bytes
+    )
+    per_row = memory_violations_packed(
+        packed.seg_wbytes, packed.seg_node, packed.valid, mem_rows
+    )
+    for i, (g, b, a, _, _, _) in enumerate(items):
+        np.testing.assert_allclose(
+            shared[i], memory_violations(g, b, a, state), rtol=1e-12
+        )
+        np.testing.assert_allclose(
+            per_row[i],
+            memory_violations(g, b, a, _row_state(state, mem_rows[i])),
+            rtol=1e-12,
+        )
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_migration_dp_memory_mask_matches_scalar_reference(seed):
+    """The batched Eq. 7 DP with the Eq. 4 per-step mask ≡ the memory-masked
+    scalar reference DP (`solve_placement_chain_dp(mem_residual=...)`), and
+    every chosen node can hold its segment alone."""
+    rng = np.random.default_rng(seed)
+    state = _random_state(seed + 1)
+    items = _random_items(rng, 5, wscale=2e9)
+    packed = pack_sessions(items)
+    B = packed.batch
+    # tight residuals, but a roomy TRUSTED node keeps every segment feasible
+    # (node 0 is always trusted, so the privacy ∩ memory mask never empties)
+    mem = np.stack([
+        state.mem_bytes * rng.uniform(0.1, 0.6) for _ in range(B)
+    ])
+    mem[:, 0] = 1e12
+    bg = np.clip(np.stack([
+        state.background_util + rng.uniform(0, 0.15, N_NODES)
+        for _ in range(B)
+    ]), 0, 0.99)
+    lbw = np.stack([state.link_bw * rng.uniform(0.4, 1.0) for _ in range(B)])
+    for i in range(B):
+        np.fill_diagonal(lbw[i], np.inf)
+    sols = BatchedMigrationSolver().solve_batch(
+        packed, bg=bg, link_bw=lbw, state=state, mem=mem,
+    )
+    for i, (g, b, _, wl, src, _) in enumerate(items):
+        st_i = state.copy()
+        st_i.background_util, st_i.link_bw = bg[i].copy(), lbw[i].copy()
+        ref = solve_placement_chain_dp(g, b, st_i, wl, source_node=src,
+                                       mem_residual=mem[i])
+        sc = surrogate_cost(g, sols[i].boundaries, sols[i].assignment, st_i,
+                            wl, source_node=src)
+        sc_ref = surrogate_cost(g, ref.boundaries, ref.assignment, st_i, wl,
+                                source_node=src)
+        assert sc == pytest.approx(sc_ref, rel=1e-9)
+        for j, (lo, hi) in enumerate(zip(b[:-1], b[1:])):
+            assert g.segment_weight_bytes(lo, hi) <= mem[i][
+                sols[i].assignment[j]
+            ]
+
+
+def test_migration_dp_memory_mask_avoids_full_fast_node():
+    """A fast node without residual memory loses to a slower node with room
+    — only when the mask is enabled."""
+    n = 2
+    bw = np.full((n, n), 1e8)
+    np.fill_diagonal(bw, np.inf)
+    state = SystemState(
+        flops_per_s=np.array([1e14, 1e12]),
+        mem_bytes=np.array([40e9, 40e9]),
+        background_util=np.zeros(n),
+        trusted=np.full(n, True),
+        link_bw=bw,
+        link_lat=np.full((n, n), 1e-3) * (1 - np.eye(n)),
+        mem_bw=np.array([2e12, 2e12]),
+    )
+    g = ModelGraph("m", [GraphNode(f"u{i}", 1e10, 1e9, 1e4)
+                         for i in range(4)])                 # 4 GB weights
+    wl = Workload(64, 16, 1.0)
+    items = [(g, (0, 4), (0,), wl, 0, 4.0)]
+    packed = pack_sessions(items)
+    bg = np.zeros((1, n))
+    lbw = state.link_bw[None]
+    [free] = BatchedMigrationSolver().solve_batch(
+        packed, bg=bg, link_bw=lbw, state=state,
+    )
+    assert free.assignment == (0,)       # fast node wins without the mask
+    mem = np.array([[1e9, 30e9]])        # fast node out of residual memory
+    [masked] = BatchedMigrationSolver().solve_batch(
+        packed, bg=bg, link_bw=lbw, state=state, mem=mem,
+    )
+    assert masked.assignment == (1,)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_batched_repair_restores_feasibility_like_scalar(seed):
+    """Randomized overfull fleets: whenever the pinned scalar
+    repair_capacity restores Eq. 4 feasibility, the single fused batched
+    dispatch restores it too — and already-feasible rows come back
+    bit-unchanged."""
+    rng = np.random.default_rng(seed)
+    state = _random_state(seed + 2)
+    items = _random_items(rng, 6, wscale=2e9, stack=bool(seed % 2))
+    packed = pack_sessions(items)
+    B = packed.batch
+    mem = np.stack([
+        state.mem_bytes * rng.uniform(0.5, 3.0) for _ in range(B)
+    ])
+    bg = np.clip(np.stack([
+        state.background_util + rng.uniform(0, 0.1, N_NODES)
+        for _ in range(B)
+    ]), 0, 0.99)
+    lbw = np.repeat(state.link_bw[None], B, axis=0)
+    repaired = BatchedRepairPass().repair_batch(
+        packed, bg=bg, link_bw=lbw, mem=mem, state=state,
+    )
+    over_after = memory_violations_packed(
+        packed.seg_wbytes, repaired, packed.valid, mem
+    )
+    for i, (g, b, a, wl, _, _) in enumerate(items):
+        st_i = _row_state(state, mem[i])
+        st_i.background_util = bg[i].copy()
+        if not memory_violations(g, b, a, st_i).any():
+            # feasible row: exact no-op
+            assert tuple(int(x) for x in repaired[i, : len(a)]) == a
+            continue
+        scalar = repair_capacity(g, Solution(b, a, 0.0), st_i, wl)
+        if not memory_violations(
+            g, scalar.boundaries, scalar.assignment, st_i
+        ).any():
+            assert not over_after[i].any(), (i, repaired[i], scalar)
+
+
+def test_fused_migrate_candidates_are_memory_feasible():
+    """Heavy fleet (24 GB sessions, 40 GB nodes): every candidate the fused
+    migrate kernel hands back respects each row's residual memory — the DP
+    mask plus the in-kernel repair leave nothing for the host to fix."""
+    n = N_NODES
+    rng = np.random.default_rng(11)
+    bw = np.full((n, n), 1e8)
+    np.fill_diagonal(bw, np.inf)
+    state = SystemState(
+        flops_per_s=np.full(n, 5e12),
+        mem_bytes=np.full(n, 40e9),
+        background_util=np.full(n, 0.5),
+        trusted=np.full(n, True),
+        link_bw=bw,
+        link_lat=np.full((n, n), 2e-3) * (1 - np.eye(n)),
+        mem_bw=np.full(n, 2e11),
+    )
+    g = ModelGraph("heavy", [
+        GraphNode(f"u{i}", 2e10, 3e9, 8e4) for i in range(8)  # 24 GB
+    ])
+    items = []
+    for k in range(4):
+        wl = Workload(64, 16, float(rng.uniform(2.0, 4.0)))
+        items.append((g, (0, 4, 8), (k % n, (k + 1) % n), wl, k % 3, 4.0))
+    buf = FleetStateBuffers.from_sessions(list(enumerate(items)))
+    kern = ResidentFleetKernel()
+    price = kern.price(buf, state)
+    assign, mig_lat, _ = kern.migrate(buf, price, state)
+    B = len(items)
+    over = memory_violations_packed(
+        np.asarray(buf.seg_wbytes)[:B], np.asarray(assign)[:B],
+        np.asarray(buf.valid)[:B], np.asarray(price.mem)[:B],
+    )
+    assert not over.any(), over / 1e9
+    assert np.isfinite(np.asarray(mig_lat)[:B]).all()
+
+
+def _saturated_orch(n_sessions=6, seed=0):
+    """Hot fleet whose latency/util triggers fire every monitoring cycle,
+    with weights heavy enough that memory feasibility actually binds."""
+    rng = np.random.default_rng(seed)
+    n = N_NODES
+    bw = np.full((n, n), 2e7)
+    np.fill_diagonal(bw, np.inf)
+    state = SystemState(
+        flops_per_s=np.full(n, 5e12),
+        mem_bytes=np.full(n, 40e9),
+        background_util=np.full(n, 0.6),
+        trusted=np.array([True] * (n - 1) + [False]),
+        link_bw=bw,
+        link_lat=np.full((n, n), 2e-3) * (1 - np.eye(n)),
+        mem_bw=np.full(n, 2e11),
+    )
+    orch = FleetOrchestrator(
+        profiler=CapacityProfiler(base_state=state),
+        broadcast=ReconfigurationBroadcast(
+            [InProcessAgent(i) for i in range(n)]
+        ),
+        thresholds=Thresholds(cooldown_s=0.5),
+        solve_backoff_s=0.0,
+    )
+    g = ModelGraph("m", [
+        GraphNode(f"u{i}", 5e10, 2.5e9, 8e4, privacy_critical=(i == 0))
+        for i in range(8)                                     # 20 GB weights
+    ])
+    for _ in range(n_sessions):
+        orch.admit(g, Workload(64, 16, float(rng.uniform(2.0, 4.0))),
+                   source_node=int(rng.integers(0, 3)), now=0.0)
+    return orch
+
+
+def test_refresh_loads_keeps_shared_table_consistent():
+    """The lazily-filled cycle table must capture a committing session's
+    OLD-config loads before the commit overwrites them: after every
+    _refresh_loads, the shared totals equal a from-scratch recompute over
+    the live configs (a missed subtraction double-counts the session for
+    the rest of the cycle).  Exercises a MIGRATE-kind commit specifically —
+    re-split sids are pre-filled by the solve-state exclusion, migrate sids
+    are not."""
+    n = N_NODES
+    bw = np.full((n, n), 1e8)
+    np.fill_diagonal(bw, np.inf)
+    state = SystemState(
+        flops_per_s=np.full(n, 5e12),
+        mem_bytes=np.full(n, 400e9),
+        background_util=np.full(n, 0.05),
+        trusted=np.full(n, True),
+        link_bw=bw,
+        link_lat=np.full((n, n), 1e-3) * (1 - np.eye(n)),
+        mem_bw=np.full(n, 2e11),
+    )
+    orch = FleetOrchestrator(
+        profiler=CapacityProfiler(base_state=state),
+        broadcast=ReconfigurationBroadcast(
+            [InProcessAgent(i) for i in range(n)]
+        ),
+        thresholds=Thresholds(cooldown_s=0.0),
+        solve_backoff_s=0.0,
+    )
+    g = ModelGraph("m", [GraphNode(f"u{i}", 5e8, 1e8, 8e4) for i in range(8)])
+    for _ in range(3):
+        orch.admit(g, Workload(64, 16, 1.0), source_node=0, now=0.0)
+    orch.step(now=0.0)                    # warm
+    # overload the hosting node: its tenant's latency blows the SLO while a
+    # free node keeps the migration candidate inside it -> MIGRATE commit
+    orch.profiler.base_state.background_util[:] = [0.7, 0.05, 0.05, 0.05]
+
+    real = orch._refresh_loads
+    refreshes = []
+
+    def checked(table, sid, state):
+        assert sid in table[0], "old-config loads not captured pre-commit"
+        real(table, sid, state)
+        _, tot_n, tot_l, tot_w = orch.load_table(state)
+        np.testing.assert_allclose(table[1], tot_n, rtol=1e-9, atol=1e-12)
+        np.testing.assert_allclose(table[2], tot_l, rtol=1e-9, atol=1e-12)
+        np.testing.assert_allclose(table[3], tot_w, rtol=1e-9, atol=1e-3)
+        refreshes.append(sid)
+
+    orch._refresh_loads = checked
+    for t in range(1, 5):
+        orch.step(now=float(t))
+    assert refreshes, "no commit ever exercised the refresh path"
+    assert any(fd.n_migrate for fd in orch.decisions), "no MIGRATE commit"
+
+
+def test_zero_host_repair_calls_in_saturated_monitoring_cycles():
+    """The counter hook: steady-state saturated cycles — triggers firing,
+    migrations/re-splits deciding every cycle — must never invoke the host
+    `repair_capacity` (ROADMAP measured ~56 calls/cycle before PR 4)."""
+    orch = _saturated_orch()
+    for t in range(3):                    # warm: compiles + first commits
+        orch.step(now=float(t))
+    calls0 = repair_capacity.calls
+    for t in range(3, 9):
+        fd = orch.step(now=float(t))
+        total = fd.n_keep + fd.n_migrate + fd.n_resplit + fd.n_cooldown
+        assert total == len(orch.sessions)
+    assert repair_capacity.calls == calls0
+    # the fleet must actually have exercised the decision path
+    assert any(
+        fd.n_migrate + fd.n_resplit + fd.n_cooldown > 0
+        for fd in orch.decisions
+    )
+    # and committed configs stay memory-feasible throughout
+    used = np.zeros(N_NODES)
+    state = orch.profiler.base_state
+    for s in orch.sessions.values():
+        b, a = s.config.boundaries, s.config.assignment
+        for j, (lo, hi) in enumerate(zip(b[:-1], b[1:])):
+            used[a[j]] += s.graph.segment_weight_bytes(lo, hi)
+    assert (used <= state.mem_bytes + 1e6).all(), used / 1e9
