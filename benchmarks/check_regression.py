@@ -1,19 +1,20 @@
-"""CI perf regression gate for the fleet monitoring sweep.
+"""CI perf + QoS regression gate for the fleet sweeps.
 
-Compares a fresh ``fleet_scaling.py --monitor --json`` run against the
+Compares a fresh ``fleet_scaling.py --monitor --qos --json`` run against the
 committed ``BENCH_fleet.json`` baseline, per fleet size and per metric, and
 exits nonzero when any watched metric regresses beyond the tolerance.  The
 scheduled ``full-sweep`` CI job snapshots the committed baseline BEFORE the
 sweep overwrites ``BENCH_fleet.json``, then runs::
 
     cp BENCH_fleet.json bench_baseline.json
-    PYTHONPATH=src python benchmarks/fleet_scaling.py --monitor --json fleet_monitor.json
+    PYTHONPATH=src python benchmarks/fleet_scaling.py --monitor --qos --json fleet_monitor.json
     PYTHONPATH=src python benchmarks/check_regression.py \
         --baseline bench_baseline.json --fresh BENCH_fleet.json
 
-Watched metrics (higher = worse): ``resident_cycle_ms`` p50/p90/p95,
-``eval_ms`` p50, and ``repair_calls_per_cycle`` (must stay 0 — the PR-4
-hot path makes no host `repair_capacity` calls).  A fresh value passes iff
+Watched monitor metrics (higher = worse): ``resident_cycle_ms`` p50/p90/p95,
+``resident_fc_cycle_ms`` p50 (v3: the forecast-on cycle), ``eval_ms`` p50,
+and ``repair_calls_per_cycle`` (must stay 0 — the PR-4 hot path makes no
+host `repair_capacity` calls).  A fresh value passes iff
 
     fresh <= baseline * tolerance + abs_floor
 
@@ -22,7 +23,14 @@ near-zero baselines from failing on scheduler jitter.  The default 1.3x
 tolerance can be overridden for noisy runners with ``--tolerance`` or the
 ``BENCH_TOLERANCE`` environment variable (documented in
 ``benchmarks/README.md``); metrics absent from an older-schema baseline are
-skipped with a note, so a v1 baseline gates a v2 run.
+skipped with a note, so a v1/v2 baseline gates a v3 run without hard-fail.
+
+The v3 ``qos`` section (seed-paired forecast A/B) is gated on ABSOLUTES —
+no baseline needed: the forecast arm must keep the spike-onset max node ρ
+below 1.0 with zero SLO-breach-minutes, and its accept rate within 5
+points of the reactive arm of the SAME run (PR-5 acceptance, guards the
+forecast subsystem against silent decay).  A fresh run without a qos
+section (``--monitor``-only) skips those gates with a note.
 """
 
 from __future__ import annotations
@@ -38,6 +46,7 @@ METRICS = (
     (("resident_cycle_ms", "p50"), 2.0),
     (("resident_cycle_ms", "p90"), 2.0),
     (("resident_cycle_ms", "p95"), 2.0),
+    (("resident_fc_cycle_ms", "p50"), 2.0),
     (("eval_ms", "p50"), 2.0),
     (("repair_calls_per_cycle",), 0.5),
 )
@@ -60,6 +69,57 @@ def _get(row: dict, path: tuple[str, ...]):
     return float(cur)
 
 
+def check_qos(doc: dict) -> list[str]:
+    """Absolute gates on the v3 forecast A/B rows (no baseline needed).
+
+    Per cap: forecast ``onset_max_rho`` < 1.0, ``slo_breach_minutes`` == 0,
+    and ``admit_frac`` within 0.05 of the SAME run's reactive arm.  The
+    breach gate gets the script's escape hatch too: ``BENCH_BREACH_FLOOR``
+    (minutes, default 0) un-wedges a runner whose jax/BLAS stack shifts a
+    marginal session by one simulator tick — the sim is seed-deterministic
+    on a given stack, so the default stays exact-zero.
+    """
+    rows = doc.get("qos") or doc.get("forecast_ab") or []
+    if not rows:
+        print("[qos] no forecast A/B section in fresh run — skipped")
+        return []
+    # merge-on-write artifacts carry sections forward; only gate rows the
+    # generating run actually produced (older artifacts without the
+    # `refreshed` stamp are taken at face value)
+    refreshed = doc.get("refreshed")
+    if refreshed is not None and "qos" not in refreshed:
+        print("[qos] section carried over from a previous sweep — skipped")
+        return []
+    breach_floor = float(os.environ.get("BENCH_BREACH_FLOOR", "0"))
+    failures: list[str] = []
+    by_cap: dict[int, dict[str, dict]] = {}
+    for r in rows:
+        by_cap.setdefault(int(r["session_cap"]), {})[r["arm"]] = r
+
+    def gate(cap, name, value, ok, limit_desc):
+        verdict = "OK " if ok else "REGRESSION"
+        print(f"[qos cap {cap:>3}] {name}: {value} ({limit_desc}) {verdict}")
+        if not ok:
+            failures.append(f"qos cap {cap} {name}: {value} ({limit_desc})")
+
+    for cap, arms in sorted(by_cap.items()):
+        fc = arms.get("forecast")
+        re_ = arms.get("reactive")
+        if fc is None:
+            continue
+        gate(cap, "onset_max_rho", fc["onset_max_rho"],
+             fc["onset_max_rho"] < 1.0, "must be < 1.0")
+        gate(cap, "slo_breach_minutes", fc["slo_breach_minutes"],
+             fc["slo_breach_minutes"] <= breach_floor,
+             f"must be <= {breach_floor}")
+        if re_ is not None:
+            delta = re_["admit_frac"] - fc["admit_frac"]
+            gate(cap, "admit_frac", fc["admit_frac"],
+                 delta <= 0.05,
+                 f"reactive {re_['admit_frac']} - 0.05 floor")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_fleet.json",
@@ -72,17 +132,24 @@ def main() -> int:
                          "default 1.3)")
     args = ap.parse_args()
 
+    fresh_doc = json.loads(pathlib.Path(args.fresh).read_text())
+    failures: list[str] = check_qos(fresh_doc)
+
     base_path = pathlib.Path(args.baseline)
     if not base_path.exists():
-        print(f"no baseline at {base_path} — bootstrap run, nothing to gate")
+        print(f"no baseline at {base_path} — bootstrap run, monitor "
+              "metrics not gated")
+        if failures:
+            print(f"\n{len(failures)} regression(s):")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
         return 0
     base = _rows(json.loads(base_path.read_text()))
-    fresh = _rows(json.loads(pathlib.Path(args.fresh).read_text()))
+    fresh = _rows(fresh_doc)
     if not fresh:
         print(f"ERROR: no monitor rows in {args.fresh}")
         return 2
-
-    failures: list[str] = []
     for sessions, frow in sorted(fresh.items()):
         brow = base.get(sessions)
         if brow is None:

@@ -58,6 +58,7 @@ from repro.edgesim import (
     base_system_state,
     build_fleet_scenario,
     fleet_model_catalog,
+    spike_onsets,
 )
 
 _BATCHES = (1, 2, 4, 8, 16, 32, 64)
@@ -126,7 +127,8 @@ def solver_amortization(*, reps: int = 5, max_units: int = 96) -> list[dict]:
     return rows
 
 
-def _saturated_fleet(n_sessions: int, seed: int) -> FleetOrchestrator:
+def _saturated_fleet(n_sessions: int, seed: int,
+                     forecast: bool = False) -> FleetOrchestrator:
     """A fleet of ``n_sessions`` live sessions on the §IV topology, loaded
     hard enough that latency/util triggers fire every monitoring cycle.
 
@@ -134,6 +136,8 @@ def _saturated_fleet(n_sessions: int, seed: int) -> FleetOrchestrator:
     spacing so every cycle exercises the full decision hot path (trigger →
     migrate DP → re-split → hysteresis) — the degraded steady state in
     which PR-1 burned ~80 ms/cycle at 32 sessions and PR-2 ~45 ms."""
+    from repro.core import CapacityForecaster, ForecastConfig
+
     state = base_system_state(MECScenarioParams())
     orch = FleetOrchestrator(
         profiler=CapacityProfiler(base_state=state),
@@ -142,6 +146,11 @@ def _saturated_fleet(n_sessions: int, seed: int) -> FleetOrchestrator:
         ),
         thresholds=Thresholds(cooldown_s=0.5),
         solve_backoff_s=0.0,
+        # short season so the predictor goes live inside the warmup steps
+        # and the measured cycles pay the FULL forecast path (fused ring
+        # update + worst-case re-pricing + forecast-priced migrate)
+        forecaster=(CapacityForecaster(ForecastConfig(
+            horizon_steps=8, season_steps=8)) if forecast else None),
     )
     rng = np.random.default_rng(seed)
     catalog = fleet_model_catalog()
@@ -225,11 +234,23 @@ def monitoring_cost(*, sessions=(32, 64, 128), cycles: int = 15,
             orch.step(now=t + float(c))
             t_cold.append(time.perf_counter() - t0)
 
+        # forecast-on arm: identical fleet with a live CapacityForecaster —
+        # measures the fused seasonal update + worst-case re-pricing +
+        # forecast-priced migrate overhead on the same cycles (v3 metric)
+        orch = _saturated_fleet(n, seed, forecast=True)
+        t = _warm(orch, cold=False)
+        t_fc = []
+        for c in range(cycles):
+            t0 = time.perf_counter()
+            orch.step(now=t + float(c))
+            t_fc.append(time.perf_counter() - t0)
+
         p_res, p_cold = _pcts(t_res), _pcts(t_cold)
         rows.append(dict(
             sessions=n,
             resident_cycle_ms=p_res,
             cold_repack_cycle_ms=p_cold,
+            resident_fc_cycle_ms=_pcts(t_fc),
             eval_ms=_pcts(t_eval),
             pack_ms=_pcts(t_pack),
             repair_calls_per_cycle=round(repair_per_cycle, 2),
@@ -239,16 +260,113 @@ def monitoring_cost(*, sessions=(32, 64, 128), cycles: int = 15,
     return rows
 
 
-def write_bench_fleet(rows: list[dict], path: pathlib.Path) -> None:
-    """Stable-schema perf artifact: cycle-time percentiles by fleet size
-    plus the repack-vs-eval breakdown and the host repair-call count,
-    appendable to PR over PR (v2 adds ``repair_calls_per_cycle``)."""
-    doc = {
-        "schema": "bench-fleet/v2",
-        "source": "benchmarks/fleet_scaling.py --monitor",
-        "monitor": rows,
-    }
+def write_bench_fleet(sections: dict[str, list[dict]],
+                      path: pathlib.Path) -> None:
+    """Stable-schema perf artifact, appendable PR over PR.
+
+    v2 added ``repair_calls_per_cycle``; v3 adds the ``qos`` section (the
+    seed-paired forecast A/B with onset-ρ / SLO-breach / preemption KPIs)
+    and ``resident_fc_cycle_ms`` in the monitor rows.  Sections absent from
+    ``sections`` are carried over from the committed file, so a
+    ``--monitor``-only refresh never drops the qos baseline (and vice
+    versa).
+    """
+    doc = {"schema": "bench-fleet/v3",
+           "source": "benchmarks/fleet_scaling.py --monitor/--qos"}
+    if path.exists():
+        try:
+            old = json.loads(path.read_text())
+            for k in ("monitor", "qos"):
+                if k in old:
+                    doc[k] = old[k]
+        except (json.JSONDecodeError, OSError):
+            pass
+    doc.update(sections)
+    # which sections THIS run actually produced: check_regression gates the
+    # qos absolutes only on a fresh sweep — carried-over rows would let a
+    # --monitor-only refresh mask (or spuriously re-flag) a forecast
+    # regression the run never exercised
+    doc["refreshed"] = sorted(sections)
     path.write_text(json.dumps(doc, indent=2) + "\n")
+
+
+_AB_HORIZONS = {64: 40}   # cap → forecast horizon (default: ForecastConfig)
+
+
+def forecast_ab(*, caps=(32, 64), duration_s: float = 180.0,
+                warmup_s: float = 96.0, seed: int = 0) -> list[dict]:
+    """Seed-paired forecast-on/off A/B on the §IV saturation scenario.
+
+    Both arms run latency-priced admission on the identical arrival stream;
+    only the CapacityForecaster differs.  KPIs are measured on the
+    post-warmup window [warmup, duration): the predictor needs one observed
+    season (40 s) before its forecasts go live, and sessions admitted
+    reactively BEFORE that must drain (mean lifetime 30 s) so the window
+    measures the regime the forecast controller actually governs.  KPIs
+    include the spike-ONSET max node ρ (the PR-2 excursion: sessions
+    admitted in the trough transiently pushing the home MEC past ρ = 1
+    when the spike lands), SLO-breach-minutes, and the
+    preemptive-migration count.  ``benchmarks/check_regression.py`` gates
+    the forecast arm's absolutes (onset ρ < 1, zero breach minutes,
+    accept-rate within 5 pts of reactive).
+
+    The horizon is an operating-point parameter (``_AB_HORIZONS``): at
+    cap 32 the default short horizon (12) maximizes accepts — unsafe
+    trough admits still exist but proactive migration has enough slack to
+    clear them before the spike; at cap 64 contention leaves no room for
+    corrective migration, so admission must see the whole season
+    (horizon = 40, "admit only what survives every phase") to keep
+    breach-minutes at zero.  Measured on this container: H-sweep
+    {12, 16, 24, 40} → cap-32 breach {0, 0.04, 0, 0} / cap-64 breach
+    {0.02, 0, 0.03, 0} minutes.
+    """
+    rows = []
+    mec = MECScenarioParams()
+    onsets = spike_onsets(mec, duration_s)
+    w0 = warmup_s
+    for cap in caps:
+        for forecast in (False, True):
+            p = FleetScenarioParams(sim=FleetSimConfig(
+                duration_s=duration_s,
+                max_sessions=cap,
+                initial_sessions=min(cap, 2),
+                session_arrival_per_s=max(0.2, cap / 60.0 * 2.0),
+                mean_lifetime_s=30.0,
+                seed=seed,
+                admission=True,
+                forecast=forecast,
+                forecast_horizon_steps=_AB_HORIZONS.get(
+                    cap, FleetSimConfig.forecast_horizon_steps
+                ),
+            ))
+            sim = build_fleet_scenario(p)
+            t0 = time.perf_counter()
+            res = sim.run()
+            wall = time.perf_counter() - t0
+            k = res.kpis(w0, duration_s)
+            rows.append(dict(
+                arm="forecast" if forecast else "reactive",
+                session_cap=cap,
+                horizon_steps=p.sim.forecast_horizon_steps,
+                onset_max_rho=round(
+                    res.onset_max_rho(onsets, t0=w0, t1=duration_s), 3
+                ),
+                max_rho=round(k.get("max_rho", 0.0), 3),
+                slo_breach_minutes=round(
+                    k.get("slo_breach_minutes", 0.0), 3
+                ),
+                preemptive_migrations=int(
+                    k.get("preemptive_migrations", 0.0)
+                ),
+                admit_frac=round(k.get("admit_frac", 1.0), 3),
+                mean_sessions=round(k.get("mean_sessions", 0.0), 1),
+                p95_latency_ms=round(1e3 * k.get("p95_latency_s", 0.0), 1),
+                qos_violation_frac=round(
+                    k.get("qos_violation_frac", 0.0), 4
+                ),
+                sim_wall_s=round(wall, 1),
+            ))
+    return rows
 
 
 def fleet_qos(*, duration_s: float = 60.0, seed: int = 0,
@@ -311,21 +429,18 @@ def main() -> None:  # pragma: no cover
         )
         for r in out["solver_amortization"]:
             print(r)
+    bench_sections: dict[str, list[dict]] = {}
     if run_all or args.monitor:
         print("\n== monitoring cycle cost (saturated fleet, warm, resident "
-              "vs cold repack) ==")
+              "vs cold repack vs forecast-on) ==")
         out["monitoring_cost"] = monitoring_cost(
             sessions=(8, 16) if args.smoke else (32, 64, 128),
             cycles=5 if args.smoke else 15,
         )
         for r in out["monitoring_cost"]:
             print(r)
-        # the tracked artifact carries the FULL 32/64/128 sweep only —
-        # a smoke run must never overwrite the committed perf trajectory
-        if args.json and not args.smoke:
-            bench = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fleet.json"
-            write_bench_fleet(out["monitoring_cost"], bench)
-            print(f"wrote {bench}")
+        if not args.smoke:
+            bench_sections["monitor"] = out["monitoring_cost"]
     if run_all or args.qos:
         print("\n== fleet QoS vs session cap (3 MEC + cloud, churn, "
               "admission off/on) ==")
@@ -335,6 +450,24 @@ def main() -> None:  # pragma: no cover
         )
         for r in out["fleet_qos"]:
             print(r)
+        print("\n== forecast A/B (seed-paired, admission on, saturation "
+              "scenario) ==")
+        out["forecast_ab"] = forecast_ab(
+            caps=(8,) if args.smoke else (32, 64),
+            duration_s=60.0 if args.smoke else 180.0,
+            warmup_s=20.0 if args.smoke else 96.0,
+        )
+        for r in out["forecast_ab"]:
+            print(r)
+        if not args.smoke:
+            bench_sections["qos"] = out["forecast_ab"]
+    # the tracked artifact carries the FULL sweeps only — a smoke run must
+    # never overwrite the committed perf trajectory; sections not re-run
+    # are carried over from the committed file (merge-on-write)
+    if args.json and bench_sections:
+        bench = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fleet.json"
+        write_bench_fleet(bench_sections, bench)
+        print(f"wrote {bench}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)

@@ -13,6 +13,9 @@ Modules mirror the reference architecture of §III-A:
                  the device-resident fleet state (FleetStateBuffers /
                  ResidentFleetKernel)
   admission    — latency-priced admission control (accept/defer/reject)
+  forecast     — short-horizon capacity prediction (seasonal-naive + EWMA
+                 residual on device-resident rings) feeding admission and
+                 the proactive reconfiguration trigger
   broadcast    — Reconfiguration Broadcast (RB), 2-phase versioned rollout
   privacy      — trusted sets, Eq. (5)/(9)
 
@@ -45,6 +48,7 @@ from .cost_model import (
     phi,
 )
 from .fleet import FleetDecision, FleetOrchestrator, FleetSession
+from .forecast import CapacityForecaster, ForecastConfig
 from .fleet_eval import (
     BatchedMigrationSolver,
     BatchedRepairPass,
@@ -92,6 +96,7 @@ __all__ = [
     "AdaptiveOrchestrator", "AdmissionKind", "AdmissionRequest",
     "AdmissionVerdict", "BatchedJointSplitter", "BatchedMigrationSolver",
     "BatchedRepairPass",
+    "CapacityForecaster", "ForecastConfig",
     "CapacityProfiler", "CostBreakdown", "CostWeights", "Decision",
     "DecisionKind", "EWMA", "FleetAdmissionController", "FleetCostEvaluator",
     "FleetDecision", "FleetOrchestrator", "FleetSession", "FleetStateBuffers",

@@ -33,6 +33,8 @@ import enum
 from collections import deque
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from .cost_model import Workload, chain_latency, memory_violations, node_loads
 from .fleet import FleetOrchestrator
 from .graph import ModelGraph
@@ -92,6 +94,13 @@ class FleetAdmissionController:
     max_sessions: int = 64
     rho_ceiling: float = 1.0
     queue_cap: int = 16
+    # forecast-aware pricing (PR 5): when the orchestrator carries a ready
+    # CapacityForecaster, the arrival is solved/priced against the WORST
+    # capacity within the horizon (min residual capacity — max background
+    # util, min link bandwidth) instead of the instantaneous snapshot, so a
+    # trough-time admit that would violate at the next spike DEFERs now and
+    # re-prices on poll.  False pins the reactive PR-2 behavior.
+    use_forecast: bool = True
     counters: dict[str, int] = field(default_factory=lambda: {
         "requests": 0, "accepted": 0, "accepted_from_queue": 0,
         "rejected": 0, "deferred": 0, "expired": 0,
@@ -208,7 +217,10 @@ class FleetAdmissionController:
             )
         state = orch.profiler.system_state()
         table = self._fleet_table(state, now)
-        eff = orch.effective_state(state, _table=table)
+        # the capacity the fleet load is folded into: worst case within the
+        # forecast horizon when available, the instantaneous C(t) otherwise
+        base = orch.forecast_base(state) if self.use_forecast else state
+        eff = orch.effective_state(state, _table=table, base=base)
 
         [sol] = orch.splitter.solve_batch(
             [SessionProblem(req.graph, req.workload,
@@ -239,25 +251,58 @@ class FleetAdmissionController:
         lat = chain_latency(
             req.graph, sol.boundaries, sol.assignment, eff, req.workload
         )
+        fc = " within forecast horizon" if base is not state else ""
         if lat > req.qos.latency_slo_s:
             return AdmissionVerdict(
                 AdmissionKind.REJECT, None, lat,
                 reason=(f"best feasible latency {lat*1e3:.0f}ms exceeds "
-                        f"{req.qos.name} SLO {req.qos.latency_slo_s*1e3:.0f}ms"),
+                        f"{req.qos.name} SLO "
+                        f"{req.qos.latency_slo_s*1e3:.0f}ms{fc}"),
             )
 
-        # projected fleet utilization with the candidate placed: raw
-        # background + every live session's induced load + the candidate's own
+        # projected fleet utilization with the candidate placed: worst-case
+        # background within the horizon (= current background when
+        # reactive) + every live session's induced load + the candidate's
+        # own raw λ·service
         own_rho = node_loads(
             req.graph, sol.boundaries, sol.assignment, state, req.workload
         ) - state.background_util
-        proj = state.background_util + table[1] + own_rho
+        proj = base.background_util + table[1] + own_rho
         if float(proj.max()) > self.rho_ceiling:
             return AdmissionVerdict(
                 AdmissionKind.REJECT, None, lat,
                 reason=(f"projected node rho {proj.max():.2f} exceeds "
-                        f"ceiling {self.rho_ceiling:.2f}"),
+                        f"ceiling {self.rho_ceiling:.2f}{fc}"),
             )
+
+        # incumbent guard (forecast mode only): an arrival that fits its own
+        # SLO may still bury a long-lived tenant under the added contention —
+        # re-price every live session with the candidate folded in (against
+        # the worst-case horizon capacity) and refuse to CAUSE a breach.
+        # Chronic incumbent breach was the dominant SLO-violation mode of the
+        # reactive controller on the saturated fleet.
+        if base is not state and orch.sessions:
+            isids, lat0, lat1 = orch.price_incumbents_with_candidate(
+                req.graph, sol, req.workload,
+                source_node=req.source_node,
+                input_bytes_per_token=req.input_bytes_per_token,
+                state=state, base=base,
+            )
+            slo = np.array([
+                orch.sessions[s].qos.latency_slo_s
+                if orch.sessions[s].qos is not None
+                else orch.thresholds.latency_max_s
+                for s in isids
+            ])
+            caused = (lat1 > slo) & (lat0 <= slo)
+            if caused.any():
+                i = int(np.argmax(caused))
+                return AdmissionVerdict(
+                    AdmissionKind.REJECT, None, lat,
+                    reason=(f"would push session {isids[i]} "
+                            f"({lat1[i]*1e3:.0f}ms > "
+                            f"{slo[i]*1e3:.0f}ms SLO){fc}"),
+                )
 
         sid = orch.admit(
             req.graph, req.workload, source_node=req.source_node,

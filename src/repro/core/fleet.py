@@ -75,7 +75,9 @@ from .fleet_eval import (
     ResidentFleetKernel,
     gather_rows,
     pack_sessions,
+    packed_induced_loads,
 )
+from .forecast import CapacityForecaster
 from .graph import ModelGraph
 from .orchestrator import Decision, DecisionKind
 from .placement import Solution, local_search
@@ -93,6 +95,7 @@ from .triggers import (
     Thresholds,
     TriggerState,
     decision_gate,
+    forecast_reconfigure,
     hysteresis_keep,
 )
 
@@ -142,6 +145,9 @@ class FleetDecision:
     n_cooldown: int
     eval_time_s: float = 0.0
     pack_time_s: float = 0.0
+    # commits raised by the PROACTIVE (forecast) trigger: the session's
+    # observed env was inside Θ, its predicted env within the horizon wasn't
+    n_preempt: int = 0
 
 
 def session_induced_loads(
@@ -198,6 +204,11 @@ class FleetOrchestrator:
     evaluator: FleetCostEvaluator = field(default_factory=FleetCostEvaluator)
     kernel: ResidentFleetKernel = field(default_factory=ResidentFleetKernel)
     repairer: BatchedRepairPass = field(default_factory=BatchedRepairPass)
+    # short-horizon capacity predictor (PR 5): None → purely reactive.  When
+    # set, its seasonal update rides every pricing dispatch, the monitoring
+    # cycle raises proactive triggers off the forecast env, and admission
+    # prices arrivals against the worst-case capacity within the horizon.
+    forecaster: CapacityForecaster | None = None
 
     sessions: dict[int, FleetSession] = field(default_factory=dict)
     decisions: list[FleetDecision] = field(default_factory=list)
@@ -248,6 +259,7 @@ class FleetOrchestrator:
         *,
         exclude: tuple[int, ...] = (),
         _table=None,
+        base: SystemState | None = None,
     ) -> SystemState:
         """C(t) as seen by the excluded sessions: everyone else is load.
 
@@ -259,6 +271,12 @@ class FleetOrchestrator:
         excluded live sid missing from it is filled on demand here (O(K)),
         never silently skipped — skipping would fold the session's own load
         into its residual capacity.
+
+        ``base`` swaps the capacity vectors the fold is applied TO while the
+        induced loads stay priced against ``state`` — the forecast-aware
+        consumers fold the CURRENT fleet load into the worst-case capacity
+        within the horizon (:meth:`forecast_base`), keeping per-session load
+        entries consistent with the device-computed totals.
         """
         per, tot_node, tot_link, tot_w = (
             self.load_table(state) if _table is None else _table
@@ -273,9 +291,9 @@ class FleetOrchestrator:
                 node -= per[sid][0]
                 link -= per[sid][1]
                 wb -= per[sid][2]
-        eff = state.copy()
+        eff = (state if base is None else base).copy()
         eff.background_util, eff.link_bw, eff.mem_bytes = self._fold_loads(
-            state, node, link, wb
+            eff, node, link, wb
         )
         return eff
 
@@ -315,15 +333,102 @@ class FleetOrchestrator:
                 sess.input_bytes_per_token,
             )
 
+    def _price(self, buf: FleetStateBuffers, state: SystemState, *,
+               now: float | None = None, state_args: tuple | None = None):
+        """Every pricing dispatch goes through here so the forecaster (when
+        present) rides ALL of them — one compiled program per shape, and the
+        ring advances exactly once per sample interval regardless of how
+        many dispatches a tick issues (``now=None`` → read-only)."""
+        return self.kernel.price(
+            buf, state, weights=self.weights, bw_floor=self.bw_floor_frac,
+            state_args=state_args, forecaster=self.forecaster, now=now,
+        )
+
+    def forecast_base(self, state: SystemState) -> SystemState:
+        """C(t) floored at the worst case within the forecast horizon.
+
+        The admission controller and the scalar re-pricing path fold fleet
+        load into THIS state instead of the instantaneous one, so an
+        arrival (or a migration candidate) is priced against the minimum
+        residual capacity it will actually see over the next H steps.
+        Returns ``state`` unchanged when forecasting is off or the predictor
+        has not yet observed a full season — reactive behavior, bit-exact.
+        """
+        fc = self.forecaster
+        if fc is None or not fc.ready or fc.bg_wc is None:
+            return state
+        wc = state.copy()
+        wc.background_util = np.clip(fc.bg_wc, 0.0, 0.99)
+        # the device kernels carry +BIG for infinite (local) links; restore
+        # the host convention so scalar consumers see the same state shape
+        wc.link_bw = np.where(np.isinf(state.link_bw), np.inf, fc.bw_wc)
+        return wc
+
+    def price_incumbents_with_candidate(
+        self,
+        graph: ModelGraph,
+        sol: Solution,
+        workload: Workload,
+        *,
+        source_node: int = 0,
+        input_bytes_per_token: float = 4.0,
+        state: SystemState,
+        base: SystemState | None = None,
+    ) -> tuple[list[int], np.ndarray, np.ndarray]:
+        """(sids, latency without, latency with) for every LIVE session,
+        re-priced with the candidate placement folded into its effective
+        state.
+
+        Admission uses this as the *incumbent guard*: accepting an arrival
+        that fits ITS OWN SLO can still bury a long-lived tenant under the
+        added contention — the dominant source of chronic SLO breach on the
+        saturated fleet (the controller priced newcomers, nobody re-checked
+        incumbents).  ``base`` prices against the worst-case capacity within
+        the forecast horizon; induced loads always come from the current
+        ``state`` (they are raw λ·service, capacity-independent, consistent
+        with the device totals).  Event-driven host+device work of
+        O(fleet·K) per ARRIVAL — never on the per-cycle hot path.
+        """
+        sids = list(self.sessions)
+        if not sids:
+            return [], np.zeros(0), np.zeros(0)
+        buf = self._resident()
+        packed = buf.rows_packed(sids)
+        st = state if base is None else base
+        node_r, link_r, wb = packed_induced_loads(packed, state)
+        tot_n, tot_l, tot_w = node_r.sum(0), link_r.sum(0), wb.sum(0)
+        cand = pack_sessions([
+            (graph, sol.boundaries, sol.assignment, workload, source_node,
+             input_bytes_per_token)
+        ])
+        cn, cl, cw = packed_induced_loads(cand, state)
+
+        def ev(en, el, ew):
+            # per-row effective C(t): THE shared fold formula, broadcast
+            # over (B, n) batches (see _fold_loads)
+            bg, lbw, mem = self._fold_loads(
+                st, (tot_n[None] - node_r) + en,
+                (tot_l[None] - link_r) + el, (tot_w[None] - wb) + ew,
+            )
+            lat, _, _ = self.evaluator.evaluate_batch(
+                packed, bg=bg, link_bw=lbw, mem_bytes=mem, state=state,
+                weights=self.weights,
+            )
+            return lat
+
+        return sids, ev(0.0, 0.0, 0.0), ev(cn[0][None], cl[0][None],
+                                           cw[0][None])
+
     def price_fleet(
-        self, state: SystemState | None = None
+        self, state: SystemState | None = None, *, now: float | None = None
     ) -> tuple[list[int], np.ndarray, np.ndarray]:
         """(sids, per-session current latency, fleet node-ρ totals) in one
         fused dispatch — each session priced against its own effective C(t).
 
         This is the read path the simulator uses every tick (replacing the
         per-session Python ``chain_latency`` loop) — only O(B) scalars and
-        the (n,) totals come back to host.
+        the (n,) totals come back to host.  ``now`` lets the forecaster
+        treat the tick as an observation (sample-interval gated).
         """
         if state is None:
             state = self.profiler.system_state()
@@ -331,9 +436,7 @@ class FleetOrchestrator:
         if not sids:
             return [], np.zeros(0), state.background_util.astype(float).copy()
         buf = self._resident()
-        price = self.kernel.price(
-            buf, state, weights=self.weights, bw_floor=self.bw_floor_frac
-        )
+        price = self._price(buf, state, now=now)
         rows = [buf.row_of[sid] for sid in sids]
         (lat,) = gather_rows(rows, price.lat)
         return sids, lat, np.clip(
@@ -354,9 +457,7 @@ class FleetOrchestrator:
         if not self.sessions:
             return {}, np.zeros(n), np.zeros((n, n)), np.zeros(n)
         buf = self._resident()
-        price = self.kernel.price(
-            buf, state, weights=self.weights, bw_floor=self.bw_floor_frac
-        )
+        price = self._price(buf, state)
         per = {
             sid: session_induced_loads(self.sessions[sid], state)
             for sid in include
@@ -473,9 +574,13 @@ class FleetOrchestrator:
         )
 
     def _lat_py(self, sess: FleetSession, sol: Solution, state: SystemState,
-                table) -> float:
-        """Scalar re-price against the LIVE table (post-commit freshness)."""
-        eff = self.effective_state(state, exclude=(sess.sid,), _table=table)
+                table, base: SystemState | None = None) -> float:
+        """Scalar re-price against the LIVE table (post-commit freshness);
+        ``base`` keeps forecast-priced cycles consistent (loads from the
+        table, capacities from the worst case within the horizon)."""
+        eff = self.effective_state(
+            state, exclude=(sess.sid,), _table=table, base=base
+        )
         return self._latency(sess, sol, eff)
 
     def repair_solution(
@@ -568,19 +673,30 @@ class FleetOrchestrator:
         buf = self._resident()
         t_ev = time.perf_counter()
         state_args = self.kernel.state_args(state)   # one upload per cycle
-        price = self.kernel.price(
-            buf, state, weights=self.weights, bw_floor=self.bw_floor_frac,
-            state_args=state_args,
-        )
+        price = self._price(buf, state, now=now, state_args=state_args)
         rows = {sid: buf.row_of[sid] for sid in sids}
         rlist = [rows[sid] for sid in sids]
         lat_h, util_h, bw_h = gather_rows(
             rlist, price.lat, price.max_util, price.min_bw
         )
+        # forecast-priced env: the SAME scalars under the worst-case
+        # capacity within the horizon (equal to the current ones until the
+        # predictor has a season of history, or at horizon 0)
+        use_fc = price.has_forecast
+        if use_fc:
+            latfc_h, utilfc_h, bwfc_h = gather_rows(
+                rlist, price.lat_fc, price.max_util_fc, price.min_bw_fc
+            )
         eval_t = time.perf_counter() - t_ev
         cur_lat = {sid: float(lat_h[i]) for i, sid in enumerate(sids)}
+        # candidate-vs-incumbent comparisons run on ONE consistent pricing:
+        # forecast worst-case when the forecaster rides, instantaneous else
+        cmp_lat = ({sid: float(latfc_h[i]) for i, sid in enumerate(sids)}
+                   if use_fc else cur_lat)
+        base = self.forecast_base(state) if use_fc else None
 
         triggered: list[int] = []            # sids, in monitoring order
+        proactive: set[int] = set()          # subset raised by the forecast
         reasons_by_sid: dict[int, tuple[str, ...]] = {}
         for i, sid in enumerate(sids):
             sess = self.sessions[sid]
@@ -595,6 +711,25 @@ class FleetOrchestrator:
                 env, th, now=now, t_last_reconfig=sess.t_last_reconfig,
                 throttle=sess.throttle,
             )
+            if gate == "keep" and use_fc:
+                # proactive trigger: the observed env is inside Θ but the
+                # predicted env within the horizon is not — enter the
+                # migrate/re-split set BEFORE the SLO is breached (same
+                # cooldown/throttle gating order as decision_gate)
+                env_fc = TriggerState(
+                    ewma_latency_s=float(latfc_h[i]),
+                    max_node_util=float(utilfc_h[i]),
+                    min_link_bw_bps=float(bwfc_h[i]),
+                )
+                if forecast_reconfigure(env_fc, th):
+                    env = env_fc
+                    gate = decision_gate(
+                        env_fc, th, now=now,
+                        t_last_reconfig=sess.t_last_reconfig,
+                        throttle=sess.throttle, prefired=True,
+                    )
+                    if gate == "solve":
+                        proactive.add(sid)
             if gate == "solve":
                 triggered.append(sid)
                 reasons_by_sid[sid] = tuple(env.reasons)
@@ -613,7 +748,7 @@ class FleetOrchestrator:
             t_ev = time.perf_counter()
             assign_d, mig_lat_d, mig_cost_d = self.kernel.migrate(
                 buf, price, state, weights=self.weights,
-                state_args=state_args,
+                state_args=state_args, use_forecast=use_fc,
             )
             trows = [rows[sid] for sid in triggered]
             assign_h, mig_lat_h, mig_cost_h, segw_t, valid_t, mem_t = (
@@ -653,14 +788,14 @@ class FleetOrchestrator:
                         float(mig_lat_h[pos]), 0.0,
                     )
                     continue
-                c_lat, m_lat = cur_lat[sid], float(mig_lat_h[pos])
+                c_lat, m_lat = cmp_lat[sid], float(mig_lat_h[pos])
                 if dirty:  # re-price against the post-commit table
                     c_lat = self._lat_py(
                         sess, Solution(sess.config.boundaries,
                                        sess.config.assignment, 0.0),
-                        state, table,
+                        state, table, base,
                     )
-                    m_lat = self._lat_py(sess, mig, state, table)
+                    m_lat = self._lat_py(sess, mig, state, table, base)
                 # device-repaired against cycle-start residuals; the gate
                 # only re-checks vs memory claimed by earlier commits
                 feasible = (self._mem_feasible(sess, mig, state, table)
@@ -687,7 +822,7 @@ class FleetOrchestrator:
         if resplit_rows:
             exclude = tuple(sid for sid, *_ in resplit_rows)
             solve_state = self.effective_state(
-                state, exclude=exclude, _table=table
+                state, exclude=exclude, _table=table, base=base
             )
             problems = [
                 self._session_problem(self.sessions[sid])
@@ -704,8 +839,13 @@ class FleetOrchestrator:
                 for (sid, *_), rs in zip(resplit_rows, rs_sols)
             ]
             rrows = [rows[sid] for sid, *_ in resplit_rows]
+            # forecast cycles price re-split candidates against the same
+            # worst-case effective rows the migrate kernel used
             bg_h, lbw_h, mem_h = gather_rows(
-                rrows, price.bg, price.link_bw, price.mem
+                rrows,
+                price.bg_fc if use_fc else price.bg,
+                price.lbw_fc if use_fc else price.link_bw,
+                price.mem,
             )
             packed_rs = pack_sessions(rs_items, min_k=buf.max_segs)
             # Eq. 4 over the WHOLE re-split set at once: one vectorized
@@ -742,18 +882,18 @@ class FleetOrchestrator:
             for pos, (sid, mig, m_lat) in enumerate(resplit_rows):
                 sess = self.sessions[sid]
                 rs, r_lat = rs_sols[pos], float(rs_lat[pos])
-                c_lat = cur_lat[sid]
+                c_lat = cmp_lat[sid]
                 if dirty:
                     # earlier commits this cycle moved the cost surface:
                     # re-price BOTH candidates (and the incumbent) against
                     # the refreshed table so the migrate-vs-resplit choice
                     # is not biased toward a stale price
-                    m_lat = self._lat_py(sess, mig, state, table)
-                    r_lat = self._lat_py(sess, rs, state, table)
+                    m_lat = self._lat_py(sess, mig, state, table, base)
+                    r_lat = self._lat_py(sess, rs, state, table, base)
                     c_lat = self._lat_py(
                         sess, Solution(sess.config.boundaries,
                                        sess.config.assignment, 0.0),
-                        state, table,
+                        state, table, base,
                     )
                 kind, chosen, chosen_lat = DecisionKind.RESPLIT, rs, r_lat
                 if m_lat < r_lat:
@@ -796,6 +936,11 @@ class FleetOrchestrator:
             n_cooldown=sum(k == DecisionKind.COOLDOWN for k in kinds),
             eval_time_s=eval_t,
             pack_time_s=buf.stats["pack_time_s"] - pack0,
+            n_preempt=sum(
+                1 for sid, d in per_session.items()
+                if sid in proactive
+                and d.kind in (DecisionKind.MIGRATE, DecisionKind.RESPLIT)
+            ),
         )
         self.decisions.append(fd)
         for sid, d in per_session.items():
@@ -819,13 +964,28 @@ class FleetOrchestrator:
         Returns True iff a new config was actually committed (callers then
         refresh the shared load table for the rest of the cycle; the
         session's resident-buffer row is updated here).
+
+        SLO rescue: the anti-thrash hysteresis demands a material
+        (``min_improvement_frac``) gain before paying for a rollout — but a
+        session sitting marginally OVER its hard SLO whose best candidate
+        clears it may never find a 10% improvement, and would breach for
+        the rest of its lifetime.  Crossing back under the SLO is material
+        by definition, so that case bypasses the improvement threshold
+        (identical configs still KEEP).
         """
         sess = self.sessions[sid]
-        if hysteresis_keep(
+        keep = hysteresis_keep(
             (sess.config.boundaries, sess.config.assignment),
             (chosen.boundaries, chosen.assignment),
             chosen_lat, cur_lat, self.min_improvement_frac,
-        ):
+        )
+        if keep:
+            slo = self._session_thresholds(sess).latency_max_s
+            if ((chosen.boundaries, chosen.assignment)
+                    != (sess.config.boundaries, sess.config.assignment)
+                    and cur_lat > slo >= chosen_lat):
+                keep = False
+        if keep:
             per_session[sid] = Decision(
                 DecisionKind.KEEP, sess.config, reasons, chosen_lat, 0.0
             )

@@ -70,6 +70,7 @@ from typing import Sequence
 import numpy as np
 
 from .cost_model import _EPS, _RHO_CAP, CostWeights, SystemState, Workload
+from .forecast import seasonal_update, worst_case_capacity
 from .graph import ModelGraph
 from .placement import Solution
 
@@ -410,9 +411,15 @@ def _surrogate_inputs(
     (B, n) adds the Eq. 4 single-segment mask — a node whose residual memory
     cannot hold a segment's weights alone is +``_BIG`` for that segment,
     masked exactly like a privacy breach (multi-segment accumulation on one
-    node is outside the DP state; the repair pass handles it).  Shared by
-    :class:`BatchedMigrationSolver` and :class:`BatchedRepairPass` so solver
-    and repairer can never price different surrogates.
+    node is outside the DP state; the repair pass handles it).
+
+    This is the PINNED HOST REFERENCE: the hot paths
+    (:class:`BatchedMigrationSolver`, :class:`BatchedRepairPass`, the fused
+    migrate kernel) expand the same tensors ON DEVICE from the (B, K)
+    ``xfer_bytes_tok`` vector via :func:`_surrogate_batch` — the per-dispatch
+    O(B·K·n²) numpy build + upload this function represents is off the
+    control plane (ROADMAP open item), and the device expansion is
+    equivalence-tested against this function in ``tests/test_fleet_eval.py``.
     """
     B, K = packed.seg_flops.shape
     n = state.num_nodes
@@ -449,6 +456,55 @@ def _surrogate_inputs(
                 + lat[packed.source])
     same = packed.source[:, None] == np.arange(n)[None, :]
     src_xfer = np.where(same, 0.0, src_xfer)
+    return exec_cost, xfer, src_xfer
+
+
+def _surrogate_batch(seg_flops, seg_w, seg_priv, xbytes, t_in, t_out, lam,
+                     source, input_bytes_tok, bg, lbw, link_lat, flops_per_s,
+                     mem_bw, trusted, mem, n: int):
+    """Device expansion of the Eq. 7 surrogate tensors from the row layout.
+
+    jnp mirror of :func:`_surrogate_inputs` (the pinned host reference):
+    the (B, K, n, n) transfer tensor and (B, K, n) exec-cost tensor are
+    expanded INSIDE the jitted programs from the (B, K) boundary-bytes
+    vector and the per-row effective link matrix — nothing O(n²·K) is built
+    or uploaded host-side per dispatch.  ``mem=None`` statically omits the
+    Eq. 4 single-segment mask (the memory-blind PR-2 surrogate).  Callers
+    pass ``lbw`` / ``link_lat`` already ``nan_to_num``-finited, exactly like
+    the host path.
+    """
+    import jax.numpy as jnp
+
+    B = seg_flops.shape[0]
+    derate = jnp.maximum(_EPS, 1.0 - bg)                      # (B, n)
+    f_eff = jnp.maximum(flops_per_s[None, :] * derate, _EPS)
+    m_eff = jnp.maximum(mem_bw[None, :] * derate, _EPS)
+    ft = seg_flops[:, :, None] / f_eff[:, None, :]            # (B, K, n)
+    svc = (t_in[:, None, None] * ft
+           + t_out[:, None, None]
+           * jnp.maximum(ft, seg_w[:, :, None] / m_eff[:, None, :]))
+    load = jnp.minimum(lam[:, None, None] * svc, 0.9)
+    exec_cost = svc / (1.0 - load)
+    exec_cost = jnp.where(
+        seg_priv[:, :, None] & (~trusted)[None, None, :], _BIG, exec_cost
+    )
+    if mem is not None:
+        # Eq. 4 per-step mask: a segment that alone overflows a node's
+        # residual memory loses that node inside the DP, not at commit time
+        exec_cost = jnp.where(
+            seg_w[:, :, None] > mem[:, None, :], _BIG, exec_cost
+        )
+    total_tok = (t_in + t_out)[:, None, None, None]
+    xfer = (xbytes[:, :, None, None] * total_tok
+            / jnp.maximum(lbw[:, None], _EPS)) + link_lat[None, None]
+    xfer = jnp.where(jnp.eye(n, dtype=bool)[None, None], 0.0, xfer)
+    src_bytes = input_bytes_tok * (t_in + t_out)
+    src_xfer = (src_bytes[:, None]
+                / jnp.maximum(lbw[jnp.arange(B), source], _EPS)
+                + link_lat[source])
+    src_xfer = jnp.where(
+        source[:, None] == jnp.arange(n)[None, :], 0.0, src_xfer
+    )
     return exec_cost, xfer, src_xfer
 
 
@@ -490,16 +546,28 @@ class BatchedMigrationSolver:
     """
 
     def __init__(self) -> None:
-        self._compiled: dict[tuple[int, int, int], object] = {}
+        self._compiled: dict[tuple, object] = {}
 
-    def _build(self, B: int, K: int, n: int):
+    def _build(self, B: int, K: int, n: int, use_mem: bool):
         import jax
 
-        key = (B, K, n)
+        key = (B, K, n, use_mem)
         if key not in self._compiled:
-            self._compiled[key] = jax.jit(
-                jax.vmap(_make_migration_dp(K, n), in_axes=(0, 0, 0, 0))
-            )
+            dp = jax.vmap(_make_migration_dp(K, n), in_axes=(0, 0, 0, 0))
+
+            # surrogate expansion fused with the DP: the (B, K, n, n)
+            # transfer tensor exists only on device (see _surrogate_batch)
+            def run(seg_flops, seg_w, seg_priv, xbytes, n_segs, t_in, t_out,
+                    lam, source, input_bytes_tok, bg, lbw, link_lat,
+                    flops_per_s, mem_bw, trusted, mem):
+                exec_cost, xfer, src_xfer = _surrogate_batch(
+                    seg_flops, seg_w, seg_priv, xbytes, t_in, t_out, lam,
+                    source, input_bytes_tok, bg, lbw, link_lat, flops_per_s,
+                    mem_bw, trusted, mem if use_mem else None, n,
+                )
+                return dp(exec_cost, xfer, n_segs, src_xfer)
+
+            self._compiled[key] = jax.jit(run)
         return self._compiled[key]
 
     def solve_batch(
@@ -519,28 +587,40 @@ class BatchedMigrationSolver:
 
         B, K = packed.seg_flops.shape
         n = state.num_nodes
-        exec_cost, xfer, src_xfer = _surrogate_inputs(
-            packed, bg=bg, link_bw=link_bw, state=state, mem=mem
-        )
+        use_mem = mem is not None
 
         # pow2 batch padding: the triggered-session count varies per cycle;
         # without it every distinct B would recompile (see FleetCostEvaluator)
         Bp = _pow2(B)
-        n_segs = packed.n_segs
-        if Bp > B:
-            def rep(a):
-                return np.concatenate(
-                    [a, np.repeat(a[-1:], Bp - B, axis=0)], axis=0
-                )
 
-            exec_cost, xfer, src_xfer = rep(exec_cost), rep(xfer), rep(src_xfer)
-            n_segs = rep(n_segs)
+        def rep(a):
+            if Bp == B:
+                return a
+            return np.concatenate(
+                [a, np.repeat(a[-1:], Bp - B, axis=0)], axis=0
+            )
 
-        fn = self._build(Bp, K, n)
+        fn = self._build(Bp, K, n, use_mem)
         with enable_x64(True):
             C, parents = fn(
-                jnp.asarray(exec_cost), jnp.asarray(xfer),
-                jnp.asarray(n_segs), jnp.asarray(src_xfer),
+                jnp.asarray(rep(packed.seg_flops)),
+                jnp.asarray(rep(packed.seg_wbytes)),
+                jnp.asarray(rep(packed.seg_priv)),
+                jnp.asarray(rep(packed.xfer_bytes_tok)),
+                jnp.asarray(rep(packed.n_segs)),
+                jnp.asarray(rep(packed.t_in)),
+                jnp.asarray(rep(packed.t_out)),
+                jnp.asarray(rep(packed.lam)),
+                jnp.asarray(rep(packed.source)),
+                jnp.asarray(rep(packed.input_bytes_tok)),
+                jnp.asarray(rep(np.asarray(bg, dtype=np.float64))),
+                jnp.asarray(rep(np.nan_to_num(link_bw, posinf=_BIG))),
+                jnp.asarray(np.nan_to_num(state.link_lat, posinf=_BIG)),
+                jnp.asarray(state.flops_per_s), jnp.asarray(state.mem_bw),
+                jnp.asarray(state.trusted.astype(bool)),
+                jnp.asarray(rep(np.asarray(
+                    mem if use_mem else np.zeros((B, n)), dtype=np.float64
+                ))),
             )
         C = np.asarray(C)
         parents = np.asarray(parents)                            # (B, K-1, n)
@@ -613,20 +693,45 @@ def _make_repair_core(K: int, n: int):
     return repair
 
 
+def _make_repair(K: int, n: int):
+    """Batched surrogate expansion + greedy Eq. 4 repair, one program.
+
+    The destination-cost surrogate is memory-UNmasked (matching the host
+    reference path: the fit check, not the price, enforces capacity), and
+    its (B, K, n, n) transfer tensor is expanded on device
+    (:func:`_surrogate_batch`) — nothing O(n²) crosses the host boundary.
+    """
+    import jax
+
+    rep = _make_repair_core(K, n)
+
+    def run(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes, n_segs,
+            t_in, t_out, lam, source, input_bytes_tok, bg, lbw, mem,
+            link_lat, flops_per_s, mem_bw, trusted):
+        exec_cost, xfer, src_xfer = _surrogate_batch(
+            seg_flops, seg_w, seg_priv, xbytes, t_in, t_out, lam, source,
+            input_bytes_tok, bg, lbw, link_lat, flops_per_s, mem_bw,
+            trusted, None, n,
+        )
+        return jax.vmap(rep)(seg_w, valid, n_segs, seg_node, mem,
+                             exec_cost, xfer, src_xfer)
+
+    return run
+
+
 def _make_repair_price(K: int, n: int, alpha: float, beta: float,
                        gamma: float, mem_penalty: float):
     """Batched repair + Φ pricing of the repaired assignments, one program."""
-    import jax
-    import jax.numpy as jnp
 
-    rep = _make_repair_core(K, n)
+    rep = _make_repair(K, n)
     ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
 
     def run(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes, n_segs,
-            t_in, t_out, lam, bg, lbw, mem, link_lat, flops_per_s, mem_bw,
-            trusted, exec_cost, xfer, src_xfer):
-        assign = jax.vmap(rep)(seg_w, valid, n_segs, seg_node, mem,
-                               exec_cost, xfer, src_xfer)
+            t_in, t_out, lam, source, input_bytes_tok, bg, lbw, mem,
+            link_lat, flops_per_s, mem_bw, trusted):
+        assign = rep(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes,
+                     n_segs, t_in, t_out, lam, source, input_bytes_tok,
+                     bg, lbw, mem, link_lat, flops_per_s, mem_bw, trusted)
         lat, _, _ = ev(seg_flops, seg_w, seg_priv, assign, valid, xbytes,
                        t_in, t_out, lam, bg, lbw, link_lat, flops_per_s,
                        mem_bw, trusted, mem)
@@ -660,7 +765,7 @@ class BatchedRepairPass:
 
         key = (B, K, n)
         if key not in self._compiled:
-            self._compiled[key] = jax.jit(jax.vmap(_make_repair_core(K, n)))
+            self._compiled[key] = jax.jit(_make_repair(K, n))
         return self._compiled[key]
 
     def _build_priced(self, B: int, K: int, n: int, weights: CostWeights,
@@ -674,11 +779,15 @@ class BatchedRepairPass:
             ))
         return self._compiled[key]
 
+    # program argument order shared by _make_repair and _make_repair_price
+    _ARGS = ("seg_flops", "seg_w", "seg_priv", "seg_node", "valid", "xbytes",
+             "n_segs", "t_in", "t_out", "lam", "source", "input_bytes_tok",
+             "bg", "lbw", "mem")
+
     @staticmethod
-    def _padded(packed: PackedSessions, bg, link_bw, mem, state):
-        exec_cost, xfer, src_xfer = _surrogate_inputs(
-            packed, bg=bg, link_bw=link_bw, state=state
-        )
+    def _padded(packed: PackedSessions, bg, link_bw, mem):
+        """pow2-pad the RAW row tensors only — the Eq. 7 surrogate is
+        expanded on device inside the jitted programs (_surrogate_batch)."""
         args = {
             "seg_flops": packed.seg_flops,
             "seg_w": packed.seg_wbytes,
@@ -688,10 +797,11 @@ class BatchedRepairPass:
             "xbytes": packed.xfer_bytes_tok,
             "n_segs": packed.n_segs,
             "t_in": packed.t_in, "t_out": packed.t_out, "lam": packed.lam,
+            "source": packed.source,
+            "input_bytes_tok": packed.input_bytes_tok,
             "bg": np.asarray(bg, dtype=np.float64),
             "lbw": np.nan_to_num(link_bw, posinf=_BIG),
             "mem": np.asarray(mem, dtype=np.float64),
-            "exec_cost": exec_cost, "xfer": xfer, "src_xfer": src_xfer,
         }
         B = packed.batch
         Bp = _pow2(B)
@@ -701,6 +811,15 @@ class BatchedRepairPass:
                 for k, a in args.items()
             }
         return args, Bp
+
+    def _state_tail(self, state: SystemState):
+        import jax.numpy as jnp
+
+        return (
+            jnp.asarray(np.nan_to_num(state.link_lat, posinf=_BIG)),
+            jnp.asarray(state.flops_per_s), jnp.asarray(state.mem_bw),
+            jnp.asarray(state.trusted.astype(bool)),
+        )
 
     def repair_batch(
         self,
@@ -717,13 +836,12 @@ class BatchedRepairPass:
         from jax.experimental import enable_x64
 
         B, K = packed.seg_flops.shape
-        a, Bp = self._padded(packed, bg, link_bw, mem, state)
+        a, Bp = self._padded(packed, bg, link_bw, mem)
         fn = self._build(Bp, K, state.num_nodes)
         self.dispatches += 1
         with enable_x64(True):
-            out = fn(*(jnp.asarray(a[k]) for k in
-                       ("seg_w", "valid", "n_segs", "seg_node", "mem",
-                        "exec_cost", "xfer", "src_xfer")))
+            out = fn(*(jnp.asarray(a[k]) for k in self._ARGS),
+                     *self._state_tail(state))
         return np.asarray(out)[:B]
 
     def repair_and_price_batch(
@@ -745,24 +863,12 @@ class BatchedRepairPass:
 
         B, K = packed.seg_flops.shape
         n = state.num_nodes
-        a, Bp = self._padded(packed, bg, link_bw, mem, state)
+        a, Bp = self._padded(packed, bg, link_bw, mem)
         fn = self._build_priced(Bp, K, n, weights, mem_penalty)
         self.dispatches += 1
         with enable_x64(True):
-            assign, lat = fn(
-                jnp.asarray(a["seg_flops"]), jnp.asarray(a["seg_w"]),
-                jnp.asarray(a["seg_priv"]), jnp.asarray(a["seg_node"]),
-                jnp.asarray(a["valid"]), jnp.asarray(a["xbytes"]),
-                jnp.asarray(a["n_segs"]), jnp.asarray(a["t_in"]),
-                jnp.asarray(a["t_out"]), jnp.asarray(a["lam"]),
-                jnp.asarray(a["bg"]), jnp.asarray(a["lbw"]),
-                jnp.asarray(a["mem"]),
-                jnp.asarray(np.nan_to_num(state.link_lat, posinf=_BIG)),
-                jnp.asarray(state.flops_per_s), jnp.asarray(state.mem_bw),
-                jnp.asarray(state.trusted.astype(bool)),
-                jnp.asarray(a["exec_cost"]), jnp.asarray(a["xfer"]),
-                jnp.asarray(a["src_xfer"]),
-            )
+            assign, lat = fn(*(jnp.asarray(a[k]) for k in self._ARGS),
+                             *self._state_tail(state))
         return np.asarray(assign)[:B], np.asarray(lat)[:B]
 
 
@@ -990,6 +1096,12 @@ class ResidentPrice:
     Only ``lat`` / ``max_util`` / ``min_bw`` — O(B) scalars — are meant to
     be pulled to host every cycle; the effective-state tensors stay on
     device and are row-gathered only for the triggered set.
+
+    The ``*_fc`` fields are populated only when a
+    :class:`~repro.core.forecast.CapacityForecaster` rode the dispatch:
+    the same quantities priced against the worst-case forecast capacity
+    over the horizon (current values until one season has been observed,
+    and bit-identically the current values at ``horizon_steps = 0``).
     """
 
     lat: object        # (B,)   current-config latency per row
@@ -1001,26 +1113,35 @@ class ResidentPrice:
     tot_node: object   # (n,)   fleet-total induced node rho
     tot_link: object   # (n, n) fleet-total link rho
     tot_w: object      # (n,)   fleet-total resident weight bytes
+    lat_fc: object = None       # (B,) latency under worst-case forecast C
+    max_util_fc: object = None  # (B,) forecast trigger-env max node util
+    min_bw_fc: object = None    # (B,) forecast trigger-env min link bw
+    bg_fc: object = None        # (B, n) forecast effective background util
+    lbw_fc: object = None       # (B, n, n) forecast effective link bw
+
+    @property
+    def has_forecast(self) -> bool:
+        return self.lat_fc is not None
 
 
-def _make_fused_price(n: int, alpha: float, beta: float, gamma: float,
-                      mem_penalty: float, bw_floor: float):
-    """Induced loads → effective C(t) → batched Φ → trigger env, one program.
+def _price_core(n: int, ev, bw_floor: float):
+    """The shared fused-pricing body: induced loads → effective C(t) →
+    batched Φ → trigger env.
 
     Mirrors the PR-2 cycle-start sequence exactly: jitted scatter-adds
     replace :func:`packed_induced_loads`'s ``np.add.at``, the fold replicates
     ``FleetOrchestrator._fold_loads``, pricing reuses :func:`_make_eval`, and
     the per-row (max util, min bw) reductions replicate
-    ``FleetOrchestrator._session_env``.
+    ``FleetOrchestrator._session_env``.  Returns a dict so the plain and
+    forecast-fused wrappers pick the outputs (and intermediates) they need
+    from ONE body that cannot drift between them.
     """
     import jax.numpy as jnp
 
-    ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
-
-    def price(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes,
-              t_in, t_out, lam, source, active,
-              bg0, link_bw, link_lat, flops_per_s, mem_bw, trusted,
-              mem_bytes):
+    def core(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes,
+             t_in, t_out, lam, source, active,
+             bg0, link_bw, link_lat, flops_per_s, mem_bw, trusted,
+             mem_bytes):
         B, K = seg_flops.shape
         bidx = jnp.arange(B)[:, None]
         av = valid & active[:, None]
@@ -1066,8 +1187,96 @@ def _make_fused_price(n: int, alpha: float, beta: float, gamma: float,
         ebw = link_bw * jnp.clip(1.0 - tot_link, bw_floor, 1.0)
         hop_ok = valid & (prev != seg_node)
         min_bw = jnp.where(hop_ok, ebw[prev, seg_node], jnp.inf).min(axis=1)
-        return (lat, max_util, min_bw, bg, lbw, mem,
-                tot_node, tot_link, tot_w)
+        return dict(
+            lat=lat, max_util=max_util, min_bw=min_bw, bg=bg, lbw=lbw,
+            mem=mem, tot_node=tot_node, tot_link=tot_link, tot_w=tot_w,
+            node_r=node_r, link_r=link_r, prev=prev, hop_ok=hop_ok,
+        )
+
+    return core
+
+
+_PRICE_OUT = ("lat", "max_util", "min_bw", "bg", "lbw", "mem",
+              "tot_node", "tot_link", "tot_w")
+
+
+def _make_fused_price(n: int, alpha: float, beta: float, gamma: float,
+                      mem_penalty: float, bw_floor: float):
+    """The forecast-free fused pricing program (see :func:`_price_core`)."""
+    ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
+    core = _price_core(n, ev, bw_floor)
+
+    def price(*args):
+        c = core(*args)
+        return tuple(c[k] for k in _PRICE_OUT)
+
+    return price
+
+
+def _make_fused_price_fc(n: int, alpha: float, beta: float, gamma: float,
+                         mem_penalty: float, bw_floor: float,
+                         horizon: int, resid_alpha: float):
+    """Fused pricing + seasonal-naive forecast update + forecast pricing.
+
+    One dispatch per cycle does everything the plain program does AND (a)
+    appends the cycle's C(t) sample to the device-resident forecast rings
+    (:func:`repro.core.forecast.seasonal_update`; a no-op on read-only
+    dispatches via the traced ``advance`` gate), (b) reduces the horizon to
+    a worst-case capacity (max util / min bandwidth over {now} ∪ forecast),
+    and (c) re-prices every row and its trigger env against that worst case
+    — so the proactive control plane costs zero extra dispatches in steady
+    state.  With ``horizon == 0`` the forecast outputs ARE the current
+    outputs (same traced values), making the reactive A/B bit-identical.
+    """
+    import jax.numpy as jnp
+
+    ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
+    core = _price_core(n, ev, bw_floor)
+
+    def price(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes,
+              t_in, t_out, lam, source, active,
+              bg0, link_bw, link_lat, flops_per_s, mem_bw, trusted,
+              mem_bytes,
+              util_ring, bw_ring, resid_u, resid_b, idx, count, advance):
+        c = core(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes,
+                 t_in, t_out, lam, source, active, bg0, link_bw, link_lat,
+                 flops_per_s, mem_bw, trusted, mem_bytes)
+        # ring/residual update (cadence-gated by the traced `advance`)
+        util_ring2, resid_u2 = seasonal_update(
+            util_ring, resid_u, idx, count, bg0, advance, resid_alpha)
+        bw_ring2, resid_b2 = seasonal_update(
+            bw_ring, resid_b, idx, count, link_bw, advance, resid_alpha)
+        count2 = count + jnp.where(advance, 1, 0)
+        bg_wc, bw_wc = worst_case_capacity(
+            util_ring2, resid_u2, bw_ring2, resid_b2, idx, count2,
+            bg0, link_bw, horizon)
+        if horizon == 0:
+            lat_fc, util_fc, bw_fc = c["lat"], c["max_util"], c["min_bw"]
+            bg_fc, lbw_fc = c["bg"], c["lbw"]
+        else:
+            # per-row fold of the worst-case base capacity (_fold_loads
+            # with bg_wc/bw_wc in place of the instantaneous C(t))
+            bg_fc = jnp.clip(
+                bg_wc[None, :] + (c["tot_node"][None, :] - c["node_r"]),
+                0.0, 0.99,
+            )
+            lbw_fc = bw_wc[None] * jnp.clip(
+                1.0 - (c["tot_link"][None] - c["link_r"]), bw_floor, 1.0
+            )
+            lat_fc, _, _ = ev(seg_flops, seg_w, seg_priv, seg_node, valid,
+                              xbytes, t_in, t_out, lam, bg_fc, lbw_fc,
+                              link_lat, flops_per_s, mem_bw, trusted,
+                              c["mem"])
+            util_vec_fc = jnp.clip(bg_wc + c["tot_node"], 0.0, 2.0)
+            u_seg_fc = jnp.where(valid, util_vec_fc[seg_node], -jnp.inf)
+            util_fc = jnp.maximum(u_seg_fc.max(axis=1), util_vec_fc[source])
+            ebw_fc = bw_wc * jnp.clip(1.0 - c["tot_link"], bw_floor, 1.0)
+            bw_fc = jnp.where(
+                c["hop_ok"], ebw_fc[c["prev"], seg_node], jnp.inf
+            ).min(axis=1)
+        return (*(c[k] for k in _PRICE_OUT),
+                lat_fc, util_fc, bw_fc, bg_fc, lbw_fc,
+                bg_wc, bw_wc, util_ring2, bw_ring2, resid_u2, resid_b2)
 
     return price
 
@@ -1101,34 +1310,13 @@ def _make_fused_migrate(K: int, n: int, alpha: float, beta: float,
                 t_in, t_out, lam, source, input_bytes_tok,
                 bg, lbw, mem, link_lat, flops_per_s, mem_bw, trusted):
         B = seg_flops.shape[0]
-        untrusted = ~trusted
-        derate = jnp.maximum(_EPS, 1.0 - bg)                      # (B, n)
-        f_eff = jnp.maximum(flops_per_s[None, :] * derate, _EPS)
-        m_eff = jnp.maximum(mem_bw[None, :] * derate, _EPS)
-        ft = seg_flops[:, :, None] / f_eff[:, None, :]            # (B, K, n)
-        svc = (t_in[:, None, None] * ft
-               + t_out[:, None, None]
-               * jnp.maximum(ft, seg_w[:, :, None] / m_eff[:, None, :]))
-        load = jnp.minimum(lam[:, None, None] * svc, 0.9)
-        exec_cost = svc / (1.0 - load)
-        exec_cost = jnp.where(
-            seg_priv[:, :, None] & untrusted[None, None, :], _BIG, exec_cost
-        )
-        # Eq. 4 per-step mask: a segment that alone overflows a node's
-        # residual memory loses that node inside the DP, not at commit time
-        exec_cost = jnp.where(
-            seg_w[:, :, None] > mem[:, None, :], _BIG, exec_cost
-        )
-        total_tok = (t_in + t_out)[:, None, None, None]
-        xfer = (xbytes[:, :, None, None] * total_tok
-                / jnp.maximum(lbw[:, None], _EPS)) + link_lat[None, None]
-        xfer = jnp.where(jnp.eye(n, dtype=bool)[None, None], 0.0, xfer)
-        src_bytes = input_bytes_tok * (t_in + t_out)
-        src_xfer = (src_bytes[:, None]
-                    / jnp.maximum(lbw[jnp.arange(B), source], _EPS)
-                    + link_lat[source])
-        src_xfer = jnp.where(
-            source[:, None] == jnp.arange(n)[None, :], 0.0, src_xfer
+        # shared device surrogate expansion (with the Eq. 4 per-step mask:
+        # a segment that alone overflows a node's residual memory loses
+        # that node inside the DP, not at commit time)
+        exec_cost, xfer, src_xfer = _surrogate_batch(
+            seg_flops, seg_w, seg_priv, xbytes, t_in, t_out, lam, source,
+            input_bytes_tok, bg, lbw, link_lat, flops_per_s, mem_bw,
+            trusted, mem, n,
         )
         C, parents = jax.vmap(dp)(exec_cost, xfer, n_segs, src_xfer)
         # backtrack on device: rows shorter than K hold the carry until the
@@ -1195,27 +1383,50 @@ class ResidentFleetKernel:
         mem_penalty: float = 1e3,
         bw_floor: float = 0.05,
         state_args: tuple | None = None,
+        forecaster=None,
+        now: float | None = None,
     ) -> ResidentPrice:
+        """``forecaster`` (a :class:`~repro.core.forecast.CapacityForecaster`)
+        fuses the seasonal forecast update + worst-case re-pricing into the
+        same dispatch; ``now`` gates ring advancement (``None`` → read-only
+        dispatch that observes but does not append)."""
         import jax
         from jax.experimental import enable_x64
 
         n = state.num_nodes
-        key = (buf.n_rows, buf.max_segs, n, weights, float(mem_penalty),
-               float(bw_floor))
-        if key not in self._price_c:
-            self._price_c[key] = jax.jit(_make_fused_price(
-                n, weights.alpha, weights.beta, weights.gamma,
-                mem_penalty, bw_floor,
-            ))
         if state_args is None:
             state_args = self.state_args(state)
+        row_args = (
+            buf.seg_flops, buf.seg_wbytes, buf.seg_priv, buf.seg_node,
+            buf.valid, buf.xfer_bytes_tok, buf.t_in, buf.t_out, buf.lam,
+            buf.source, buf.active,
+        )
+        if forecaster is None:
+            key = (buf.n_rows, buf.max_segs, n, weights, float(mem_penalty),
+                   float(bw_floor))
+            if key not in self._price_c:
+                self._price_c[key] = jax.jit(_make_fused_price(
+                    n, weights.alpha, weights.beta, weights.gamma,
+                    mem_penalty, bw_floor,
+                ))
+            with enable_x64(True):
+                out = self._price_c[key](*row_args, *state_args)
+            return ResidentPrice(*out)
+
+        cfg = forecaster.cfg
+        key = (buf.n_rows, buf.max_segs, n, weights, float(mem_penalty),
+               float(bw_floor), cfg)
+        if key not in self._price_c:
+            self._price_c[key] = jax.jit(_make_fused_price_fc(
+                n, weights.alpha, weights.beta, weights.gamma,
+                mem_penalty, bw_floor, cfg.horizon_steps, cfg.residual_alpha,
+            ))
+        fc_args, advance = forecaster.kernel_args(n, now)
         with enable_x64(True):
-            out = self._price_c[key](
-                buf.seg_flops, buf.seg_wbytes, buf.seg_priv, buf.seg_node,
-                buf.valid, buf.xfer_bytes_tok, buf.t_in, buf.t_out, buf.lam,
-                buf.source, buf.active, *state_args,
-            )
-        return ResidentPrice(*out)
+            out = self._price_c[key](*row_args, *state_args, *fc_args)
+        price = ResidentPrice(*out[:14])
+        forecaster.commit(*out[16:], *out[14:16], advance=advance, now=now)
+        return price
 
     def migrate(
         self,
@@ -1226,9 +1437,16 @@ class ResidentFleetKernel:
         weights: CostWeights = CostWeights(),
         mem_penalty: float = 1e3,
         state_args: tuple | None = None,
+        use_forecast: bool = False,
     ):
         """(repaired assignments (B, K), candidate latency (B,) priced on
-        the repaired assignment, DP surrogate cost (B,))."""
+        the repaired assignment, DP surrogate cost (B,)).
+
+        ``use_forecast`` prices the DP surrogate and the candidates against
+        the dispatch's forecast effective state (``price.bg_fc`` /
+        ``price.lbw_fc``) instead of the instantaneous one — the SAME
+        compiled program, different input rows — so a proactive migration
+        never targets a node that is about to spike."""
         import jax
         from jax.experimental import enable_x64
 
@@ -1242,12 +1460,15 @@ class ResidentFleetKernel:
         if state_args is None:
             state_args = self.state_args(state)
         (_, _, link_lat, flops_per_s, mem_bw, trusted, _) = state_args
+        bg, lbw = price.bg, price.link_bw
+        if use_forecast and price.has_forecast:
+            bg, lbw = price.bg_fc, price.lbw_fc
         with enable_x64(True):
             assign, mig_lat, cost = self._mig_c[key](
                 buf.seg_flops, buf.seg_wbytes, buf.seg_priv, buf.valid,
                 buf.xfer_bytes_tok, buf.n_segs, buf.t_in, buf.t_out,
                 buf.lam, buf.source, buf.input_bytes_tok,
-                price.bg, price.link_bw, price.mem,
+                bg, lbw, price.mem,
                 link_lat, flops_per_s, mem_bw, trusted,
             )
         return assign, mig_lat, cost

@@ -7,7 +7,8 @@ from dataclasses import dataclass, field
 
 __all__ = ["Thresholds", "TriggerState", "should_reconfigure", "EWMA",
            "SolveThrottle", "QoSClass", "QOS_INTERACTIVE", "QOS_STANDARD",
-           "QOS_BATCH", "QOS_CLASSES", "decision_gate", "hysteresis_keep"]
+           "QOS_BATCH", "QOS_CLASSES", "decision_gate", "hysteresis_keep",
+           "forecast_reconfigure"]
 
 
 @dataclass(frozen=True)
@@ -122,13 +123,15 @@ def decision_gate(
     now: float,
     t_last_reconfig: float,
     throttle: SolveThrottle | None = None,
+    prefired: bool = False,
 ) -> str:
     """The trigger → cool-down → duty-cycle gate every orchestrator runs.
 
     One copy of the decision skeleton shared by the single-session
-    :class:`~repro.core.orchestrator.AdaptiveOrchestrator` and the fleet
-    monitoring cycle (:meth:`~repro.core.fleet.FleetOrchestrator.step`), so
-    the two can never drift.  Returns one of:
+    :class:`~repro.core.orchestrator.AdaptiveOrchestrator`, the fleet
+    monitoring cycle (:meth:`~repro.core.fleet.FleetOrchestrator.step`),
+    and the fleet's PROACTIVE (forecast) path, so the three can never
+    drift.  Returns one of:
 
     * ``"keep"``      — no trigger fired; stay on the current config.
     * ``"cooldown"``  — a trigger fired inside the T_cool window.
@@ -138,9 +141,12 @@ def decision_gate(
 
     Ordering matters: ``should_reconfigure`` populates ``env.reasons``/
     ``env.kinds``, and the throttle only records a context once the
-    cool-down has passed (matching both pre-existing call sites).
+    cool-down has passed (matching the pre-existing call sites).
+    ``prefired=True`` skips the ``should_reconfigure`` evaluation — the
+    caller already ran it (e.g. :func:`forecast_reconfigure`, which also
+    namespaces the kinds) and only needs the cool-down/throttle tail.
     """
-    if not should_reconfigure(env, th):
+    if not prefired and not should_reconfigure(env, th):
         return "keep"
     if now - t_last_reconfig < th.cooldown_s:
         return "cooldown"
@@ -167,6 +173,26 @@ def hysteresis_keep(
     if candidate == current:
         return True
     return candidate_lat > current_lat * (1.0 - min_improvement_frac)
+
+
+def forecast_reconfigure(env: TriggerState, th: Thresholds) -> bool:
+    """ShouldReconfigure on a PREDICTED environment (proactive trigger).
+
+    Same Θ comparison as :func:`should_reconfigure`, applied to a
+    forecast-priced :class:`TriggerState` (the session's latency / fleet
+    util / link bandwidth under the worst-case capacity within the forecast
+    horizon).  On firing, the trigger kinds and reasons are namespaced
+    ``forecast-``/``forecast:`` so (a) operators can tell a preemptive
+    reconfiguration from a reactive one and (b) :class:`SolveThrottle`
+    treats predicted and observed degradation as DISTINCT contexts — a
+    rejected proactive solve must not debounce the reactive solve that
+    fires when the degradation actually lands, and vice versa.
+    """
+    if not should_reconfigure(env, th):
+        return False
+    env.kinds = tuple(f"forecast-{k}" for k in env.kinds)
+    env.reasons[:] = [f"forecast: {r}" for r in env.reasons]
+    return True
 
 
 def should_reconfigure(env: TriggerState, th: Thresholds) -> bool:

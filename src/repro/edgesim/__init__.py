@@ -9,6 +9,7 @@ from .scenario import (
     fleet_model_catalog,
     llama3_8b_graph,
     mec_traces,
+    spike_onsets,
     static_baseline_split,
 )
 from .simulator import (
@@ -29,5 +30,5 @@ __all__ = [
     "SimResult", "TickMetrics", "Trace", "base_system_state",
     "build_fleet_scenario", "build_mec_scenario", "constant",
     "fleet_model_catalog", "llama3_8b_graph", "mec_traces", "ou_process",
-    "square_wave", "static_baseline_split",
+    "spike_onsets", "square_wave", "static_baseline_split",
 ]

@@ -46,7 +46,7 @@ from .traces import Trace, constant, ou_process, square_wave
 __all__ = [
     "MECScenarioParams", "llama3_8b_graph", "build_mec_scenario",
     "static_baseline_split", "FleetScenarioParams", "build_fleet_scenario",
-    "fleet_model_catalog", "mec_traces",
+    "fleet_model_catalog", "mec_traces", "spike_onsets",
 ]
 
 MBPS = 1e6 / 8.0  # bytes/s per Mb/s
@@ -169,6 +169,21 @@ def mec_traces(
                     lo=0.5 * p.backhaul_mbps * MBPS, hi=1.5 * p.backhaul_mbps * MBPS)
     bw_traces = {(0, 3): bh, (1, 3): bh, (2, 3): bh}
     return util_traces, bw_traces
+
+
+def spike_onsets(p: MECScenarioParams, duration_s: float) -> tuple[float, ...]:
+    """Start times of the home-MEC saturation spikes within [0, duration).
+
+    The §IV background square wave saturates for ``spike_duty`` of every
+    ``spike_period_s`` starting at phase 0 — the onset instants are where
+    the PR-2 admission controller's transient ρ excursion lives, and what
+    the forecast A/B KPIs (``FleetSimResult.onset_max_rho``) measure.
+    """
+    return tuple(
+        float(k * p.spike_period_s)
+        for k in range(int(np.floor(duration_s / p.spike_period_s)) + 1)
+        if k * p.spike_period_s < duration_s
+    )
 
 
 def build_mec_scenario(

@@ -245,6 +245,17 @@ class FleetSimConfig:
     qos_mix: tuple[tuple[str, float], ...] = (
         ("interactive", 0.2), ("standard", 0.55), ("batch", 0.25),
     )
+    # short-horizon capacity forecasting (PR 5): attach a CapacityForecaster
+    # to the orchestrator — admission prices arrivals against the worst
+    # capacity within the horizon and the monitoring cycle raises proactive
+    # migrate/re-split triggers before a predicted SLO breach.  The season
+    # must match the periodic background signal in SAMPLES (the §IV home-MEC
+    # saturation wave has a 40 s period at the 1 s monitoring cadence).
+    # False keeps the reactive PR-2..4 control plane (seed-paired A/B arm).
+    forecast: bool = False
+    forecast_horizon_steps: int = 12
+    forecast_season_steps: int = 40
+    forecast_residual_alpha: float = 0.2
 
 
 @dataclass
@@ -261,6 +272,7 @@ class FleetTickMetrics:
     n_resplit: int = 0
     solver_time_s: float = 0.0
     deferred: int = 0              # parked in the admission queue this tick
+    n_preempt: int = 0             # forecast-triggered (proactive) commits
 
     @property
     def mean_latency_s(self) -> float:
@@ -288,6 +300,11 @@ class FleetSimResult:
         admitted = sum(m.admitted for m in w)
         rejected = sum(m.rejected for m in w)
         deferred = sum(m.deferred for m in w)
+        # SLO-breach time: wall-clock during which ANY live session's
+        # instantaneous latency exceeded its own QoS SLO (tick-quantized)
+        tick_s = (float(np.median(np.diff([m.t for m in w])))
+                  if len(w) > 1 else 0.1)
+        breach_s = sum(tick_s for m in w if m.qos_violation_frac > 0)
         return {
             "mean_latency_s": float(pool.mean()),
             "p95_latency_s": float(np.percentile(pool, 95)),
@@ -305,7 +322,26 @@ class FleetSimResult:
             "rejected_per_s": rejected / span,
             "deferred_per_s": deferred / span,
             "admit_frac": admitted / max(1, admitted + rejected),
+            # forecast KPIs (PR 5)
+            "slo_breach_minutes": breach_s / 60.0,
+            "preemptive_migrations": float(sum(m.n_preempt for m in w)),
         }
+
+    def onset_max_rho(self, onsets, *, width_s: float = 3.0,
+                      t0: float = 0.0, t1: float = float("inf")) -> float:
+        """Max node ρ inside ``[onset, onset + width_s)`` windows — the
+        spike-onset excursion KPI.  ``onsets`` are the background-spike
+        start times of the driving trace (the simulator does not know the
+        trace structure; scenario builders do — see
+        :func:`repro.edgesim.scenario.spike_onsets`).  Returns 0.0 when no
+        onset window intersects [t0, t1)."""
+        vals = [
+            float(m.node_rho.max())
+            for m in self.ticks
+            if t0 <= m.t < t1
+            and any(o <= m.t < o + width_s for o in onsets)
+        ]
+        return max(vals) if vals else 0.0
 
 
 class FleetSimulator:
@@ -340,6 +376,15 @@ class FleetSimulator:
         self.orch = orchestrator
         self.cfg = config
         self.rng = np.random.default_rng(config.seed)
+        if config.forecast and orchestrator.forecaster is None:
+            from ..core.forecast import CapacityForecaster, ForecastConfig
+
+            orchestrator.forecaster = CapacityForecaster(ForecastConfig(
+                horizon_steps=config.forecast_horizon_steps,
+                season_steps=config.forecast_season_steps,
+                sample_interval_s=config.monitor_interval_s,
+                residual_alpha=config.forecast_residual_alpha,
+            ))
         if admission is None and config.admission:
             admission = FleetAdmissionController(
                 orchestrator,
@@ -463,8 +508,10 @@ class FleetSimulator:
             # ---- price every session against the shared fleet state ----
             # one fused device dispatch over the orchestrator's resident
             # buffers (each row against its own effective C(t)) replaces the
-            # per-session Python chain_latency loop + O(fleet) load table
-            sids, lat_arr, rho = orch.price_fleet(state)
+            # per-session Python chain_latency loop + O(fleet) load table;
+            # `now` lets the forecaster append this tick's C(t) sample
+            # (sample-interval gated) inside the same dispatch
+            sids, lat_arr, rho = orch.price_fleet(state, now=t)
             slo_arr = np.asarray([
                 orch.sessions[sid].qos.latency_slo_s
                 if orch.sessions[sid].qos is not None
@@ -483,12 +530,13 @@ class FleetSimulator:
             if lat_arr.size:
                 orch.profiler.observe_latency(float(lat_arr.mean()))
 
-            n_mig = n_rs = 0
+            n_mig = n_rs = n_pre = 0
             solver_t = 0.0
             if orch.sessions and t >= next_monitor:
                 fd = orch.step(now=t)
                 next_monitor = t + cfg.monitor_interval_s
                 n_mig, n_rs = fd.n_migrate, fd.n_resplit
+                n_pre = fd.n_preempt
                 solver_t = fd.solver_time_s
 
             ticks.append(FleetTickMetrics(
@@ -501,7 +549,7 @@ class FleetSimulator:
                 node_rho=rho,
                 admitted=admitted, departed=departed, rejected=rejected,
                 n_migrate=n_mig, n_resplit=n_rs, solver_time_s=solver_t,
-                deferred=deferred,
+                deferred=deferred, n_preempt=n_pre,
             ))
             t = round(t + cfg.tick_s, 9)
         return FleetSimResult(ticks, log)

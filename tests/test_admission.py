@@ -147,6 +147,114 @@ def test_admitted_sessions_carry_qos_thresholds():
     assert th.latency_max_s == QOS_STANDARD.latency_slo_s
 
 
+def test_defer_queue_overflow_rejects_newcomers_in_fifo_order():
+    """A full defer queue never evicts: the queued entries keep their FIFO
+    positions and later deferrable arrivals are REJECTed outright."""
+    orch, _ = _fleet()
+    ctrl = FleetAdmissionController(orch, max_sessions=16, rho_ceiling=1.0,
+                                    queue_cap=2)
+    g = _heavy_graph()
+    patient_q = QoSClass("patient-q", latency_slo_s=1e3, defer_timeout_s=50.0)
+    for _ in range(2):   # fill the fleet so everything below defers
+        assert ctrl.request(
+            AdmissionRequest(g, _HEAVY_WL, qos=patient_q), now=0.0
+        ).kind is AdmissionKind.ACCEPT
+    # queue_cap=2: the first two park, the third is refused (no eviction)
+    lam = [1.01, 1.02, 1.03]
+    verdicts = [
+        ctrl.request(AdmissionRequest(
+            g, Workload(48, 8, lam[i], ), qos=patient_q), now=1.0 + i)
+        for i in range(3)
+    ]
+    assert [v.kind for v in verdicts] == [
+        AdmissionKind.DEFER, AdmissionKind.DEFER, AdmissionKind.REJECT
+    ]
+    assert ctrl.queued == 2
+    assert ctrl.counters["rejected"] == 1
+    # free the whole fleet: the queue drains in submit (FIFO) order
+    for sid in list(orch.sessions):
+        orch.depart(sid)
+    events = ctrl.poll(2.0)
+    assert [v.kind for _, v in events] == [AdmissionKind.ACCEPT] * 2
+    assert [r.workload.arrival_rate for r, _ in events] == lam[:2]
+
+
+def test_deferred_entry_repriced_under_changed_forecast():
+    """A request deferred because the forecast saw an imminent fleet-wide
+    spike is re-priced on poll — once the horizon has rolled past the
+    spike, the SAME entry is admitted (nothing departed in between)."""
+    from repro.core import CapacityForecaster, ForecastConfig
+
+    orch, _ = _fleet(n=2, util=0.1)
+    fc = CapacityForecaster(ForecastConfig(horizon_steps=2, season_steps=8))
+    # both nodes saturate at phases 4-5 (a candidate cannot dodge the spike
+    # by picking the other node)
+    def bg_at(t):
+        return (np.full(2, 0.9) if t % 8 in (4, 5) else np.full(2, 0.1))
+    for t in range(16):
+        fc.observe(float(t), bg_at(t))
+    orch.forecaster = fc
+    ctrl = FleetAdmissionController(orch, max_sessions=16, rho_ceiling=1.0)
+    patient_q = QoSClass("patient-q", latency_slo_s=1e3, defer_timeout_s=30.0)
+
+    # t=18 (phase 2): horizon covers phases 3-4 -> the spike is imminent,
+    # projected rho blows the ceiling under the forecast worst case
+    # (ring slots require contiguous sampling, like the live cadence gives)
+    for t in (16, 17, 18):
+        fc.observe(float(t), bg_at(t))
+    v = ctrl.request(AdmissionRequest(_heavy_graph(), _HEAVY_WL,
+                                      qos=patient_q), now=18.0)
+    assert v.kind is AdmissionKind.DEFER
+    assert "forecast" in v.reason
+    # mid-spike (t=20, phase 4): still infeasible, stays queued
+    for t in (19, 20):
+        fc.observe(float(t), bg_at(t))
+    assert ctrl.poll(20.0) == []
+    # t=22 (phase 6): horizon covers phases 7-0, spike passed -> ACCEPT,
+    # with no departure/capacity change — only the forecast moved
+    for t in (21, 22):
+        fc.observe(float(t), bg_at(t))
+    events = ctrl.poll(22.0)
+    assert [v.kind for _, v in events] == [AdmissionKind.ACCEPT]
+    assert ctrl.counters["accepted_from_queue"] == 1
+
+
+def test_depart_while_deferred_at_cap_admits_on_poll(monkeypatch):
+    """A request deferred AT the session cap (no pack built) is admitted by
+    the first poll after a departure frees a slot — the pack is built
+    exactly once, on that below-cap poll."""
+    import repro.core.splitter as sp
+
+    orch, _ = _fleet()
+    ctrl = FleetAdmissionController(orch, max_sessions=2, rho_ceiling=5.0)
+    g = _heavy_graph()
+    patient_q = QoSClass("patient-q", latency_slo_s=1e3, defer_timeout_s=30.0)
+    a = ctrl.request(AdmissionRequest(g, _HEAVY_WL, qos=patient_q), now=0.0)
+    b = ctrl.request(AdmissionRequest(_graph(), Workload(16, 4, 0.2),
+                                      qos=patient_q), now=0.0)
+    assert a.kind is AdmissionKind.ACCEPT and b.kind is AdmissionKind.ACCEPT
+
+    calls = {"pack": 0}
+    real = sp.pack_problem
+
+    def counting(*args, **kw):
+        calls["pack"] += 1
+        return real(*args, **kw)
+
+    monkeypatch.setattr(sp, "pack_problem", counting)
+    v = ctrl.request(AdmissionRequest(_graph(), Workload(16, 4, 0.2),
+                                      qos=patient_q), now=1.0)
+    assert v.kind is AdmissionKind.DEFER
+    assert "cap" in v.reason
+    assert calls["pack"] == 0            # at-cap: packing skipped
+    assert ctrl.poll(2.0) == []          # still at cap
+    assert calls["pack"] == 0
+    orch.depart(a.sid)                   # departs WHILE deferred
+    events = ctrl.poll(3.0)
+    assert [x.kind for _, x in events] == [AdmissionKind.ACCEPT]
+    assert calls["pack"] == 1            # packed once, on this poll
+
+
 def test_fleet_sim_admission_bounds_saturation():
     """Where the blind-admit fleet saturates (max_rho > 1), the priced fleet
     stays bounded on the identical scenario/seed."""

@@ -136,6 +136,52 @@ def test_batched_migration_dp_matches_per_session(seed):
         assert sc == pytest.approx(sc_ref, rel=1e-9)
 
 
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_device_surrogate_expansion_matches_host_reference(seed):
+    """The on-device Eq. 7 surrogate expansion (_surrogate_batch — what the
+    batched solvers/repairer/fused migrate now run, expanding the
+    (B, K, n, n) transfer tensor from xfer_bytes_tok inside the dispatch)
+    reproduces the pinned host reference _surrogate_inputs, with and
+    without the Eq. 4 memory mask."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.fleet_eval import _BIG, _surrogate_batch, _surrogate_inputs
+
+    rng = np.random.default_rng(seed)
+    state = _random_state(seed + 3)
+    B = int(rng.integers(1, 6))
+    packed = pack_sessions(_random_items(rng, B))
+    bg, lbw, mem = _per_session_states(rng, state, B)
+    n = state.num_nodes
+
+    for mem_arg in (None, mem):
+        host = _surrogate_inputs(
+            packed, bg=bg, link_bw=lbw, state=state, mem=mem_arg
+        )
+        with enable_x64(True):
+            dev = _surrogate_batch(
+                jnp.asarray(packed.seg_flops), jnp.asarray(packed.seg_wbytes),
+                jnp.asarray(packed.seg_priv),
+                jnp.asarray(packed.xfer_bytes_tok),
+                jnp.asarray(packed.t_in), jnp.asarray(packed.t_out),
+                jnp.asarray(packed.lam), jnp.asarray(packed.source),
+                jnp.asarray(packed.input_bytes_tok),
+                jnp.asarray(bg),
+                jnp.asarray(np.nan_to_num(lbw, posinf=_BIG)),
+                jnp.asarray(np.nan_to_num(state.link_lat, posinf=_BIG)),
+                jnp.asarray(state.flops_per_s), jnp.asarray(state.mem_bw),
+                jnp.asarray(state.trusted.astype(bool)),
+                None if mem_arg is None else jnp.asarray(mem_arg),
+                n,
+            )
+        for name, h, d in zip(("exec_cost", "xfer", "src_xfer"), host, dev):
+            np.testing.assert_allclose(
+                np.asarray(d), h, rtol=1e-12, atol=0.0, err_msg=name
+            )
+
+
 def test_packed_induced_loads_match_per_session():
     rng = np.random.default_rng(2)
     state = _random_state(2)
