@@ -31,6 +31,15 @@ below 1.0 with zero SLO-breach-minutes, and its accept rate within 5
 points of the reactive arm of the SAME run (PR-5 acceptance, guards the
 forecast subsystem against silent decay).  A fresh run without a qos
 section (``--monitor``-only) skips those gates with a note.
+
+The v4 ``storm`` section (seed-paired correlated-node-failure A/B) is
+likewise gated on absolutes of the SAME run: the handling arm must
+recover to zero Eq. 4 memory violations within ``BENCH_STORM_RECOVERY_S``
+seconds of the blast (default 20), accumulate strictly fewer
+memory-violation minutes than the no-handling arm, and never preempt a
+tier-0 (interactive) session.  Baselines of any earlier schema (v1–v3,
+no storm section) still gate a v4 monitor run — sections and metrics the
+baseline lacks are skipped with a note, never hard-failed.
 """
 
 from __future__ import annotations
@@ -120,6 +129,54 @@ def check_qos(doc: dict) -> list[str]:
     return failures
 
 
+def check_storm(doc: dict) -> list[str]:
+    """Absolute gates on the v4 failure-storm A/B rows (no baseline).
+
+    Handling arm: bounded recovery (``BENCH_STORM_RECOVERY_S`` seconds,
+    default 20 — detection is miss_limit heartbeat cycles, then one forced
+    re-placement + revocation pass), strictly fewer memory-violation
+    minutes than the no-handling arm of the SAME run, and zero tier-0
+    (interactive) preemptions — revocation must drain the loosest-SLO
+    tiers first.
+    """
+    rows = doc.get("storm") or doc.get("failure_storm") or []
+    if not rows:
+        print("[storm] no failure-storm section in fresh run — skipped")
+        return []
+    refreshed = doc.get("refreshed")
+    if refreshed is not None and "storm" not in refreshed:
+        print("[storm] section carried over from a previous sweep — skipped")
+        return []
+    max_rec = float(os.environ.get("BENCH_STORM_RECOVERY_S", "20"))
+    failures: list[str] = []
+    by_cap: dict[int, dict[str, dict]] = {}
+    for r in rows:
+        by_cap.setdefault(int(r["session_cap"]), {})[r["arm"]] = r
+
+    def gate(cap, name, value, ok, limit_desc):
+        verdict = "OK " if ok else "REGRESSION"
+        print(f"[storm cap {cap:>3}] {name}: {value} ({limit_desc}) {verdict}")
+        if not ok:
+            failures.append(f"storm cap {cap} {name}: {value} ({limit_desc})")
+
+    for cap, arms in sorted(by_cap.items()):
+        on = arms.get("handling")
+        off = arms.get("no-handling")
+        if on is None:
+            continue
+        rec = on.get("recovery_s")
+        gate(cap, "recovery_s", rec,
+             rec is not None and rec <= max_rec,
+             f"must be <= {max_rec}")
+        if off is not None:
+            gate(cap, "mem_violation_minutes", on["mem_violation_minutes"],
+                 on["mem_violation_minutes"] < off["mem_violation_minutes"],
+                 f"must be < no-handling {off['mem_violation_minutes']}")
+        tier0 = int(on.get("preempted_by_class", {}).get("interactive", 0))
+        gate(cap, "tier0_preemptions", tier0, tier0 == 0, "must be 0")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_fleet.json",
@@ -134,6 +191,7 @@ def main() -> int:
 
     fresh_doc = json.loads(pathlib.Path(args.fresh).read_text())
     failures: list[str] = check_qos(fresh_doc)
+    failures += check_storm(fresh_doc)
 
     base_path = pathlib.Path(args.baseline)
     if not base_path.exists():

@@ -27,7 +27,7 @@ Three questions the fleet layer must answer before any further scaling PR:
 
 Run:  PYTHONPATH=src python benchmarks/fleet_scaling.py [--smoke] [--json out.json]
       (--quick is an alias for --smoke; section flags: --amortization,
-       --monitor, --qos run a subset)
+       --monitor, --qos, --storm run a subset)
 """
 
 from __future__ import annotations
@@ -52,6 +52,7 @@ from repro.core import (
 from repro.core.placement import repair_capacity, surrogate_cost
 from repro.core.profiling import CapacityProfiler
 from repro.edgesim import (
+    FailureSpec,
     FleetScenarioParams,
     FleetSimConfig,
     MECScenarioParams,
@@ -264,19 +265,21 @@ def write_bench_fleet(sections: dict[str, list[dict]],
                       path: pathlib.Path) -> None:
     """Stable-schema perf artifact, appendable PR over PR.
 
-    v2 added ``repair_calls_per_cycle``; v3 adds the ``qos`` section (the
+    v2 added ``repair_calls_per_cycle``; v3 added the ``qos`` section (the
     seed-paired forecast A/B with onset-ρ / SLO-breach / preemption KPIs)
-    and ``resident_fc_cycle_ms`` in the monitor rows.  Sections absent from
+    and ``resident_fc_cycle_ms`` in the monitor rows; v4 adds the ``storm``
+    section (seed-paired correlated-node-failure A/B: recovery time,
+    memory-violation minutes, revocation counts).  Sections absent from
     ``sections`` are carried over from the committed file, so a
     ``--monitor``-only refresh never drops the qos baseline (and vice
     versa).
     """
-    doc = {"schema": "bench-fleet/v3",
-           "source": "benchmarks/fleet_scaling.py --monitor/--qos"}
+    doc = {"schema": "bench-fleet/v4",
+           "source": "benchmarks/fleet_scaling.py --monitor/--qos/--storm"}
     if path.exists():
         try:
             old = json.loads(path.read_text())
-            for k in ("monitor", "qos"):
+            for k in ("monitor", "qos", "storm"):
                 if k in old:
                     doc[k] = old[k]
         except (json.JSONDecodeError, OSError):
@@ -369,6 +372,75 @@ def forecast_ab(*, caps=(32, 64), duration_s: float = 180.0,
     return rows
 
 
+def failure_storm(*, cap: int = 32, duration_s: float = 60.0,
+                  blast_at_s: float = 20.0, blast_mttr_s: float = 25.0,
+                  seed: int = 11, fail_seed: int = 5) -> list[dict]:
+    """Seed-paired failure-handling on/off A/B: a correlated 2-node blast
+    (MEC nodes 1+2, the trusted hosts private segments are pinned to)
+    on the saturated cap-``cap`` fleet.
+
+    Both arms share one arrival stream AND one pre-drawn failure timeline;
+    only the handling differs.  OFF = the injector still zeroes dead-node
+    capacity in ``SystemState`` but no heartbeat registry is wired, so the
+    orchestrator only reacts through its ordinary latency/util triggers
+    (cooldown + hysteresis gated).  ON = heartbeat-driven ``node-fail``
+    trigger class (bypasses cooldown), forced re-placement through the
+    fused migrate + batched repair path, and graceful revocation of the
+    loosest-SLO sessions when the survivors cannot host everyone.
+
+    KPIs per arm: ``recovery_s`` (blast onset → first tick after which
+    Eq. 4 memory violations stay zero; ``null`` = never recovered inside
+    the run), ``mem_violation_minutes``, ``slo_breach_minutes``,
+    preemption/recovery counts and the per-QoS-class preemption breakdown.
+    ``benchmarks/check_regression.py`` gates the ON arm's absolutes
+    (bounded recovery, strictly lower violation minutes than OFF, zero
+    tier-0 preemptions).
+    """
+    rows = []
+    spec = FailureSpec(seed=fail_seed, blast_at_s=blast_at_s,
+                       blast_nodes=(1, 2), blast_mttr_s=blast_mttr_s)
+    for handling in (False, True):
+        p = FleetScenarioParams(sim=FleetSimConfig(
+            duration_s=duration_s,
+            tick_s=0.5,
+            monitor_interval_s=1.0,
+            max_sessions=cap,
+            initial_sessions=cap // 2,
+            session_arrival_per_s=max(0.2, cap / 60.0 * 2.0),
+            mean_lifetime_s=30.0,
+            seed=seed,
+            admission=True,
+            failures=spec,
+            failure_handling=handling,
+            preempt_patience_s=30.0,
+        ))
+        sim = build_fleet_scenario(p)
+        t0 = time.perf_counter()
+        res = sim.run()
+        wall = time.perf_counter() - t0
+        k = res.kpis(0.0, duration_s)
+        rec = res.recovery_time_s(blast_at_s)
+        rows.append(dict(
+            arm="handling" if handling else "no-handling",
+            session_cap=cap,
+            blast_nodes=[1, 2],
+            blast_at_s=blast_at_s,
+            blast_mttr_s=blast_mttr_s,
+            recovery_s=None if rec is None else round(rec, 2),
+            mem_violation_minutes=round(
+                k.get("mem_violation_minutes", 0.0), 4),
+            slo_breach_minutes=round(k.get("slo_breach_minutes", 0.0), 4),
+            sessions_preempted=int(k.get("sessions_preempted", 0.0)),
+            sessions_recovered=int(k.get("sessions_recovered", 0.0)),
+            preempted_by_class=dict(sim.admission.preempted_by_class)
+            if sim.admission is not None else {},
+            p95_latency_ms=round(1e3 * k.get("p95_latency_s", 0.0), 1),
+            qos_violation_frac=round(k.get("qos_violation_frac", 0.0), 4),
+            sim_wall_s=round(wall, 1),
+        ))
+    return rows
+
+
 def fleet_qos(*, duration_s: float = 60.0, seed: int = 0,
               caps=(1, 4, 8, 16, 32, 64)) -> list[dict]:
     """Aggregate QoS + admission outcomes vs session cap, admission OFF
@@ -418,8 +490,10 @@ def main() -> None:  # pragma: no cover
     ap.add_argument("--amortization", action="store_true")
     ap.add_argument("--monitor", action="store_true")
     ap.add_argument("--qos", action="store_true")
+    ap.add_argument("--storm", action="store_true")
     args = ap.parse_args()
-    run_all = not (args.amortization or args.monitor or args.qos)
+    run_all = not (args.amortization or args.monitor or args.qos
+                   or args.storm)
 
     out: dict[str, list[dict]] = {}
     if run_all or args.amortization:
@@ -461,6 +535,18 @@ def main() -> None:  # pragma: no cover
             print(r)
         if not args.smoke:
             bench_sections["qos"] = out["forecast_ab"]
+    if run_all or args.storm:
+        print("\n== failure storm A/B (correlated 2-node blast, seed-paired "
+              "handling off/on) ==")
+        out["failure_storm"] = failure_storm(
+            cap=8 if args.smoke else 32,
+            duration_s=40.0 if args.smoke else 60.0,
+            blast_at_s=12.0 if args.smoke else 20.0,
+        )
+        for r in out["failure_storm"]:
+            print(r)
+        if not args.smoke:
+            bench_sections["storm"] = out["failure_storm"]
     # the tracked artifact carries the FULL sweeps only — a smoke run must
     # never overwrite the committed perf trajectory; sections not re-run
     # are carried over from the committed file (merge-on-write)

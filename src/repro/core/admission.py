@@ -36,7 +36,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .cost_model import Workload, chain_latency, memory_violations, node_loads
-from .fleet import FleetOrchestrator
+from .fleet import FleetOrchestrator, FleetSession, session_induced_loads
 from .graph import ModelGraph
 from .placement import Solution
 from .splitter import PackedProblem, SessionProblem, coalesce_same_node
@@ -67,6 +67,10 @@ class AdmissionRequest:
     qos: QoSClass = QOS_STANDARD
     input_bytes_per_token: float = 4.0
     t_submit: float = 0.0
+    # True when this request is a live session revoked by preempt_overload
+    # re-entering through the defer queue (graceful degradation): a later
+    # ACCEPT counts as a RECOVERY, not a fresh admission
+    preempted: bool = False
 
 
 @dataclass(frozen=True)
@@ -101,10 +105,20 @@ class FleetAdmissionController:
     # trough-time admit that would violate at the next spike DEFERs now and
     # re-prices on poll.  False pins the reactive PR-2 behavior.
     use_forecast: bool = True
+    # revocation (PR 6): how long a preempted session waits in the defer
+    # queue for capacity to return before it is finally dropped.  None →
+    # the session's own QoS defer patience, which is tuned for ADMISSION
+    # latency (2 s for interactive) and usually far shorter than a node
+    # MTTR — storm scenarios set this to the expected repair time.
+    preempt_patience_s: float | None = None
     counters: dict[str, int] = field(default_factory=lambda: {
         "requests": 0, "accepted": 0, "accepted_from_queue": 0,
         "rejected": 0, "deferred": 0, "expired": 0,
+        "preempted": 0, "recovered": 0,
     })
+    # preemption counts by QoS-class name — the graceful-degradation
+    # evidence: under storm overload, "batch" should absorb the evictions
+    preempted_by_class: dict[str, int] = field(default_factory=dict)
     # (deadline, AdmissionRequest, PackedProblem): a deferred request keeps
     # its packed problem tensors, so every retry poll re-prices against the
     # updated residual capacity WITHOUT re-coarsening/prefix-summing the
@@ -185,6 +199,8 @@ class FleetAdmissionController:
             if v.kind is AdmissionKind.ACCEPT:
                 self.counters["accepted"] += 1
                 self.counters["accepted_from_queue"] += 1
+                if req.preempted:
+                    self.counters["recovered"] += 1
                 out.append((req, v))
             else:
                 still.append((deadline, req, pp))
@@ -314,6 +330,98 @@ class FleetAdmissionController:
                                 solution=sol)
 
     # ------------------------------------------------------------------ #
+    # revocation / preemption with graceful degradation (PR 6)
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _expendability(sess: FleetSession) -> tuple[float, float]:
+        """Sort key: most expendable FIRST (loosest SLO, then newest).
+
+        Interactive tenants (tight SLO, paying for responsiveness) are
+        preempted last; among equals, the longest-lived session keeps its
+        seat (it has the most amortized reconfiguration investment).
+        """
+        slo = (sess.qos.latency_slo_s if sess.qos is not None
+               else QOS_STANDARD.latency_slo_s)
+        return (-slo, -sess.t_admitted)
+
+    def preempt_overload(
+        self, now: float, *, state=None
+    ) -> list[tuple[FleetSession, AdmissionRequest | None]]:
+        """Revoke sessions until resident weights fit the surviving memory.
+
+        The orchestrator's commit gate can only KEEP an infeasible incumbent
+        when the surviving fleet has no room (Eq. 4 fails on every
+        candidate) — someone has to go, and WHICH one is an admission-policy
+        question, so it is answered here: evict the most expendable session
+        touching an over-committed node, requeue it into the bounded defer
+        queue with ``preempt_patience_s``, repeat until Eq. 4 holds
+        fleet-wide.  If the most expendable on-node session still outranks
+        the fleet-wide most expendable one (e.g. a dead node hosting only
+        interactive tenants while batch sessions occupy the survivors), the
+        fleet-wide one is evicted instead — freeing survivor capacity for
+        next cycle's forced migration — and the pass stops: further
+        evictions this cycle could not make the dead node's residents
+        feasible anyway.
+
+        Returns the evicted ``(session, requeued request | None)`` pairs
+        (request is None when the defer queue was full — a hard drop).
+        """
+        orch = self.orchestrator
+        if state is None:
+            state = orch.profiler.system_state()
+        out: list[tuple[FleetSession, AdmissionRequest | None]] = []
+        while orch.sessions:
+            wb = {
+                sid: session_induced_loads(s, state)[2]
+                for sid, s in orch.sessions.items()
+            }
+            used = np.sum(list(wb.values()), axis=0)
+            over = used - np.asarray(state.mem_bytes, dtype=float)
+            overfull = over > 1.0  # bytes; exact fit is feasible
+            if not overfull.any():
+                break
+            on_over = [
+                sid for sid in orch.sessions if wb[sid][overfull].any()
+            ]
+            if not on_over:
+                break
+            key = lambda sid: self._expendability(orch.sessions[sid])  # noqa: E731
+            victim = min(on_over, key=key)
+            fleet_wide = min(orch.sessions, key=key)
+            if key(fleet_wide) < key(victim):
+                out.append(self._evict(fleet_wide, now))
+                break
+            out.append(self._evict(victim, now))
+        return out
+
+    def _evict(
+        self, sid: int, now: float
+    ) -> tuple[FleetSession, AdmissionRequest | None]:
+        """Depart ``sid`` and requeue it as a preempted admission request."""
+        orch = self.orchestrator
+        sess = orch.depart(sid)
+        self.counters["preempted"] += 1
+        qname = sess.qos.name if sess.qos is not None else "default"
+        self.preempted_by_class[qname] = (
+            self.preempted_by_class.get(qname, 0) + 1
+        )
+        req = AdmissionRequest(
+            graph=sess.graph, workload=sess.workload,
+            source_node=sess.source_node, arch=sess.arch,
+            qos=sess.qos if sess.qos is not None else QOS_STANDARD,
+            input_bytes_per_token=sess.input_bytes_per_token,
+            t_submit=now, preempted=True,
+        )
+        patience = (self.preempt_patience_s
+                    if self.preempt_patience_s is not None
+                    else req.qos.defer_timeout_s)
+        if len(self._queue) < self.queue_cap:
+            self._queue.append((now + patience, req, sess.prepacked))
+            return sess, req
+        self.counters["rejected"] += 1
+        return sess, None
+
+    # ------------------------------------------------------------------ #
     def kpis(self) -> dict[str, float]:
         c = dict(self.counters)
         denom = max(1, c["requests"])
@@ -322,4 +430,6 @@ class FleetAdmissionController:
             "accept_frac": c["accepted"] / denom,
             "reject_frac": (c["rejected"] + c["expired"]) / denom,
             "queued_now": float(len(self._queue)),
+            **{f"preempted_{name}": float(v)
+               for name, v in sorted(self.preempted_by_class.items())},
         }

@@ -19,13 +19,19 @@ __all__ = ["PartitionConfig", "NodeAgent", "InProcessAgent", "ReconfigurationBro
 
 @dataclass(frozen=True)
 class PartitionConfig:
-    """One immutable deployment config: version + split + placement."""
+    """One immutable deployment config: version + split + placement.
+
+    ``session`` scopes the config to one tenant of a multi-session fleet
+    (agents keep one staged/active slot PER session); ``None`` is the
+    single-session/sessionless scope used by the paper's Alg. 1 loop.
+    """
 
     version: int
     boundaries: tuple[int, ...]
     assignment: tuple[int, ...]
     reason: str = ""
     issued_at: float = 0.0
+    session: int | None = None
 
     def segments_for(self, node: int) -> list[tuple[int, int]]:
         return [
@@ -45,34 +51,58 @@ class NodeAgent(Protocol):
 
 @dataclass
 class InProcessAgent:
-    """Reference agent: stages weights for its segments, then swaps atomically."""
+    """Reference agent: stages weights for its segments, then swaps atomically.
+
+    Staged and active configs are keyed by the config's ``session`` scope,
+    so interleaved rollouts for two tenants can never clobber each other's
+    state (a single shared slot used to lose session A's config the moment
+    session B rolled out).  ``active``/``staged`` remain as properties for
+    sessionless callers: the most recently committed/staged config.
+    """
 
     node_id: int
     fail_prepare: bool = False      # fault-injection hooks for tests
     fail_commit: bool = False
-    active: PartitionConfig | None = None
-    staged: PartitionConfig | None = None
+    active_by: dict = field(default_factory=dict)   # session → committed cfg
+    staged_by: dict = field(default_factory=dict)   # session → staged cfg
     history: list[int] = field(default_factory=list)
+
+    @property
+    def active(self) -> PartitionConfig | None:
+        return max(self.active_by.values(), key=lambda c: c.version,
+                   default=None)
+
+    @property
+    def staged(self) -> PartitionConfig | None:
+        return max(self.staged_by.values(), key=lambda c: c.version,
+                   default=None)
+
+    def active_for(self, session: int | None) -> PartitionConfig | None:
+        return self.active_by.get(session)
 
     def prepare(self, cfg: PartitionConfig) -> bool:
         if self.fail_prepare:
             return False
-        self.staged = cfg
+        self.staged_by[cfg.session] = cfg
         return True
 
     def commit(self, version: int) -> bool:
+        """Versions are globally unique, so the protocol signature stays
+        ``commit(version)`` — the agent finds the matching staged scope."""
         if self.fail_commit:
             return False
-        if self.staged is None or self.staged.version != version:
-            return False
-        self.active = self.staged
-        self.staged = None
-        self.history.append(version)
-        return True
+        for scope, cfg in self.staged_by.items():
+            if cfg.version == version:
+                self.active_by[scope] = cfg
+                del self.staged_by[scope]
+                self.history.append(version)
+                return True
+        return False
 
     def abort(self, version: int) -> None:
-        if self.staged is not None and self.staged.version == version:
-            self.staged = None
+        for scope in [s for s, c in self.staged_by.items()
+                      if c.version == version]:
+            del self.staged_by[scope]
 
 
 @dataclass
@@ -91,6 +121,7 @@ class ReconfigurationBroadcast:
         assignment: tuple[int, ...],
         reason: str = "",
         now: float | None = None,
+        session: int | None = None,
     ) -> PartitionConfig | None:
         """Two-phase rollout; returns the committed config or None on abort."""
         cfg = PartitionConfig(
@@ -99,6 +130,7 @@ class ReconfigurationBroadcast:
             assignment=assignment,
             reason=reason,
             issued_at=time.monotonic() if now is None else now,
+            session=session,
         )
         affected = [a for a in self.agents if a.node_id in set(assignment)]
         # phase 1: PREPARE — all affected agents must stage the config
@@ -111,7 +143,11 @@ class ReconfigurationBroadcast:
                     p.abort(cfg.version)
                 self.log.append(("abort", cfg))
                 return None
-        # phase 2: COMMIT — atomically swap; a commit failure rolls others back
+        # phase 2: COMMIT — atomically swap; a commit failure rolls others
+        # back to the PREVIOUS active config for this scope (blanking the
+        # node instead would leave every already-committed agent executing
+        # no config at all — the mid-storm fleet-blackout bug)
+        prior = {a.node_id: a.active_by.get(cfg.session) for a in prepared}
         committed: list[InProcessAgent] = []
         for agent in prepared:
             if agent.commit(cfg.version):
@@ -120,7 +156,12 @@ class ReconfigurationBroadcast:
                 for c in committed:
                     if c.history and c.history[-1] == cfg.version:
                         c.history.pop()
-                    c.active = None  # forces re-sync from the log on recovery
+                    if prior[c.node_id] is None:
+                        c.active_by.pop(cfg.session, None)
+                    else:
+                        c.active_by[cfg.session] = prior[c.node_id]
+                for p in prepared:
+                    p.abort(cfg.version)   # incl. the failed agent's stage
                 self.log.append(("abort", cfg))
                 return None
         self.log.append(("commit", cfg))

@@ -56,6 +56,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from typing import TYPE_CHECKING
+
 from .broadcast import PartitionConfig, ReconfigurationBroadcast
 from .cost_model import (
     CostWeights,
@@ -98,6 +100,12 @@ from .triggers import (
     forecast_reconfigure,
     hysteresis_keep,
 )
+
+if TYPE_CHECKING:
+    # type-only: importing repro.distributed at module load would cycle
+    # (distributed.fault_tolerance -> core.triggers -> core.__init__ ->
+    # admission -> fleet); the field is plain data, never constructed here
+    from ..distributed.fault_tolerance import HeartbeatRegistry
 
 __all__ = ["FleetSession", "FleetDecision", "FleetOrchestrator"]
 
@@ -148,6 +156,14 @@ class FleetDecision:
     # commits raised by the PROACTIVE (forecast) trigger: the session's
     # observed env was inside Θ, its predicted env within the horizon wasn't
     n_preempt: int = 0
+    # failure-storm cycle outputs (PR 6): sessions forced into the solve set
+    # by the node-fail trigger class, the dead set they fled, and the sids
+    # the surviving fleet could NOT host this cycle (Eq. 4 infeasible after
+    # migrate + batched repair) — the admission controller's revocation
+    # path preempts from this set
+    n_node_fail: int = 0
+    dead_nodes: tuple[int, ...] = ()
+    infeasible_sids: tuple[int, ...] = ()
 
 
 def session_induced_loads(
@@ -209,6 +225,13 @@ class FleetOrchestrator:
     # cycle raises proactive triggers off the forecast env, and admission
     # prices arrivals against the worst-case capacity within the horizon.
     forecaster: CapacityForecaster | None = None
+    # liveness feed (PR 6): None → no failure detection.  When set, every
+    # monitoring cycle advances the registry one interval; sessions whose
+    # config touches a newly-declared-dead node enter the solve set through
+    # the `node-fail` trigger class, which bypasses cooldown, the solver
+    # throttle, AND the commit hysteresis — a storm is just a large
+    # triggered set riding the existing fused migrate/re-split dispatches
+    heartbeats: HeartbeatRegistry | None = None
 
     sessions: dict[int, FleetSession] = field(default_factory=dict)
     decisions: list[FleetDecision] = field(default_factory=list)
@@ -513,7 +536,7 @@ class FleetOrchestrator:
         cfg = self.broadcast.rollout(
             sol.boundaries, sol.assignment,
             reason=f"admit session {sid}" + (f" ({arch})" if arch else ""),
-            now=now,
+            now=now, session=sid,
         )
         if cfg is None:
             raise RuntimeError(f"admission rollout failed for session {sid}")
@@ -658,11 +681,30 @@ class FleetOrchestrator:
         """
         t0 = time.perf_counter()
         state = self.profiler.system_state()
+        # liveness first: the node-fail trigger class is computed from the
+        # heartbeat registry, not from C(t) — a node whose capacity traces
+        # merely degrade is handled by the ordinary util/bw triggers
+        dead_set: set[int] = set()
+        storm: set[int] = set()
+        if self.heartbeats is not None:
+            self.heartbeats.tick()
+            # revived nodes need no special handling: their restored
+            # capacity re-enters through the profiler's C(t) and the next
+            # trigger evaluation sees it — drain so each is reported once
+            self.heartbeats.drain_revived()
+            dead_set = set(self.heartbeats.dead())
+            if dead_set:
+                storm = {
+                    sid for sid, s in self.sessions.items()
+                    if s.config is not None
+                    and any(n in dead_set for n in s.config.assignment)
+                }
         sids = list(self.sessions)
         per_session: dict[int, Decision] = {}
         if not sids:
             fd = FleetDecision(t=now, per_session={}, solver_time_s=0.0,
-                               n_keep=0, n_migrate=0, n_resplit=0, n_cooldown=0)
+                               n_keep=0, n_migrate=0, n_resplit=0,
+                               n_cooldown=0, dead_nodes=tuple(sorted(dead_set)))
             self.decisions.append(fd)
             return fd
 
@@ -707,6 +749,14 @@ class FleetOrchestrator:
                 min_link_bw_bps=float(bw_h[i]),
             )
             th = self._session_thresholds(sess)
+            if sid in storm:
+                # node-fail trigger class: the session's chain crosses a
+                # dead node, so its EWMA/cooldown/throttle state — all
+                # measured on hardware that no longer exists — is void.
+                # Enter the solve set unconditionally.
+                triggered.append(sid)
+                reasons_by_sid[sid] = tuple(env.reasons) + ("node-fail",)
+                continue
             gate = decision_gate(
                 env, th, now=now, t_last_reconfig=sess.t_last_reconfig,
                 throttle=sess.throttle,
@@ -742,6 +792,7 @@ class FleetOrchestrator:
             )
 
         resplit_rows: list[tuple[int, Solution, float]] = []  # (sid, mig, lat)
+        infeasible: list[int] = []          # storm-cycle Eq. 4 rejects
         dirty = False                       # any commit this cycle?
         table = None
         if triggered:
@@ -807,6 +858,8 @@ class FleetOrchestrator:
                         DecisionKind.KEEP, sess.config, reasons_by_sid[sid],
                         c_lat, 0.0,
                     )
+                    if dead_set:
+                        infeasible.append(sid)
                     continue
                 # capture the OLD config's loads before _commit overwrites
                 # it: _refresh_loads subtracts this entry from the shared
@@ -814,7 +867,8 @@ class FleetOrchestrator:
                 if sid not in table[0]:
                     table[0][sid] = session_induced_loads(sess, state)
                 if self._commit(sid, mig, m_lat, c_lat, DecisionKind.MIGRATE,
-                                reasons_by_sid[sid], per_session, now):
+                                reasons_by_sid[sid], per_session, now,
+                                force=sid in storm):
                     self._refresh_loads(table, sid, state)
                     dirty = True
 
@@ -914,17 +968,32 @@ class FleetOrchestrator:
                         DecisionKind.KEEP, sess.config, reasons_by_sid[sid],
                         c_lat, 0.0,
                     )
+                    if dead_set:
+                        infeasible.append(sid)
                     continue
                 # old-config loads must be in the table before the commit
                 # replaces the config (see the migrate branch above)
                 if sid not in table[0]:
                     table[0][sid] = session_induced_loads(sess, state)
                 if self._commit(sid, chosen, chosen_lat, c_lat, kind,
-                                reasons_by_sid[sid], per_session, now):
+                                reasons_by_sid[sid], per_session, now,
+                                force=sid in storm):
                     self._refresh_loads(table, sid, state)
                     dirty = True
 
         solver_time = time.perf_counter() - t0
+        if dead_set:
+            # a storm session whose forced solve still left it on a dead
+            # node (the DP found no escape) is infeasible even though its
+            # decision reads KEEP-of-identical-config
+            stuck = {
+                sid for sid in storm
+                if sid in self.sessions and any(
+                    n in dead_set
+                    for n in self.sessions[sid].config.assignment
+                )
+            }
+            infeasible = sorted(set(infeasible) | stuck)
         kinds = [d.kind for d in per_session.values()]
         fd = FleetDecision(
             t=now,
@@ -941,6 +1010,9 @@ class FleetOrchestrator:
                 if sid in proactive
                 and d.kind in (DecisionKind.MIGRATE, DecisionKind.RESPLIT)
             ),
+            n_node_fail=len(storm),
+            dead_nodes=tuple(sorted(dead_set)),
+            infeasible_sids=tuple(infeasible),
         )
         self.decisions.append(fd)
         for sid, d in per_session.items():
@@ -958,6 +1030,7 @@ class FleetOrchestrator:
         reasons: tuple[str, ...],
         per_session: dict[int, Decision],
         now: float,
+        force: bool = False,
     ) -> bool:
         """Hysteresis + two-phase rollout; KEEP on no-gain or abort.
 
@@ -972,18 +1045,26 @@ class FleetOrchestrator:
         the rest of its lifetime.  Crossing back under the SLO is material
         by definition, so that case bypasses the improvement threshold
         (identical configs still KEEP).
+
+        ``force`` (the node-fail trigger class) skips the improvement
+        threshold entirely: any DIFFERENT config beats one touching a dead
+        node, whatever its price — both latencies were measured on a
+        topology that no longer exists.  A committed forced move also
+        resets the session's latency EWMA for the same reason.
         """
         sess = self.sessions[sid]
+        same = ((chosen.boundaries, chosen.assignment)
+                == (sess.config.boundaries, sess.config.assignment))
         keep = hysteresis_keep(
             (sess.config.boundaries, sess.config.assignment),
             (chosen.boundaries, chosen.assignment),
             chosen_lat, cur_lat, self.min_improvement_frac,
         )
-        if keep:
+        if force:
+            keep = same
+        elif keep:
             slo = self._session_thresholds(sess).latency_max_s
-            if ((chosen.boundaries, chosen.assignment)
-                    != (sess.config.boundaries, sess.config.assignment)
-                    and cur_lat > slo >= chosen_lat):
+            if not same and cur_lat > slo >= chosen_lat:
                 keep = False
         if keep:
             per_session[sid] = Decision(
@@ -993,6 +1074,7 @@ class FleetOrchestrator:
         cfg = self.broadcast.rollout(
             chosen.boundaries, chosen.assignment,
             reason=f"session {sid}: " + "; ".join(reasons), now=now,
+            session=sid,
         )
         if cfg is None:  # rollout aborted — keep serving the old config
             per_session[sid] = Decision(
@@ -1001,6 +1083,8 @@ class FleetOrchestrator:
             return False
         sess.config = cfg
         sess.t_last_reconfig = now
+        if force:
+            sess.ewma_latency = EWMA(sess.ewma_latency.alpha)
         per_session[sid] = Decision(kind, cfg, reasons, chosen_lat, 0.0)
         self._upsert_row(sess)
         return True

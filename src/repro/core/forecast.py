@@ -285,6 +285,65 @@ class CapacityForecaster:
             self._pending_steps = 0
             self._pending_credit = 0
 
+    # -- persistence across restarts (PR 6) ----------------------------- #
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Host-side snapshot of the seasonal state (empty pre-``ensure``).
+
+        A restart mid-storm used to reset ``count`` to zero, disabling
+        proactive triggers for a full season exactly when capacity is most
+        volatile; persisting the ring closes that blind window.
+        """
+        if self.util_ring is None:
+            return {}
+        return {
+            "util_ring": np.asarray(self.util_ring, dtype=np.float64),
+            "bw_ring": np.asarray(self.bw_ring, dtype=np.float64),
+            "resid_util": np.asarray(self.resid_util, dtype=np.float64),
+            "resid_bw": np.asarray(self.resid_bw, dtype=np.float64),
+            "idx": np.asarray(self.idx, dtype=np.int64),
+            "count": np.asarray(self.count, dtype=np.int64),
+            "last_t": np.asarray(self._last_t, dtype=np.float64),
+            "season_steps": np.asarray(self.cfg.season_steps, dtype=np.int64),
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        """Seed the rings from a snapshot; ``ready`` carries over.
+
+        The season length is structural (slot p means "time ≡ p mod S"), so
+        a mismatched snapshot is an error, not a silent re-warm-up.
+        """
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        if not d:
+            return
+        S = int(np.asarray(d["season_steps"]))
+        if S != self.cfg.season_steps:
+            raise ValueError(
+                f"snapshot season_steps={S} != configured "
+                f"{self.cfg.season_steps}")
+        with enable_x64(True):
+            self.util_ring = jnp.asarray(d["util_ring"])
+            self.bw_ring = jnp.asarray(d["bw_ring"])
+            self.resid_util = jnp.asarray(d["resid_util"])
+            self.resid_bw = jnp.asarray(d["resid_bw"])
+        self.idx = int(np.asarray(d["idx"]))
+        self.count = int(np.asarray(d["count"]))
+        self._last_t = float(np.asarray(d["last_t"]))
+
+    def save(self, path) -> None:
+        """Persist the seasonal state to an ``.npz`` file (no-op pre-warm)."""
+        sd = self.state_dict()
+        if sd:
+            np.savez(path, **sd)
+
+    def load(self, path) -> bool:
+        """Seed from :meth:`save` output; returns whether state was loaded."""
+        with np.load(path) as z:
+            d = {k: z[k] for k in z.files}
+        self.load_state_dict(d)
+        return bool(d)
+
     # -- standalone driver (no resident kernel) ------------------------- #
     def observe(self, now: float, bg_util: np.ndarray,
                 link_bw: np.ndarray | None = None) -> bool:

@@ -20,17 +20,35 @@ __all__ = ["HeartbeatRegistry", "StragglerDetector", "plan_elastic_mesh"]
 
 @dataclass
 class HeartbeatRegistry:
-    """Tracks liveness; a node missing ``miss_limit`` beats is declared dead."""
+    """Tracks liveness; a node missing ``miss_limit`` beats is declared dead.
+
+    Death is not terminal: a beat from a dead node revives it immediately
+    (MTTR-recovered hardware re-announces itself), and the revival is
+    queued for :meth:`drain_revived` so the orchestrator can fold the
+    returning capacity back in.  Before this, ``beat()`` ignored dead
+    nodes forever and a failure storm permanently shrank the fleet.
+    """
 
     nodes: list[int]
     miss_limit: int = 3
     _last_beat: dict[int, int] = field(default_factory=dict)
     _dead: set = field(default_factory=set)
+    _revived: list[int] = field(default_factory=list)
     _tick: int = 0
 
     def beat(self, node: int) -> None:
-        if node not in self._dead:
+        if node in self._dead:
+            self.rejoin(node)
+        else:
             self._last_beat[node] = self._tick
+
+    def rejoin(self, node: int) -> None:
+        """Explicitly re-admit a node (idempotent; also what a beat from a
+        dead node does)."""
+        self._dead.discard(node)
+        if node not in self._revived:
+            self._revived.append(node)
+        self._last_beat[node] = self._tick
 
     def tick(self) -> list[int]:
         """Advance one interval; returns NEWLY-dead nodes."""
@@ -46,6 +64,14 @@ class HeartbeatRegistry:
 
     def alive(self) -> list[int]:
         return [n for n in self.nodes if n not in self._dead]
+
+    def dead(self) -> list[int]:
+        return [n for n in self.nodes if n in self._dead]
+
+    def drain_revived(self) -> list[int]:
+        """Nodes that came back since the last drain (each reported once)."""
+        out, self._revived = self._revived, []
+        return out
 
 
 @dataclass

@@ -1,5 +1,6 @@
 """5G-MEC edge-environment simulator (paper §IV scenario + fleet mode)."""
 
+from .failures import FailureInjector, FailureSpec
 from .scenario import (
     FleetScenarioParams,
     MECScenarioParams,
@@ -25,7 +26,8 @@ from .simulator import (
 from .traces import Trace, constant, ou_process, square_wave
 
 __all__ = [
-    "EdgeSimulator", "FleetScenarioParams", "FleetSimConfig", "FleetSimResult",
+    "EdgeSimulator", "FailureInjector", "FailureSpec", "FleetScenarioParams",
+    "FleetSimConfig", "FleetSimResult",
     "FleetSimulator", "FleetTickMetrics", "MECScenarioParams", "SimConfig",
     "SimResult", "TickMetrics", "Trace", "base_system_state",
     "build_fleet_scenario", "build_mec_scenario", "constant",

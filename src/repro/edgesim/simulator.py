@@ -42,11 +42,13 @@ from ..core.cost_model import (
     node_loads,
     node_queue_loads,
 )
-from ..core.fleet import FleetOrchestrator
+from ..core.fleet import FleetOrchestrator, session_induced_loads
 from ..core.graph import ModelGraph
 from ..core.orchestrator import AdaptiveOrchestrator, DecisionKind
 from ..core.profiling import CapacityProfiler, NodeSample
 from ..core.triggers import QOS_CLASSES, QoSClass
+from ..distributed.fault_tolerance import HeartbeatRegistry
+from .failures import FailureInjector, FailureSpec
 from .traces import Trace
 
 __all__ = [
@@ -256,6 +258,18 @@ class FleetSimConfig:
     forecast_horizon_steps: int = 12
     forecast_season_steps: int = 40
     forecast_residual_alpha: float = 0.2
+    # failure injection (PR 6): a FailureSpec drives node death and link
+    # flaps through the SAME C(t) channel as the load traces.  None injects
+    # nothing and leaves the fleet path bit-identical to the pre-failure
+    # simulator (test-enforced).  ``failure_handling=False`` keeps the
+    # injector but disconnects the control-plane response — no heartbeat
+    # registry, no node-fail triggers, no preemption — the seed-paired OFF
+    # arm of the storm A/B (both arms see the identical failure timeline).
+    failures: FailureSpec | None = None
+    failure_handling: bool = True
+    # how long a preempted session waits in the defer queue for capacity to
+    # return (None → its QoS class's admission defer patience)
+    preempt_patience_s: float | None = None
 
 
 @dataclass
@@ -273,6 +287,11 @@ class FleetTickMetrics:
     solver_time_s: float = 0.0
     deferred: int = 0              # parked in the admission queue this tick
     n_preempt: int = 0             # forecast-triggered (proactive) commits
+    # failure-storm telemetry (PR 6); all zero when no injector is wired
+    n_dead_nodes: int = 0          # injector-dead nodes at this tick
+    mem_violation_bytes: float = 0.0   # resident weights over node memory
+    preempted: int = 0             # sessions revoked by admission this tick
+    recovered: int = 0             # preempted sessions re-admitted this tick
 
     @property
     def mean_latency_s(self) -> float:
@@ -325,7 +344,34 @@ class FleetSimResult:
             # forecast KPIs (PR 5)
             "slo_breach_minutes": breach_s / 60.0,
             "preemptive_migrations": float(sum(m.n_preempt for m in w)),
+            # failure-storm KPIs (PR 6): wall-clock with Eq. 4 violated
+            # anywhere, and the revocation/recovery balance
+            "mem_violation_minutes": sum(
+                tick_s for m in w if m.mem_violation_bytes > 0
+            ) / 60.0,
+            "sessions_preempted": float(sum(m.preempted for m in w)),
+            "sessions_recovered": float(sum(m.recovered for m in w)),
         }
+
+    def recovery_time_s(self, t_fail: float) -> float | None:
+        """Seconds from ``t_fail`` until Eq. 4 holds fleet-wide for the rest
+        of the run (zero resident-weight overflow on every node).
+
+        0.0 when the failure never produced a violation; None when the
+        fleet was still violating at the final tick (no recovery within the
+        run) — the storm benchmark gates on this being small for the
+        handling-ON arm.
+        """
+        after = [m for m in self.ticks if m.t >= t_fail]
+        if not after:
+            return 0.0
+        bad = [m.t for m in after if m.mem_violation_bytes > 0]
+        if not bad:
+            return 0.0
+        if bad[-1] >= after[-1].t:
+            return None
+        clean_from = next(m.t for m in after if m.t > bad[-1])
+        return clean_from - t_fail
 
     def onset_max_rho(self, onsets, *, width_s: float = 3.0,
                       t0: float = 0.0, t1: float = float("inf")) -> float:
@@ -393,6 +439,22 @@ class FleetSimulator:
                 queue_cap=config.admission_queue_cap,
             )
         self.admission = admission
+        # failure injection + the control-plane response (PR 6)
+        self._injector: FailureInjector | None = None
+        self._hb: HeartbeatRegistry | None = None
+        if config.failures is not None:
+            self._injector = FailureInjector(
+                config.failures, num_nodes=base_state.num_nodes,
+                horizon_s=config.duration_s,
+            )
+            if config.failure_handling:
+                self._hb = HeartbeatRegistry(
+                    nodes=list(range(base_state.num_nodes)),
+                    miss_limit=config.failures.heartbeat_miss_limit,
+                )
+                orchestrator.heartbeats = self._hb
+        if self.admission is not None and config.preempt_patience_s is not None:
+            self.admission.preempt_patience_s = config.preempt_patience_s
         mix = config.qos_mix
         self._qos_classes = tuple(QOS_CLASSES[name] for name, _ in mix)
         w = np.array([float(p) for _, p in mix])
@@ -432,7 +494,12 @@ class FleetSimulator:
         log: list[tuple[float, str, int, str]] = []
         departures: list[tuple[float, int]] = []   # heap of (t_depart, sid)
         pending_life: dict[int, float] = {}        # id(queued req) → lifetime
+        depart_at: dict[int, float] = {}           # sid → scheduled departure
         next_monitor = 0.0
+        inj = self._injector
+
+        def _overlay(state: SystemState, t: float) -> SystemState:
+            return state if inj is None else inj.apply(state, t)
 
         def _admit(t: float) -> str:
             """One arrival through admission control; returns the outcome."""
@@ -444,6 +511,7 @@ class FleetSimulator:
                 sid = orch.admit(graph, wl, source_node=src, arch=arch,
                                  now=t, qos=qos)
                 heapq.heappush(departures, (t + life, sid))
+                depart_at[sid] = t + life
                 log.append((t, "admit", sid, arch))
                 return "admit"
             req = AdmissionRequest(graph, wl, source_node=src, arch=arch,
@@ -451,6 +519,7 @@ class FleetSimulator:
             v = ctrl.request(req, now=t)
             if v.kind is AdmissionKind.ACCEPT:
                 heapq.heappush(departures, (t + life, v.sid))
+                depart_at[v.sid] = t + life
                 log.append((t, "admit", v.sid, arch))
                 return "admit"
             if v.kind is AdmissionKind.DEFER:
@@ -463,25 +532,33 @@ class FleetSimulator:
         # admissions plan against C(0) WITH traces applied (at t=0 the home
         # MEC may already be in a saturation spike), not the construction-
         # time base state
-        orch.profiler.base_state = apply_traces(
-            self.base_state, self.util_traces, self.bw_traces, 0.0)
+        orch.profiler.base_state = _overlay(apply_traces(
+            self.base_state, self.util_traces, self.bw_traces, 0.0), 0.0)
         for _ in range(cfg.initial_sessions):
             _admit(0.0)
 
         t = 0.0
         while t < cfg.duration_s:
-            state = apply_traces(self.base_state, self.util_traces,
-                                 self.bw_traces, t)
+            state = _overlay(apply_traces(self.base_state, self.util_traces,
+                                          self.bw_traces, t), t)
             orch.profiler.base_state = state
+            if self._hb is not None:
+                # alive nodes announce themselves every tick; a dead node's
+                # silence accumulates into a miss-limit declaration at the
+                # monitoring cadence (HeartbeatRegistry.tick runs in step()),
+                # and the first beat after repair revives it
+                for node in inj.alive_nodes(t):
+                    self._hb.beat(node)
 
             departed = 0
             while departures and departures[0][0] <= t:
                 _, sid = heapq.heappop(departures)
                 if sid in orch.sessions:
                     sess = orch.depart(sid)
+                    depart_at.pop(sid, None)
                     log.append((t, "depart", sid, sess.arch))
                     departed += 1
-            admitted = rejected = deferred = 0
+            admitted = rejected = deferred = recovered = 0
             # retry the defer queue first — departures may have freed capacity
             if ctrl is not None:
                 for req, v in ctrl.poll(t):
@@ -490,7 +567,12 @@ class FleetSimulator:
                     )
                     if v.kind is AdmissionKind.ACCEPT:
                         heapq.heappush(departures, (t + life, v.sid))
-                        log.append((t, "admit", v.sid, req.arch))
+                        depart_at[v.sid] = t + life
+                        if req.preempted:
+                            recovered += 1
+                            log.append((t, "recover", v.sid, req.arch))
+                        else:
+                            log.append((t, "admit", v.sid, req.arch))
                         admitted += 1
                     else:  # defer timeout → final reject
                         log.append((t, "expire", -1, req.arch))
@@ -530,7 +612,7 @@ class FleetSimulator:
             if lat_arr.size:
                 orch.profiler.observe_latency(float(lat_arr.mean()))
 
-            n_mig = n_rs = n_pre = 0
+            n_mig = n_rs = n_pre = n_preempted = 0
             solver_t = 0.0
             if orch.sessions and t >= next_monitor:
                 fd = orch.step(now=t)
@@ -538,6 +620,28 @@ class FleetSimulator:
                 n_mig, n_rs = fd.n_migrate, fd.n_resplit
                 n_pre = fd.n_preempt
                 solver_t = fd.solver_time_s
+                if (self._hb is not None and ctrl is not None
+                        and fd.infeasible_sids):
+                    # the orchestrator TRIED (forced migrate + batched
+                    # repair) and the surviving fleet still cannot host
+                    # these sessions — revoke the most expendable until
+                    # Eq. 4 holds; each rides the defer queue back in when
+                    # capacity returns, keeping its remaining lifetime
+                    for sess, req in ctrl.preempt_overload(t, state=state):
+                        n_preempted += 1
+                        remaining = depart_at.pop(sess.sid, t) - t
+                        log.append((t, "preempt", sess.sid, sess.arch))
+                        if req is not None and remaining > 0:
+                            pending_life[id(req)] = remaining
+
+            mem_over = 0.0
+            if inj is not None and orch.sessions:
+                used = np.zeros(state.num_nodes)
+                for s in orch.sessions.values():
+                    used += session_induced_loads(s, state)[2]
+                mem_over = float(
+                    np.maximum(0.0, used - state.mem_bytes).sum()
+                )
 
             ticks.append(FleetTickMetrics(
                 t=t,
@@ -550,6 +654,9 @@ class FleetSimulator:
                 admitted=admitted, departed=departed, rejected=rejected,
                 n_migrate=n_mig, n_resplit=n_rs, solver_time_s=solver_t,
                 deferred=deferred, n_preempt=n_pre,
+                n_dead_nodes=len(inj.dead_nodes(t)) if inj is not None else 0,
+                mem_violation_bytes=mem_over,
+                preempted=n_preempted, recovered=recovered,
             ))
             t = round(t + cfg.tick_s, 9)
         return FleetSimResult(ticks, log)

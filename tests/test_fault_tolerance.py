@@ -80,3 +80,148 @@ def test_train_kill_restart_subprocess(tmp_path):
                         capture_output=True, text=True, timeout=600)
     assert r2.returncode == 0, r2.stderr[-2000:]
     assert "[resume] from step 8" in r2.stdout
+
+
+# --------------------------------------------------------------------------- #
+# PR 6: revive path, deterministic failure injection, storm recovery
+# --------------------------------------------------------------------------- #
+def test_heartbeat_revive_on_beat():
+    """A beat from a dead node revives it (MTTR-recovered hardware
+    re-announces itself).  Before PR 6 the registry ignored dead nodes
+    forever, so a storm permanently shrank the fleet."""
+    hb = HeartbeatRegistry(nodes=[0, 1, 2], miss_limit=2)
+    for _ in range(3):               # node 2 never beats -> declared dead
+        hb.beat(0)
+        hb.beat(1)
+        hb.tick()
+    assert hb.dead() == [2]
+    hb.beat(2)                       # repaired node re-announces itself
+    assert hb.dead() == []
+    assert hb.alive() == [0, 1, 2]
+    assert hb.drain_revived() == [2]
+    assert hb.drain_revived() == []  # each revival reported exactly once
+    # the revived node's beat also reset its miss counter
+    hb.beat(0), hb.beat(1), hb.beat(2)
+    assert hb.tick() == []
+
+
+def test_heartbeat_explicit_rejoin_idempotent():
+    hb = HeartbeatRegistry(nodes=[0, 1], miss_limit=2)
+    hb.beat(0)
+    assert hb.tick() == []
+    hb.beat(0)
+    assert hb.tick() == [1]
+    hb.rejoin(1)
+    hb.rejoin(1)
+    assert hb.dead() == []
+    assert hb.drain_revived() == [1]
+
+
+def test_failure_injector_deterministic_and_pure():
+    """The timeline is a pure function of (spec, horizon): two injectors
+    with the same spec agree exactly (seed-paired A/B arms share one
+    failure history), and apply() never mutates its input state."""
+    from repro.edgesim import FailureInjector, FailureSpec
+    from repro.edgesim.scenario import MECScenarioParams, base_system_state
+
+    spec = FailureSpec(seed=5, mtbf_s=30.0, mttr_s=8.0,
+                       blast_at_s=20.0, blast_nodes=(1, 2), blast_mttr_s=10.0,
+                       flap_links=((0, 3),), flap_rate_per_s=0.05)
+    a = FailureInjector(spec, num_nodes=4, horizon_s=120.0)
+    b = FailureInjector(spec, num_nodes=4, horizon_s=120.0)
+    assert a._down == b._down and a._flaps == b._flaps
+    assert set(a.dead_nodes(21.0)) >= {1, 2}       # blast window
+    assert not {1, 2} & set(a.dead_nodes(30.5))    # blast revives together
+    st = base_system_state(MECScenarioParams())
+    mem0 = st.mem_bytes.copy()
+    out = a.apply(st, 21.0)
+    assert (st.mem_bytes == mem0).all()            # input untouched
+    assert out.mem_bytes[1] == 0.0 and out.mem_bytes[2] == 0.0
+    assert out.background_util[1] >= 0.98
+    assert out.link_bw[0, 1] <= 1.0
+    # empty spec injects nothing and returns the state object unchanged
+    empty = FailureInjector(FailureSpec(seed=0), num_nodes=4, horizon_s=120.0)
+    assert not empty.any_failures
+    assert empty.apply(st, 21.0) is st
+
+
+def test_injector_off_arm_is_bit_identical():
+    """An EMPTY FailureSpec (injector + heartbeats wired, nothing injected)
+    must leave the fleet path bit-identical to failures=None — the
+    acceptance criterion that the whole PR-6 plumbing is pay-for-use."""
+    import numpy as np
+
+    from repro.edgesim import (FailureSpec, FleetScenarioParams,
+                               FleetSimConfig, build_fleet_scenario)
+
+    base = dict(duration_s=24.0, tick_s=0.5, monitor_interval_s=2.0,
+                max_sessions=8, initial_sessions=4,
+                session_arrival_per_s=0.3, mean_lifetime_s=40.0, seed=7)
+    plain = build_fleet_scenario(
+        FleetScenarioParams(sim=FleetSimConfig(**base))).run()
+    wired = build_fleet_scenario(FleetScenarioParams(sim=FleetSimConfig(
+        **base, failures=FailureSpec(seed=9), failure_handling=True))).run()
+    assert plain.session_log == wired.session_log
+    for a, b in zip(plain.ticks, wired.ticks):
+        assert np.array_equal(a.latencies, b.latencies)
+        assert np.array_equal(a.node_rho, b.node_rho)
+        assert (a.n_migrate, a.n_resplit) == (b.n_migrate, b.n_resplit)
+        assert b.n_dead_nodes == 0 and b.preempted == 0
+
+
+def test_storm_determinism():
+    """Same storm config twice -> identical session log (preemption and
+    recovery included): the injector pre-draws its timeline from its own
+    rng and never perturbs the simulator's stream."""
+    from repro.edgesim import (FailureSpec, FleetScenarioParams,
+                               FleetSimConfig, build_fleet_scenario)
+
+    cfg = FleetSimConfig(
+        duration_s=30.0, tick_s=0.5, monitor_interval_s=2.0,
+        max_sessions=8, initial_sessions=4, session_arrival_per_s=0.3,
+        mean_lifetime_s=40.0, seed=7,
+        failures=FailureSpec(seed=3, blast_at_s=8.0, blast_nodes=(1, 2),
+                             blast_mttr_s=14.0),
+        preempt_patience_s=20.0)
+    r1 = build_fleet_scenario(FleetScenarioParams(sim=cfg)).run()
+    r2 = build_fleet_scenario(FleetScenarioParams(sim=cfg)).run()
+    assert r1.session_log == r2.session_log
+    assert [m.mem_violation_bytes for m in r1.ticks] == \
+           [m.mem_violation_bytes for m in r2.ticks]
+
+
+@pytest.mark.slow
+def test_storm_recovery_preempts_lowest_qos_first():
+    """Correlated 2-node blast on the saturated cap-32 fleet: with failure
+    handling ON the fleet recovers to zero memory violations within a
+    bounded window (heartbeat detection + forced re-placement + revocation)
+    and every revoked session comes from the loosest-SLO tiers — tier-0
+    (interactive) is never preempted."""
+    from repro.edgesim import (FailureSpec, FleetScenarioParams,
+                               FleetSimConfig, build_fleet_scenario)
+
+    blast_at, cap = 15.0, 32
+    p = FleetScenarioParams(sim=FleetSimConfig(
+        duration_s=45.0, tick_s=0.5, monitor_interval_s=1.0,
+        max_sessions=cap, initial_sessions=cap // 2,
+        session_arrival_per_s=max(0.2, cap / 60 * 2),
+        mean_lifetime_s=30.0, seed=11,
+        failures=FailureSpec(seed=5, blast_at_s=blast_at,
+                             blast_nodes=(1, 2), blast_mttr_s=25.0),
+        failure_handling=True, preempt_patience_s=30.0))
+    sim = build_fleet_scenario(p)
+    res = sim.run()
+    # the blast actually produced Eq. 4 violations, and they cleared well
+    # before the nodes revived (detection is miss_limit=3 monitoring
+    # cycles; allow a few more for the forced re-placement + revocation)
+    assert any(m.mem_violation_bytes > 0 for m in res.ticks)
+    rec = res.recovery_time_s(blast_at)
+    assert rec is not None and rec <= 12.0, rec
+    k = res.kpis(0.0, 45.0)
+    assert k["sessions_preempted"] >= 1
+    assert "interactive" not in sim.admission.preempted_by_class
+    # node-fail trigger class actually fired (forced solve set)
+    assert any(d.n_node_fail > 0 for d in sim.orch.decisions)
+    # graceful degradation closes the loop: preempted sessions re-admit
+    # once capacity returns
+    assert k["sessions_recovered"] >= 1

@@ -276,3 +276,69 @@ def test_fleet_catalog_moe_priced_on_active_params():
     g = dict(fleet_model_catalog())["qwen3-moe-30b-a3b"]
     blocks = [u for u in g.nodes if u.name.startswith("block_")]
     assert blocks and all(u.flops < 0.5 * u.weight_bytes for u in blocks)
+
+
+# --------------------------------------------------------------------------- #
+# PR 6: broadcast rollback + multi-tenant keying regressions
+# --------------------------------------------------------------------------- #
+def test_broadcast_rollback_preserves_previous_active():
+    """A commit-phase failure must revert already-committed agents to their
+    PREVIOUS active config, not blank them: during a failure storm a
+    node-crash mid-rollout used to leave every other node executing no
+    config at all."""
+    agents = [InProcessAgent(0), InProcessAgent(1)]
+    rb = ReconfigurationBroadcast(agents)
+    good = rb.rollout((0, 2, 4), (0, 1), session=7)
+    assert good is not None
+    agents[1].fail_commit = True
+    bad = rb.rollout((0, 1, 4), (1, 0), session=7)
+    assert bad is None
+    # agent 0 committed the doomed config and was rolled back: it must be
+    # serving the prior good config again, with clean history and stage
+    assert agents[0].active_for(7) == good
+    assert agents[0].staged is None and agents[1].staged is None
+    assert agents[0].history == [good.version]
+    assert rb.active_version == good.version
+    # a fresh scope (no prior active) rolls back to literally nothing
+    agents[1].fail_commit = False
+    agents[0].fail_commit = True
+    none_before = rb.rollout((0, 2, 4), (1, 0), session=8)
+    assert none_before is None
+    assert agents[1].active_for(8) is None
+
+
+def test_broadcast_multi_tenant_sessions_isolated():
+    """Interleaved rollouts for two sessions must not clobber each other's
+    staged/active state (single shared slot was the carried ROADMAP bug)."""
+    agents = [InProcessAgent(0), InProcessAgent(1)]
+    rb = ReconfigurationBroadcast(agents)
+    a = rb.rollout((0, 2, 4), (0, 1), session=1)
+    b = rb.rollout((0, 1, 4), (0, 1), session=2)
+    assert a is not None and b is not None
+    # both tenants' configs are simultaneously active on the shared agents
+    assert agents[0].active_for(1) == a
+    assert agents[0].active_for(2) == b
+    # re-rolling tenant 2 leaves tenant 1 untouched
+    c = rb.rollout((0, 3, 4), (1, 0), session=2)
+    assert agents[0].active_for(2) == c
+    assert agents[0].active_for(1) == a
+    # sessionless (scope None) rollouts keep working for the Alg. 1 loop
+    d = rb.rollout((0, 2, 4), (0, 1))
+    assert agents[0].active_for(None) == d
+    assert agents[0].active == d     # back-compat: newest committed config
+
+
+def test_fleet_rollouts_are_session_scoped():
+    """FleetOrchestrator stamps every rollout with its sid, so one shared
+    agent set serves the whole fleet without cross-tenant clobbering."""
+    orch, state = _small_fleet(seed=4)
+    g = ModelGraph("m", [GraphNode(f"u{i}", 1e9, 2e8, 8e3) for i in range(6)])
+    s1 = orch.admit(g, Workload(16, 4, 0.3), source_node=0, now=0.0)
+    s2 = orch.admit(g, Workload(16, 4, 0.3), source_node=1, now=0.0)
+    cfg1 = orch.sessions[s1].config
+    agent = next(a for a in orch.broadcast.agents
+                 if a.node_id in set(cfg1.assignment))
+    assert agent.active_for(s1) == cfg1
+    assert agent.active_for(s1).session == s1
+    assert cfg1.session == s1
+    assert orch.sessions[s2].config.session == s2

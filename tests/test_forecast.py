@@ -338,3 +338,54 @@ def test_horizon_zero_is_bit_identical_to_reactive():
                 b.deferred, b.n_migrate, b.n_resplit, b.n_preempt)
         assert np.array_equal(a.latencies, b.latencies)
         assert np.array_equal(a.node_rho, b.node_rho)
+
+
+# --------------------------------------------------------------------------- #
+# PR 6: seasonal-ring persistence across restarts
+# --------------------------------------------------------------------------- #
+def test_forecaster_persistence_round_trip(tmp_path):
+    """save() -> load() restores the seasonal state exactly: the restarted
+    forecaster is `ready` immediately (no blind first season — the storm
+    window a restart used to reopen) and predicts identically."""
+    cfg = ForecastConfig(horizon_steps=4, season_steps=8,
+                         sample_interval_s=1.0)
+    fc = CapacityForecaster(cfg)
+    t = 0
+    while t < 2 * cfg.season_steps:
+        fc.observe(float(t), _square(t))
+        t += 1
+    assert fc.ready
+    path = tmp_path / "forecast.npz"
+    fc.save(path)
+
+    fresh = CapacityForecaster(cfg)
+    assert not fresh.ready
+    assert fresh.load(path)
+    assert fresh.ready                       # no warm-up after restart
+    assert fresh.idx == fc.idx and fresh.count == fc.count
+    np.testing.assert_array_equal(np.asarray(fresh.util_ring),
+                                  np.asarray(fc.util_ring))
+    np.testing.assert_array_equal(fresh.predict_util(), fc.predict_util())
+    # the restored ring keeps observing/predicting exactly like the original
+    for _ in range(cfg.season_steps):
+        fc.observe(float(t), _square(t))
+        fresh.observe(float(t), _square(t))
+        t += 1
+    np.testing.assert_array_equal(fresh.predict_util(), fc.predict_util())
+
+
+def test_forecaster_persistence_guards():
+    """Pre-warm snapshots are empty no-ops; a season-length mismatch is a
+    hard error (slot p means 'time = p mod S' — silently re-warming a
+    mismatched ring would alias phases)."""
+    fc = CapacityForecaster(ForecastConfig(horizon_steps=2, season_steps=4))
+    assert fc.state_dict() == {}             # nothing allocated yet
+    fc.observe(0.0, _square(0))
+    sd = fc.state_dict()
+    other = CapacityForecaster(ForecastConfig(horizon_steps=2,
+                                              season_steps=8))
+    with pytest.raises(ValueError):
+        other.load_state_dict(sd)
+    # empty dict round-trips as a no-op
+    other.load_state_dict({})
+    assert other.count == 0
