@@ -40,6 +40,15 @@ memory-violation minutes than the no-handling arm, and never preempt a
 tier-0 (interactive) session.  Baselines of any earlier schema (v1–v3,
 no storm section) still gate a v4 monitor run — sections and metrics the
 baseline lacks are skipped with a note, never hard-failed.
+
+The v5 ``drift`` section (calibrated-vs-analytic pricing from the
+committed ``BENCH_profiles.json``) is gated on sanity absolutes: every
+row's latencies finite and positive, and ``|drift_frac|`` within
+``BENCH_DRIFT_MAX`` (default 2.0 — a calibrated price 3× off the analytic
+one means a corrupt profile or a broken calibration layer, not a slow
+kernel).  ``--profiles`` additionally validates the committed profile
+artifact itself: schema stamp, >= 3 models, per-segment required keys,
+finite positive scales.
 """
 
 from __future__ import annotations
@@ -177,6 +186,96 @@ def check_storm(doc: dict) -> list[str]:
     return failures
 
 
+def check_drift(doc: dict) -> list[str]:
+    """Sanity gates on the v5 drift rows (calibration-layer liveness).
+
+    Calibration folds MEASURED coefficients over the analytic terms, so a
+    hard numeric baseline would gate the container's thermal noise; what CI
+    must catch is the calibration layer going insane — NaN/inf pricing, a
+    zeroed profile, or a scale blowup.  ``BENCH_DRIFT_MAX`` bounds
+    ``|drift_frac|`` (default 2.0).
+    """
+    rows = doc.get("drift") or doc.get("pricing_drift") or []
+    if not rows:
+        print("[drift] no pricing-drift section in fresh run — skipped")
+        return []
+    refreshed = doc.get("refreshed")
+    if refreshed is not None and "drift" not in refreshed:
+        print("[drift] section carried over from a previous sweep — skipped")
+        return []
+    max_drift = float(os.environ.get("BENCH_DRIFT_MAX", "2.0"))
+    failures: list[str] = []
+
+    def gate(arch, name, value, ok, limit_desc):
+        verdict = "OK " if ok else "REGRESSION"
+        print(f"[drift {arch:>18}] {name}: {value} ({limit_desc}) {verdict}")
+        if not ok:
+            failures.append(f"drift {arch} {name}: {value} ({limit_desc})")
+
+    import math
+    for r in rows:
+        arch = r["arch"]
+        for key in ("analytic_ms", "calibrated_ms"):
+            v = float(r[key])
+            gate(arch, key, v, math.isfinite(v) and v > 0.0,
+                 "must be finite and > 0")
+        d = float(r["drift_frac"])
+        gate(arch, "drift_frac", d,
+             math.isfinite(d) and abs(d) <= max_drift,
+             f"|drift| must be <= {max_drift}")
+    return failures
+
+
+def check_profiles(path: pathlib.Path) -> list[str]:
+    """Schema validation of the committed ``BENCH_profiles.json``.
+
+    Required: the ``bench-profiles/v1`` stamp, >= 3 profiled models (the
+    acceptance floor: attention + SSM/Griffin + MoE coverage), and for every
+    model per-segment ``step_time_s``/``analytic_time_s`` entries with
+    finite positive values plus finite aggregate scales.
+    """
+    import math
+    failures: list[str] = []
+
+    def gate(name, value, ok, limit_desc):
+        verdict = "OK " if ok else "REGRESSION"
+        print(f"[profiles] {name}: {value} ({limit_desc}) {verdict}")
+        if not ok:
+            failures.append(f"profiles {name}: {value} ({limit_desc})")
+
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[profiles] unreadable {path}: {e} REGRESSION")
+        return [f"profiles unreadable: {e}"]
+    gate("schema", doc.get("schema"),
+         doc.get("schema") == "bench-profiles/v1",
+         "must be bench-profiles/v1")
+    models = doc.get("models", {})
+    gate("model_count", len(models), len(models) >= 3, "must be >= 3")
+    for arch, m in sorted(models.items()):
+        segs = m.get("segments", [])
+        ok = bool(segs)
+        for s in segs:
+            for key in ("lo", "hi", "step_time_s", "analytic_time_s"):
+                if key not in s:
+                    ok = False
+                    break
+            else:
+                if not (math.isfinite(float(s["step_time_s"]))
+                        and float(s["step_time_s"]) > 0.0
+                        and math.isfinite(float(s["analytic_time_s"]))
+                        and float(s["analytic_time_s"]) > 0.0):
+                    ok = False
+        for key in ("compute_scale", "transfer_scale"):
+            v = float(m.get(key, float("nan")))
+            if not (math.isfinite(v) and v > 0.0):
+                ok = False
+        gate(f"{arch}.segments", len(segs), ok,
+             "per-segment keys present, times/scales finite and > 0")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_fleet.json",
@@ -187,11 +286,16 @@ def main() -> int:
                     default=float(os.environ.get("BENCH_TOLERANCE", "1.3")),
                     help="per-metric multiplier (env: BENCH_TOLERANCE; "
                          "default 1.3)")
+    ap.add_argument("--profiles", default=None, metavar="PATH",
+                    help="also validate this BENCH_profiles.json artifact")
     args = ap.parse_args()
 
     fresh_doc = json.loads(pathlib.Path(args.fresh).read_text())
     failures: list[str] = check_qos(fresh_doc)
     failures += check_storm(fresh_doc)
+    failures += check_drift(fresh_doc)
+    if args.profiles:
+        failures += check_profiles(pathlib.Path(args.profiles))
 
     base_path = pathlib.Path(args.baseline)
     if not base_path.exists():

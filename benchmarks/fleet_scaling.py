@@ -129,7 +129,8 @@ def solver_amortization(*, reps: int = 5, max_units: int = 96) -> list[dict]:
 
 
 def _saturated_fleet(n_sessions: int, seed: int,
-                     forecast: bool = False) -> FleetOrchestrator:
+                     forecast: bool = False,
+                     cost_model=None) -> FleetOrchestrator:
     """A fleet of ``n_sessions`` live sessions on the §IV topology, loaded
     hard enough that latency/util triggers fire every monitoring cycle.
 
@@ -152,6 +153,7 @@ def _saturated_fleet(n_sessions: int, seed: int,
         # update + worst-case re-pricing + forecast-priced migrate)
         forecaster=(CapacityForecaster(ForecastConfig(
             horizon_steps=8, season_steps=8)) if forecast else None),
+        cost_model=cost_model,
     )
     rng = np.random.default_rng(seed)
     catalog = fleet_model_catalog()
@@ -267,19 +269,22 @@ def write_bench_fleet(sections: dict[str, list[dict]],
 
     v2 added ``repair_calls_per_cycle``; v3 added the ``qos`` section (the
     seed-paired forecast A/B with onset-ρ / SLO-breach / preemption KPIs)
-    and ``resident_fc_cycle_ms`` in the monitor rows; v4 adds the ``storm``
+    and ``resident_fc_cycle_ms`` in the monitor rows; v4 added the ``storm``
     section (seed-paired correlated-node-failure A/B: recovery time,
-    memory-violation minutes, revocation counts).  Sections absent from
+    memory-violation minutes, revocation counts); v5 adds the ``drift``
+    section (calibrated-vs-analytic pricing on identical placements, from
+    the committed ``BENCH_profiles.json``).  Sections absent from
     ``sections`` are carried over from the committed file, so a
     ``--monitor``-only refresh never drops the qos baseline (and vice
     versa).
     """
-    doc = {"schema": "bench-fleet/v4",
-           "source": "benchmarks/fleet_scaling.py --monitor/--qos/--storm"}
+    doc = {"schema": "bench-fleet/v5",
+           "source": ("benchmarks/fleet_scaling.py "
+                      "--monitor/--qos/--storm/--drift")}
     if path.exists():
         try:
             old = json.loads(path.read_text())
-            for k in ("monitor", "qos", "storm"):
+            for k in ("monitor", "qos", "storm", "drift"):
                 if k in old:
                     doc[k] = old[k]
         except (json.JSONDecodeError, OSError):
@@ -441,6 +446,65 @@ def failure_storm(*, cap: int = 32, duration_s: float = 60.0,
     return rows
 
 
+def pricing_drift(*, profiles: pathlib.Path | None = None,
+                  n_sessions: int = 32, seed: int = 0) -> list[dict]:
+    """Calibrated-vs-analytic pricing drift from the committed profiles.
+
+    Per profiled catalog arch: solve ONE joint split analytically, then
+    price that identical placement under both providers — the drift is pure
+    cost-model delta, no solver feedback.  The ``_fleet`` row is the
+    seed-paired fleet-level arm: two orchestrators admit the IDENTICAL
+    session stream and differ only in ``cost_model``; their fused
+    ``price_fleet`` means quantify how far measured calibration moves the
+    control plane's view of the same fleet.  ``check_regression.py`` gates
+    the rows' sanity (finite, positive, calibrated within a sane band).
+    """
+    from repro.core.cost_model import AnalyticCostModel
+    from repro.core.profiling import CalibratedCostModel
+
+    if profiles is None:
+        profiles = (pathlib.Path(__file__).resolve().parent.parent
+                    / "BENCH_profiles.json")
+    from repro.configs import get_bundle
+
+    cal = CalibratedCostModel.from_file(profiles)
+    ana = AnalyticCostModel()
+    state = base_system_state(MECScenarioParams())
+    splitter = JaxJointSplitter()
+    wl = Workload(tokens_in=64, tokens_out=8, arrival_rate=1.0)
+    rows = []
+    for arch, mp in sorted(cal.profile.models.items()):
+        # the FULL catalog graph — the profile was measured on the reduced
+        # config; the ratio projection is exactly what this row quantifies
+        graph = get_bundle(arch).model_graph()
+        sol = splitter.solve(graph, state, wl, max_units=96)
+        lat_a = ana.chain_latency(graph, sol.boundaries, sol.assignment,
+                                  state, wl)
+        lat_c = cal.chain_latency(graph, sol.boundaries, sol.assignment,
+                                  state, wl)
+        rows.append(dict(
+            arch=arch, family=mp.family, measured_units=mp.graph_units,
+            compute_scale=round(mp.compute_scale, 4),
+            transfer_scale=round(mp.transfer_scale, 4),
+            analytic_ms=round(1e3 * lat_a, 3),
+            calibrated_ms=round(1e3 * lat_c, 3),
+            drift_frac=round(lat_c / lat_a - 1.0, 4),
+        ))
+    lat_mean = {}
+    for name, cm in (("analytic", None), ("calibrated", cal)):
+        orch = _saturated_fleet(n_sessions, seed, cost_model=cm)
+        _, lat, _ = orch.price_fleet()
+        lat_mean[name] = float(np.mean(lat))
+    rows.append(dict(
+        arch="_fleet", sessions=n_sessions,
+        analytic_ms=round(1e3 * lat_mean["analytic"], 3),
+        calibrated_ms=round(1e3 * lat_mean["calibrated"], 3),
+        drift_frac=round(lat_mean["calibrated"] / lat_mean["analytic"] - 1.0,
+                         4),
+    ))
+    return rows
+
+
 def fleet_qos(*, duration_s: float = 60.0, seed: int = 0,
               caps=(1, 4, 8, 16, 32, 64)) -> list[dict]:
     """Aggregate QoS + admission outcomes vs session cap, admission OFF
@@ -491,9 +555,12 @@ def main() -> None:  # pragma: no cover
     ap.add_argument("--monitor", action="store_true")
     ap.add_argument("--qos", action="store_true")
     ap.add_argument("--storm", action="store_true")
+    ap.add_argument("--drift", action="store_true",
+                    help="calibrated-vs-analytic pricing drift from the "
+                         "committed BENCH_profiles.json")
     args = ap.parse_args()
     run_all = not (args.amortization or args.monitor or args.qos
-                   or args.storm)
+                   or args.storm or args.drift)
 
     out: dict[str, list[dict]] = {}
     if run_all or args.amortization:
@@ -547,6 +614,16 @@ def main() -> None:  # pragma: no cover
             print(r)
         if not args.smoke:
             bench_sections["storm"] = out["failure_storm"]
+    if run_all or args.drift:
+        print("\n== calibrated-vs-analytic pricing drift (committed "
+              "BENCH_profiles.json) ==")
+        out["pricing_drift"] = pricing_drift(
+            n_sessions=8 if args.smoke else 32,
+        )
+        for r in out["pricing_drift"]:
+            print(r)
+        if not args.smoke:
+            bench_sections["drift"] = out["pricing_drift"]
     # the tracked artifact carries the FULL sweeps only — a smoke run must
     # never overwrite the committed perf trajectory; sections not re-run
     # are carried over from the committed file (merge-on-write)

@@ -37,7 +37,9 @@ from .admission import (
 )
 from .broadcast import InProcessAgent, PartitionConfig, ReconfigurationBroadcast
 from .cost_model import (
+    AnalyticCostModel,
     CostBreakdown,
+    CostModel,
     CostWeights,
     SystemState,
     Workload,
@@ -71,7 +73,14 @@ from .placement import (
     surrogate_cost,
 )
 from .privacy import TrustPolicy, assert_privacy_ok
-from .profiling import CapacityProfiler, NodeSample
+from .profiling import (
+    CalibratedCostModel,
+    CapacityProfiler,
+    ModelProfile,
+    NodeSample,
+    SegmentProfile,
+    SegmentProfileEntry,
+)
 from .splitter import (
     BatchedJointSplitter,
     JaxJointSplitter,
@@ -96,14 +105,17 @@ __all__ = [
     "AdaptiveOrchestrator", "AdmissionKind", "AdmissionRequest",
     "AdmissionVerdict", "BatchedJointSplitter", "BatchedMigrationSolver",
     "BatchedRepairPass",
+    "AnalyticCostModel", "CalibratedCostModel", "CostModel",
     "CapacityForecaster", "ForecastConfig",
     "CapacityProfiler", "CostBreakdown", "CostWeights", "Decision",
     "DecisionKind", "EWMA", "FleetAdmissionController", "FleetCostEvaluator",
     "FleetDecision", "FleetOrchestrator", "FleetSession", "FleetStateBuffers",
     "GraphNode", "InProcessAgent", "JaxJointSplitter", "ModelGraph",
-    "NodeSample", "PackedSessions", "PartitionConfig", "QOS_BATCH",
+    "ModelProfile", "NodeSample", "PackedSessions", "PartitionConfig",
+    "QOS_BATCH",
     "QOS_CLASSES", "QOS_INTERACTIVE", "QOS_STANDARD", "QoSClass",
     "ReconfigurationBroadcast", "ResidentFleetKernel", "ResidentPrice",
+    "SegmentProfile", "SegmentProfileEntry",
     "SessionProblem", "Solution", "SplitRevision", "SplitScheme",
     "SystemState", "Thresholds", "TriggerState", "TrustPolicy", "Workload",
     "assert_privacy_ok", "brute_force_joint", "chain_latency", "evaluate",

@@ -35,7 +35,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .cost_model import Workload, chain_latency, memory_violations, node_loads
+from .cost_model import (CostModel, Workload, memory_violations, node_loads)
 from .fleet import FleetOrchestrator, FleetSession, session_induced_loads
 from .graph import ModelGraph
 from .placement import Solution
@@ -98,6 +98,9 @@ class FleetAdmissionController:
     max_sessions: int = 64
     rho_ceiling: float = 1.0
     queue_cap: int = 16
+    # pricing provider: defaults to the orchestrator's, so admission verdicts
+    # and fleet pricing always agree on calibrated-vs-analytic coefficients
+    cost_model: CostModel | None = None
     # forecast-aware pricing (PR 5): when the orchestrator carries a ready
     # CapacityForecaster, the arrival is solved/priced against the WORST
     # capacity within the horizon (min residual capacity — max background
@@ -130,6 +133,10 @@ class FleetAdmissionController:
     # sids, broadcast version)
     _table_key: tuple = ()
     _table_cache: tuple | None = None
+
+    def __post_init__(self) -> None:
+        if self.cost_model is None:
+            self.cost_model = self.orchestrator.cost_model
 
     # ------------------------------------------------------------------ #
     @property
@@ -238,8 +245,11 @@ class FleetAdmissionController:
         base = orch.forecast_base(state) if self.use_forecast else state
         eff = orch.effective_state(state, _table=table, base=base)
 
+        # price on the provider's calibrated view (identity when analytic —
+        # then this whole path is bit-identical to the free-function pricing)
+        graph = self.cost_model.calibrated(req.graph)
         [sol] = orch.splitter.solve_batch(
-            [SessionProblem(req.graph, req.workload,
+            [SessionProblem(graph, req.workload,
                             source_node=req.source_node,
                             input_bytes_per_token=req.input_bytes_per_token,
                             prepacked=prepacked)],
@@ -247,25 +257,25 @@ class FleetAdmissionController:
         )
         sol = coalesce_same_node(sol)
         if memory_violations(
-            req.graph, sol.boundaries, sol.assignment, eff
+            graph, sol.boundaries, sol.assignment, eff
         ).any():
             # Eq. 4 repair through the fleet's batched device pass (the
             # scalar repair_capacity stays off the admission control plane)
             sol = orch.repair_solution(
-                req.graph, sol, eff, req.workload,
+                graph, sol, eff, req.workload,
                 source_node=req.source_node,
                 input_bytes_per_token=req.input_bytes_per_token,
             )
             if memory_violations(
-                req.graph, sol.boundaries, sol.assignment, eff
+                graph, sol.boundaries, sol.assignment, eff
             ).any():
                 return AdmissionVerdict(
                     AdmissionKind.REJECT,
                     reason="insufficient residual memory for model weights",
                 )
 
-        lat = chain_latency(
-            req.graph, sol.boundaries, sol.assignment, eff, req.workload
+        lat = self.cost_model.chain_latency(
+            graph, sol.boundaries, sol.assignment, eff, req.workload
         )
         fc = " within forecast horizon" if base is not state else ""
         if lat > req.qos.latency_slo_s:
@@ -281,7 +291,7 @@ class FleetAdmissionController:
         # reactive) + every live session's induced load + the candidate's
         # own raw λ·service
         own_rho = node_loads(
-            req.graph, sol.boundaries, sol.assignment, state, req.workload
+            graph, sol.boundaries, sol.assignment, state, req.workload
         ) - state.background_util
         proj = base.background_util + table[1] + own_rho
         if float(proj.max()) > self.rho_ceiling:
@@ -299,7 +309,7 @@ class FleetAdmissionController:
         # reactive controller on the saturated fleet.
         if base is not state and orch.sessions:
             isids, lat0, lat1 = orch.price_incumbents_with_candidate(
-                req.graph, sol, req.workload,
+                graph, sol, req.workload,
                 source_node=req.source_node,
                 input_bytes_per_token=req.input_bytes_per_token,
                 state=state, base=base,
@@ -321,7 +331,7 @@ class FleetAdmissionController:
                 )
 
         sid = orch.admit(
-            req.graph, req.workload, source_node=req.source_node,
+            graph, req.workload, source_node=req.source_node,
             arch=req.arch, now=now, qos=req.qos, solution=sol,
             prepacked=prepacked,
         )

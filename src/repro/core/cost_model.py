@@ -27,6 +27,8 @@ __all__ = [
     "SystemState",
     "CostWeights",
     "CostBreakdown",
+    "CostModel",
+    "AnalyticCostModel",
     "segment_exec_time",
     "chain_latency",
     "node_loads",
@@ -371,3 +373,87 @@ def evaluate(
     cb = phi(graph, boundaries, assignment, state, wl, weights)
     over = float(memory_violations(graph, boundaries, assignment, state).sum())
     return cb.total + mem_penalty * over / 1e9
+
+
+# --------------------------------------------------------------------------- #
+# pricing provider — the one cost surface the control plane consumes
+# --------------------------------------------------------------------------- #
+class CostModel:
+    """Provider object behind every Φ-family query the control plane makes.
+
+    The free functions above stay the pinned scalar reference; a ``CostModel``
+    is how consumers (:class:`~repro.core.splitter.BatchedJointSplitter`,
+    :class:`~repro.core.fleet_eval.FleetCostEvaluator` /
+    :class:`~repro.core.fleet_eval.ResidentFleetKernel`,
+    :class:`~repro.core.admission.FleetAdmissionController`) select
+    analytic-vs-calibrated pricing with one constructor argument instead of
+    importing the free functions directly.
+
+    The entire contract hangs on :meth:`calibrated`: it maps a model graph to
+    the graph the analytic formulas should be evaluated ON.  The analytic
+    provider returns the graph unchanged (``calibrated(g) is g``);
+    :class:`~repro.core.profiling.CalibratedCostModel` returns a view with
+    measured per-unit coefficients folded into ``flops`` (step-time
+    calibration) and ``act_out_bytes`` (boundary-transfer calibration) —
+    ``weight_bytes`` is never touched, so Eq. 4 memory feasibility and Eq. 7
+    weight movement always price real parameter bytes.  Because calibration
+    is a pure input-array transform, the batched splitter DP, the fused
+    resident kernels, and every compile cache are untouched: a calibrated
+    fleet runs the exact same XLA programs on recalibrated rows.
+    """
+
+    def calibrated(self, graph: ModelGraph) -> ModelGraph:
+        """The graph the analytic formulas should price (identity here)."""
+        return graph
+
+    # ---- Φ family, evaluated on the calibrated view ------------------- #
+    def segment_exec_time(
+        self, graph: ModelGraph, lo: int, hi: int, node: int,
+        state: SystemState, wl: Workload,
+    ) -> float:
+        return segment_exec_time(self.calibrated(graph), lo, hi, node, state, wl)
+
+    def chain_latency(
+        self,
+        graph: ModelGraph,
+        boundaries: Sequence[int],
+        assignment: Sequence[int],
+        state: SystemState,
+        wl: Workload,
+        *,
+        return_parts: bool = False,
+    ):
+        return chain_latency(
+            self.calibrated(graph), boundaries, assignment, state, wl,
+            return_parts=return_parts,
+        )
+
+    def phi(
+        self,
+        graph: ModelGraph,
+        boundaries: Sequence[int],
+        assignment: Sequence[int],
+        state: SystemState,
+        wl: Workload,
+        weights: CostWeights = CostWeights(),
+    ) -> CostBreakdown:
+        return phi(self.calibrated(graph), boundaries, assignment, state, wl,
+                   weights)
+
+    def evaluate(
+        self,
+        graph: ModelGraph,
+        boundaries: Sequence[int],
+        assignment: Sequence[int],
+        state: SystemState,
+        wl: Workload,
+        weights: CostWeights = CostWeights(),
+        *,
+        mem_penalty: float = 1e3,
+    ) -> float:
+        return evaluate(self.calibrated(graph), boundaries, assignment, state,
+                        wl, weights, mem_penalty=mem_penalty)
+
+
+class AnalyticCostModel(CostModel):
+    """The paper's analytic model, unmodified — the pinned default provider."""

@@ -60,11 +60,11 @@ from typing import TYPE_CHECKING
 
 from .broadcast import PartitionConfig, ReconfigurationBroadcast
 from .cost_model import (
+    AnalyticCostModel,
+    CostModel,
     CostWeights,
     SystemState,
     Workload,
-    chain_latency,
-    evaluate,
     link_loads,
     memory_violations,
     memory_violations_packed,
@@ -202,6 +202,14 @@ class FleetOrchestrator:
     broadcast: ReconfigurationBroadcast
     thresholds: Thresholds = field(default_factory=Thresholds)
     weights: CostWeights = field(default_factory=CostWeights)
+    # pricing provider: calibrated-vs-analytic is THIS one argument.  The
+    # orchestrator threads it into the splitter/evaluator/kernel it owns and
+    # calibrates every session graph ONCE at admission — from then on the
+    # resident rows, induced loads, DP packs, and scalar re-prices all carry
+    # the same (possibly measured) per-unit coefficients.  ``None`` →
+    # :class:`~repro.core.cost_model.AnalyticCostModel`, bit-identical to
+    # the pre-provider behaviour.
+    cost_model: CostModel | None = None
     # shared-units coarsening: heterogeneous catalog depths collapse into one
     # DP bucket → one compiled re-split variant for the whole fleet
     splitter: BatchedJointSplitter = field(
@@ -239,6 +247,17 @@ class FleetOrchestrator:
     # device-resident fleet state: rows owned by admit/depart/_commit ONLY
     _buffers: FleetStateBuffers | None = None
     full_rebuilds: int = 0             # cold repacks (≠ row-level updates)
+
+    def __post_init__(self) -> None:
+        if self.cost_model is None:
+            self.cost_model = AnalyticCostModel()
+        else:
+            # one provider governs every pricing surface the orchestrator
+            # owns (explicitly-passed components are re-threaded too: the
+            # orchestrator's provider is authoritative by contract)
+            self.splitter.cost_model = self.cost_model
+            self.evaluator.cost_model = self.cost_model
+            self.kernel.cost_model = self.cost_model
 
     # ------------------------------------------------------------------ #
     # shared capacity accounting
@@ -412,6 +431,7 @@ class FleetOrchestrator:
         with the device totals).  Event-driven host+device work of
         O(fleet·K) per ARRIVAL — never on the per-cycle hot path.
         """
+        graph = self.cost_model.calibrated(graph)
         sids = list(self.sessions)
         if not sids:
             return [], np.zeros(0), np.zeros(0)
@@ -511,6 +531,10 @@ class FleetOrchestrator:
         ``prepacked`` likewise hands over the problem tensors packed during
         pricing, so the session's first re-split never re-coarsens either.
         """
+        # the admission choke point for calibration: the session LIVES on the
+        # calibrated view (resident rows, DP packs, scalar re-prices all see
+        # the same graph object; weight bytes are untouched by calibration)
+        graph = self.cost_model.calibrated(graph)
         sid = self._next_sid
         self._next_sid += 1
         sess = FleetSession(
@@ -557,7 +581,7 @@ class FleetOrchestrator:
     # one monitoring cycle
     # ------------------------------------------------------------------ #
     def _latency(self, sess: FleetSession, sol: Solution, eff: SystemState) -> float:
-        return chain_latency(
+        return self.cost_model.chain_latency(
             sess.graph, sol.boundaries, sol.assignment, eff, sess.workload
         )
 
@@ -626,6 +650,7 @@ class FleetOrchestrator:
         ``placement.repair_capacity`` stays entirely off the control plane
         (it remains the pinned scalar reference).
         """
+        graph = self.cost_model.calibrated(graph)
         if not memory_violations(
             graph, sol.boundaries, sol.assignment, eff
         ).any():
@@ -645,7 +670,8 @@ class FleetOrchestrator:
         )
         a = tuple(int(x) for x in assign[: len(sol.assignment)])
         return Solution(
-            sol.boundaries, a, evaluate(graph, sol.boundaries, a, eff, workload)
+            sol.boundaries, a,
+            self.cost_model.evaluate(graph, sol.boundaries, a, eff, workload),
         )
 
     def _mem_feasible(

@@ -69,7 +69,8 @@ from typing import Sequence
 
 import numpy as np
 
-from .cost_model import _EPS, _RHO_CAP, CostWeights, SystemState, Workload
+from .cost_model import (_EPS, _RHO_CAP, AnalyticCostModel, CostModel,
+                         CostWeights, SystemState, Workload)
 from .forecast import seasonal_update, worst_case_capacity
 from .graph import ModelGraph
 from .placement import Solution
@@ -323,10 +324,31 @@ class FleetCostEvaluator:
     computed in float64 inside an ``enable_x64`` scope so results match the
     numpy reference to rounding error.  Compiled once per (B, K, n, weights)
     shape; B and K arrive power-of-two padded from :func:`pack_sessions`.
+
+    ``cost_model`` selects the pricing provider; measured calibration enters
+    through :meth:`pack` (a calibrated-graph view of each packed item), so
+    the compiled programs are identical for analytic and calibrated runs.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, cost_model: CostModel | None = None) -> None:
         self._compiled: dict[tuple, object] = {}
+        self.cost_model = cost_model if cost_model is not None \
+            else AnalyticCostModel()
+
+    def pack(
+        self,
+        items: Sequence[tuple[ModelGraph, Sequence[int], Sequence[int],
+                              Workload, int, float]],
+        *,
+        pad_pow2: bool = True,
+        min_k: int = 0,
+    ) -> PackedSessions:
+        """:func:`pack_sessions` through this evaluator's cost model."""
+        cal = self.cost_model.calibrated
+        return pack_sessions(
+            [(cal(g), b, a, wl, src, ib) for g, b, a, wl, src, ib in items],
+            pad_pow2=pad_pow2, min_k=min_k,
+        )
 
     def _build(self, key, n, weights: CostWeights, mem_penalty: float):
         import jax
@@ -1350,11 +1372,18 @@ class ResidentFleetKernel:
     Two programs per shape: ``price`` (every cycle) and ``migrate`` (only
     on cycles with a non-empty triggered set).  The buffer axes grow
     pow2/doubling, so a fleet compiles O(log B · log K) variants total.
+
+    ``cost_model`` is the pricing provider the owning orchestrator threads
+    through (calibration is an input transform on the packed rows — see
+    :meth:`FleetCostEvaluator.pack` — so both programs compile identically
+    for analytic and calibrated fleets).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, cost_model: CostModel | None = None) -> None:
         self._price_c: dict[tuple, object] = {}
         self._mig_c: dict[tuple, object] = {}
+        self.cost_model = cost_model if cost_model is not None \
+            else AnalyticCostModel()
 
     @staticmethod
     def state_args(state: SystemState):

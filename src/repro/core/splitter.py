@@ -36,7 +36,8 @@ from typing import Sequence
 
 import numpy as np
 
-from .cost_model import SystemState, Workload, evaluate, memory_violations
+from .cost_model import (AnalyticCostModel, CostModel, SystemState, Workload,
+                         evaluate, memory_violations)
 from .graph import ModelGraph
 from .placement import Solution, local_search, repair_capacity, surrogate_cost
 
@@ -287,10 +288,19 @@ def _make_dp(L: int, n: int):
 
 
 class JaxJointSplitter:
-    """The joint DP compiled once per (L, n) shape; re-solved per C(t) tick."""
+    """The joint DP compiled once per (L, n) shape; re-solved per C(t) tick.
 
-    def __init__(self) -> None:
+    ``cost_model`` selects the pricing provider: the default
+    :class:`~repro.core.cost_model.AnalyticCostModel` solves on the raw
+    graph; a :class:`~repro.core.profiling.CalibratedCostModel` folds
+    measured per-unit coefficients in via its calibrated graph view (a pure
+    input transform — the compiled DP program is identical either way).
+    """
+
+    def __init__(self, cost_model: CostModel | None = None) -> None:
         self._compiled: dict[tuple[int, int], object] = {}
+        self.cost_model = cost_model if cost_model is not None \
+            else AnalyticCostModel()
 
     @staticmethod
     def _build(L: int, n: int):
@@ -310,6 +320,7 @@ class JaxJointSplitter:
     ) -> Solution:
         import jax.numpy as jnp
 
+        graph = self.cost_model.calibrated(graph)
         n = state.num_nodes
         flops_ps, wbytes_ps, priv_ps, bb, eff_f, eff_m, unit_map, L = _problem_arrays(
             graph, state, wl, source_node=source_node,
@@ -377,10 +388,13 @@ class BatchedJointSplitter:
     """
 
     def __init__(self, *, pad_pow2: bool = True,
-                 shared_units: int | None = None) -> None:
+                 shared_units: int | None = None,
+                 cost_model: CostModel | None = None) -> None:
         self._compiled: dict[tuple[int, int, int], object] = {}
         self.pad_pow2 = pad_pow2
         self.shared_units = shared_units
+        self.cost_model = cost_model if cost_model is not None \
+            else AnalyticCostModel()
 
     def units_for(self, graph_len: int, max_units: int | None) -> int | None:
         """Effective coarsen cap for a graph under the shared-units policy.
@@ -402,6 +416,7 @@ class BatchedJointSplitter:
         input_bytes_per_token: float = 4.0,
     ) -> PackedProblem:
         """Policy-consistent :func:`pack_problem` (cacheable per request)."""
+        graph = self.cost_model.calibrated(graph)
         return pack_problem(
             graph,
             units=self.units_for(len(graph), max_units),
@@ -442,7 +457,8 @@ class BatchedJointSplitter:
         buckets: dict[int, list[int]] = {}
         for i, p in enumerate(problems):
             arrs = _problem_arrays(
-                p.graph, state, p.workload, source_node=p.source_node,
+                self.cost_model.calibrated(p.graph), state, p.workload,
+                source_node=p.source_node,
                 input_bytes_per_token=p.input_bytes_per_token,
                 max_units=self.units_for(len(p.graph), max_units),
                 prepacked=p.prepacked,
@@ -536,10 +552,13 @@ class SplitRevision:
     max_units: int | None = 96          # DP coarsening cap for huge graphs
     max_nodes: int = 16                 # candidate-node pruning cap (fleet scale)
     local_rounds: int = 12              # Φ local-search budget per revision
+    cost_model: CostModel | None = None  # pricing provider (None = analytic)
     _jax_dp: JaxJointSplitter | None = None
 
     def __post_init__(self) -> None:
-        self._jax_dp = JaxJointSplitter()
+        if self.cost_model is None:
+            self.cost_model = AnalyticCostModel()
+        self._jax_dp = JaxJointSplitter(self.cost_model)
 
     def warmup(
         self,
@@ -563,6 +582,7 @@ class SplitRevision:
         candidate-pruned state ``revise`` would use, so the compiled
         (L, n) shape is exactly the one the first real revision hits.
         """
+        graph = self.cost_model.calibrated(graph)
         _, sub, sub_source = self._pruned(state, source_node)
         self._jax_dp.solve(
             graph, sub, wl, source_node=sub_source, max_units=self.max_units
@@ -589,6 +609,8 @@ class SplitRevision:
         source_node: int = 0,
         use_jax: bool = True,
     ) -> Solution:
+        # calibrate once; every downstream Φ/feasibility call prices the view
+        graph = self.cost_model.calibrated(graph)
         # fleet-scale pruning: DP over the k most promising nodes only
         idx, sub, sub_source = self._pruned(state, source_node)
 

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from ..core.broadcast import PartitionConfig
 from ..core.graph import ModelGraph
 from ..models.api import ModelBundle
-from .segments import SegmentRunner, run_chain, split_params
+from .segments import SegmentChain, SegmentRunner
 from .transfer import ActivationTransport, TransferStats
 
 __all__ = ["SplitInferenceEngine"]
@@ -37,6 +37,7 @@ class SplitInferenceEngine:
     config: PartitionConfig | None = None
     node_params: dict[int, list] = field(default_factory=dict)
     reconfigurations: int = 0
+    chain: SegmentChain | None = None
 
     def graph(self) -> ModelGraph:
         return self.bundle.model_graph()
@@ -44,11 +45,14 @@ class SplitInferenceEngine:
     # -------------------------------------------------------------- config --
     def apply_config(self, cfg: PartitionConfig) -> None:
         """Stage per-node segment params and activate the new split."""
-        segs = split_params(self.bundle, self.params, cfg.boundaries)
+        self.chain = SegmentChain(self.bundle, self.params, cfg.boundaries,
+                                  transfer_hook=self.transport)
         staged: dict[int, list] = {}
-        for j, node in enumerate(cfg.assignment):
+        for j, (node, seg) in enumerate(zip(cfg.assignment,
+                                            self.chain.segments)):
             staged.setdefault(node, []).append((cfg.boundaries[j],
-                                                cfg.boundaries[j + 1], segs[j]))
+                                                cfg.boundaries[j + 1],
+                                                seg.params))
         self.node_params = staged
         if self.config is not None and cfg.version != self.config.version:
             self.reconfigurations += 1
@@ -66,10 +70,13 @@ class SplitInferenceEngine:
 
     # ------------------------------------------------------------ execution --
     def infer_logits(self, tokens: jnp.ndarray) -> jnp.ndarray:
-        """Full forward through the active split chain; fp32 logits."""
-        assert self.config is not None, "apply_config first"
-        return run_chain(self.bundle, self.params, self.config.boundaries,
-                         tokens, transfer_hook=self.transport)
+        """Full forward through the active split chain; fp32 logits.
+
+        Runs the staged :class:`SegmentChain` — every segment executes on
+        its own :func:`split_params` view, exactly the tree its node holds.
+        """
+        assert self.chain is not None, "apply_config first"
+        return self.chain(tokens)
 
     def infer_monolithic(self, tokens: jnp.ndarray) -> jnp.ndarray:
         """Reference single-node forward (equivalence oracle)."""

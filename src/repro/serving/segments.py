@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from ..models import griffin, mamba2, transformer
 from ..models.api import ModelBundle
 
-__all__ = ["SegmentRunner", "split_params", "run_chain"]
+__all__ = ["BoundSegment", "SegmentChain", "SegmentRunner", "split_params",
+           "run_chain"]
 
 
 def _tf_slice_blocks(params: Any, lo: int, hi: int) -> Any:
@@ -29,11 +30,21 @@ def _tf_slice_blocks(params: Any, lo: int, hi: int) -> Any:
 
 @dataclass
 class SegmentRunner:
-    """Executes graph units [lo, hi) for one architecture."""
+    """Executes graph units [lo, hi) for one architecture.
+
+    ``local=False`` (default) indexes block stacks GLOBALLY — ``params`` is
+    the full parameter tree and the runner picks its own layers out of it.
+    ``local=True`` expects the segment-local view produced by
+    :func:`split_params` (what actually ships to a node): block stacks are
+    pre-sliced to this segment, so they are consumed whole.  Layer-position
+    effects (attention windows, griffin's layer-kind pattern) always use
+    global positions in both modes.
+    """
 
     bundle: ModelBundle
     lo: int
     hi: int
+    local: bool = False
 
     @property
     def n_units(self) -> int:
@@ -63,11 +74,13 @@ class SegmentRunner:
                 for i in range(blo, min(bhi, n_lead)):
                     dense_cfg = dataclasses.replace(
                         cfg, moe=None, d_ff=moe.dense_d_ff or cfg.d_ff)
+                    li = i - blo if self.local else i
                     x = transformer.block_forward(
-                        x, params["lead_blocks"][i], dense_cfg, window=0)
+                        x, params["lead_blocks"][li], dense_cfg, window=0)
                 slo, shi = max(blo - n_lead, 0), bhi - n_lead
                 if shi > slo:
-                    sub = _tf_slice_blocks(params, slo, shi)
+                    sub = (params["blocks"] if self.local
+                           else _tf_slice_blocks(params, slo, shi))
 
                     def body(h, inputs):
                         lp, w = inputs
@@ -86,7 +99,8 @@ class SegmentRunner:
                 lo = 1
             blo, bhi = lo - 1, min(hi - 1, L)
             if bhi > blo:
-                sub = _tf_slice_blocks(params, blo, bhi)
+                sub = (params["blocks"] if self.local
+                       else _tf_slice_blocks(params, blo, bhi))
 
                 def body(h, lp):
                     return mamba2.block_forward(h, lp, cfg), None
@@ -164,15 +178,80 @@ def split_params(bundle: ModelBundle, params: Any,
     return out
 
 
+@dataclass
+class BoundSegment:
+    """A :class:`SegmentRunner` bound to the params it runs with."""
+
+    runner: SegmentRunner
+    params: Any
+
+    @property
+    def lo(self) -> int:
+        return self.runner.lo
+
+    @property
+    def hi(self) -> int:
+        return self.runner.hi
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.runner(self.params, x)
+
+
+@dataclass
+class SegmentChain:
+    """THE segment-execution entrypoint: a split scheme bound to params.
+
+    Everything that drives segments — the inference engine, the segment
+    profiler, and the equivalence tests — builds one of these instead of
+    hand-rolling `SegmentRunner` loops, so they all execute the exact same
+    path.  With ``slice_params=True`` (default) each segment is bound to the
+    :func:`split_params` view of its own units — the tree a node actually
+    holds in deployment; ``slice_params=False`` binds every segment to the
+    full tree with global indexing (the historical :func:`run_chain`
+    behaviour).  Both produce bit-identical outputs (test-enforced).
+
+    ``transfer_hook(j, x)`` — e.g. an
+    :class:`~repro.serving.transfer.ActivationTransport` — sees the
+    activations crossing boundary ``j`` and returns what arrives on the
+    other side.
+    """
+
+    bundle: ModelBundle
+    params: Any
+    boundaries: tuple[int, ...]
+    transfer_hook: Any = None
+    slice_params: bool = True
+    segments: list[BoundSegment] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        pairs = list(zip(self.boundaries[:-1], self.boundaries[1:]))
+        if self.slice_params:
+            views = split_params(self.bundle, self.params, self.boundaries)
+        else:
+            views = [self.params] * len(pairs)
+        self.segments = [
+            BoundSegment(SegmentRunner(self.bundle, lo, hi,
+                                       local=self.slice_params), view)
+            for (lo, hi), view in zip(pairs, views)
+        ]
+
+    def __call__(self, tokens: jax.Array) -> jax.Array:
+        x = tokens
+        n = len(self.bundle.model_graph())
+        for j, seg in enumerate(self.segments):
+            x = seg(x)
+            if self.transfer_hook is not None and seg.hi < n:
+                x = self.transfer_hook(j, x)
+        return x
+
+
 def run_chain(bundle: ModelBundle, params: Any, boundaries: tuple[int, ...],
               tokens: jax.Array, *, transfer_hook=None) -> jax.Array:
-    """Execute the full split chain; optional hook sees boundary activations
-    (the serving engine uses it for compression + byte accounting)."""
-    x = tokens
-    n = len(bundle.model_graph())
-    for j, (lo, hi) in enumerate(zip(boundaries[:-1], boundaries[1:])):
-        runner = SegmentRunner(bundle, lo, hi)
-        x = runner(params, x)
-        if transfer_hook is not None and hi < n:
-            x = transfer_hook(j, x)
-    return x
+    """Execute the full split chain over the FULL param tree.
+
+    Thin wrapper over :class:`SegmentChain` with ``slice_params=False``;
+    kept for callers that hold one un-split tree.
+    """
+    chain = SegmentChain(bundle, params, boundaries,
+                         transfer_hook=transfer_hook, slice_params=False)
+    return chain(tokens)

@@ -1,0 +1,346 @@
+"""The CostModel API: profiles round-trip, empty calibration == analytic.
+
+PR-7 contract: the calibration layer is a pure INPUT transform — a
+``CalibratedCostModel`` with an empty profile is bit-identical to
+``AnalyticCostModel`` across the splitter DP, resident fleet pricing, and
+admission verdicts; a populated profile rescales per-unit ``flops`` /
+``act_out_bytes`` only (never ``weight_bytes``), idempotently; and
+steady-state monitoring cycles stay pack-free with calibration ON.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdmissionKind,
+    AdmissionRequest,
+    AnalyticCostModel,
+    BatchedJointSplitter,
+    CalibratedCostModel,
+    CapacityProfiler,
+    FleetAdmissionController,
+    FleetOrchestrator,
+    InProcessAgent,
+    JaxJointSplitter,
+    ModelProfile,
+    ReconfigurationBroadcast,
+    SegmentProfile,
+    SegmentProfileEntry,
+    SystemState,
+    Thresholds,
+    Workload,
+)
+from repro.core.graph import GraphNode, ModelGraph
+from repro.core.profiling import PROFILE_SCHEMA
+from repro.core.splitter import SessionProblem
+from repro.core.triggers import QOS_STANDARD
+
+N_NODES = 4
+
+
+def _state(seed=0, n=N_NODES, util=0.5):
+    rng = np.random.default_rng(seed)
+    bw = np.full((n, n), 2e7)
+    np.fill_diagonal(bw, np.inf)
+    return SystemState(
+        flops_per_s=np.full(n, 5e12),
+        mem_bytes=np.full(n, 40e9),
+        background_util=np.full(n, util) + rng.uniform(0, 0.05, n),
+        trusted=np.array([True] * (n - 1) + [False]),
+        link_bw=bw,
+        link_lat=np.full((n, n), 2e-3) * (1 - np.eye(n)),
+        mem_bw=np.full(n, 2e11),
+    )
+
+
+def _graph(L, seed=0, name=None):
+    rng = np.random.default_rng(seed)
+    return ModelGraph(name or f"g{L}-{seed}", [
+        GraphNode(f"u{i}", float(rng.uniform(2e10, 6e10)),
+                  float(rng.uniform(2e8, 6e8)),
+                  float(rng.uniform(4e4, 1e5)),
+                  privacy_critical=(i == 0))
+        for i in range(L)
+    ])
+
+
+def _orch(state, *, cost_model=None):
+    return FleetOrchestrator(
+        profiler=CapacityProfiler(base_state=state),
+        broadcast=ReconfigurationBroadcast(
+            [InProcessAgent(i) for i in range(state.num_nodes)]
+        ),
+        thresholds=Thresholds(cooldown_s=0.5),
+        solve_backoff_s=0.0,
+        cost_model=cost_model,
+    )
+
+
+def _profile_for(graph, *, time_ratios, bytes_ratio=1.0):
+    """Synthetic per-unit profile: one segment per unit, exact ratios."""
+    n = len(graph)
+    segs = []
+    for i in range(n):
+        ab = graph.boundary_act_bytes(i + 1) if i + 1 < n else 0.0
+        segs.append(SegmentProfileEntry(
+            lo=i, hi=i + 1,
+            step_time_s=1e-3 * time_ratios[i], analytic_time_s=1e-3,
+            boundary_bytes_tok=ab * bytes_ratio,
+            analytic_boundary_bytes_tok=ab,
+        ))
+    return ModelProfile(arch=graph.name, family="test", graph_units=n,
+                        batch=2, tokens=32, compressed_transfer=False,
+                        segments=tuple(segs))
+
+
+# ---------------------------------------------------------------------------
+# profile artifact round-trip
+# ---------------------------------------------------------------------------
+
+def test_profile_round_trip_and_merge_on_write(tmp_path):
+    g = _graph(6, seed=1, name="rt-model")
+    mp = _profile_for(g, time_ratios=[3.0, 1.2, 1.2, 1.2, 1.2, 0.5],
+                      bytes_ratio=0.25)
+    path = tmp_path / "profiles.json"
+    SegmentProfile({"rt-model": mp}).save(path, refreshed=["rt-model"])
+
+    back = SegmentProfile.load(path)
+    assert set(back.models) == {"rt-model"}
+    assert back.models["rt-model"].to_doc() == mp.to_doc()
+
+    # merge-on-write: a later partial run keeps the earlier coverage
+    g2 = _graph(4, seed=2, name="rt-other")
+    doc = SegmentProfile({"rt-other": _profile_for(
+        g2, time_ratios=[1.0] * 4)}).save(path, refreshed=["rt-other"])
+    assert set(doc["models"]) == {"rt-model", "rt-other"}
+    assert doc["refreshed"] == ["rt-other"]
+    merged = SegmentProfile.load(path)
+    assert merged.models["rt-model"].to_doc() == mp.to_doc()
+
+    # loaded profile calibrates identically to the in-memory one
+    a = CalibratedCostModel(SegmentProfile({"rt-model": mp})).calibrated(g)
+    b = CalibratedCostModel(merged).calibrated(g)
+    np.testing.assert_array_equal(a.flops, b.flops)
+    np.testing.assert_array_equal(a.act_out_bytes, b.act_out_bytes)
+
+
+def test_profile_load_rejects_unknown_schema(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"schema": "bench-profiles/v999", "models": {}}))
+    with pytest.raises(ValueError, match="schema"):
+        SegmentProfile.load(path)
+    assert PROFILE_SCHEMA == "bench-profiles/v1"
+
+
+def test_committed_artifact_loads_and_calibrates():
+    """The committed BENCH_profiles.json is a valid, useful artifact: it
+    spans >= 3 families and calibrates every catalog graph it names."""
+    import pathlib
+
+    from repro.configs import get_bundle
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    cm = CalibratedCostModel.from_file(root / "BENCH_profiles.json")
+    assert len(cm.profile.models) >= 3
+    assert len({m.family for m in cm.profile.models.values()}) >= 3
+    for arch in cm.profile.models:
+        g = get_bundle(arch).model_graph()
+        view = cm.calibrated(g)
+        assert view is not g                      # profile present → rescaled
+        np.testing.assert_array_equal(view.weight_bytes, g.weight_bytes)
+        assert np.isfinite(view.flops).all() and (view.flops > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# calibration semantics
+# ---------------------------------------------------------------------------
+
+def test_calibrated_view_scales_flops_and_wire_bytes_only():
+    g = _graph(8, seed=3, name="scaled")
+    ratios = [2.0] * 8
+    cm = CalibratedCostModel(SegmentProfile(
+        {"scaled": _profile_for(g, time_ratios=ratios, bytes_ratio=0.5)}))
+    view = cm.calibrated(g)
+    np.testing.assert_allclose(view.flops, 2.0 * g.flops, rtol=1e-12)
+    np.testing.assert_array_equal(view.weight_bytes, g.weight_bytes)
+    # last unit's act_out never crosses a cut; interior wire bytes halve
+    np.testing.assert_allclose(view.act_out_bytes[:-1],
+                               0.5 * g.act_out_bytes[:-1], rtol=1e-12)
+    # idempotent + cached: the view calibrates to itself, repeats are `is`
+    assert cm.calibrated(view) is view
+    assert cm.calibrated(g) is view
+    # doubling every unit's flops exactly doubles the exec-time compute term
+    state = _state(5)
+    wl = Workload(64, 8, 1.0)
+    t0 = AnalyticCostModel().segment_exec_time(g, 0, len(g), 0, state, wl)
+    t1 = cm.segment_exec_time(g, 0, len(g), 0, state, wl)
+    assert t1 > t0                                 # strictly costlier
+
+
+def test_unknown_graph_is_identity():
+    cm = CalibratedCostModel(SegmentProfile(
+        {"something-else": _profile_for(_graph(4, name="something-else"),
+                                        time_ratios=[1.5] * 4)}))
+    g = _graph(6, seed=4, name="not-profiled")
+    assert cm.calibrated(g) is g
+
+
+def test_unit_scales_anchor_by_role():
+    """A shallow measured graph's embed/head ratios pin to the full graph's
+    embed/head units; the embed overhead must not smear across blocks."""
+    mp = ModelProfile(
+        arch="m", family="test", graph_units=4, batch=2, tokens=32,
+        compressed_transfer=False,
+        segments=(
+            SegmentProfileEntry(0, 1, 50e-3, 1e-3),    # embed: 50x overhead
+            SegmentProfileEntry(1, 3, 1.3e-3, 1e-3),   # blocks: 1.3x
+            SegmentProfileEntry(3, 4, 0.3e-3, 1e-3),   # head: 0.3x
+        ),
+    )
+    fs, _ = mp.unit_scales(20)
+    assert fs.shape == (20,)
+    assert fs[0] == pytest.approx(50.0)
+    assert fs[-1] == pytest.approx(0.3)
+    np.testing.assert_allclose(fs[1:-1], 1.3, rtol=1e-9)
+    # same-depth mapping is the measured vector verbatim
+    fs4, _ = mp.unit_scales(4)
+    np.testing.assert_allclose(fs4, [50.0, 1.3, 1.3, 0.3], rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# empty profile == analytic, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_empty_profile_splitter_bit_identical():
+    state = _state(6)
+    wl = Workload(64, 16, 2.0)
+    analytic = JaxJointSplitter(AnalyticCostModel())
+    empty = JaxJointSplitter(CalibratedCostModel(SegmentProfile()))
+    for seed in range(3):
+        g = _graph(10, seed=seed)
+        sa = analytic.solve(g, state, wl)
+        se = empty.solve(g, state, wl)
+        assert sa.boundaries == se.boundaries
+        assert sa.assignment == se.assignment
+        assert sa.cost == se.cost                 # bitwise, not approx
+
+    ba = BatchedJointSplitter()
+    be = BatchedJointSplitter(cost_model=CalibratedCostModel(SegmentProfile()))
+    probs = [SessionProblem(_graph(12, seed=s), Workload(32, 8, 1.0),
+                            source_node=s % 3) for s in range(4)]
+    for ra, re in zip(ba.solve_batch(probs, state),
+                      be.solve_batch(probs, state)):
+        assert ra.boundaries == re.boundaries
+        assert ra.assignment == re.assignment
+        assert ra.cost == re.cost
+
+
+def test_empty_profile_fleet_and_admission_bit_identical():
+    def build(cost_model):
+        orch = _orch(_state(7, util=0.5), cost_model=cost_model)
+        return orch, FleetAdmissionController(orch, max_sessions=8,
+                                              rho_ceiling=1.0)
+
+    (orch_a, ctrl_a) = build(None)                # defaults to analytic
+    (orch_e, ctrl_e) = build(CalibratedCostModel(SegmentProfile()))
+    rng = np.random.default_rng(13)
+    for k in range(8):
+        g = _graph(10, seed=200 + k)
+        wl = Workload(64, 16, float(rng.uniform(1.0, 3.0)))
+        req = AdmissionRequest(g, wl, source_node=int(rng.integers(0, 3)),
+                               qos=QOS_STANDARD, t_submit=float(k))
+        va = ctrl_a.request(req, now=float(k))
+        ve = ctrl_e.request(req, now=float(k))
+        assert va.kind == ve.kind, (k, va, ve)
+        assert va.predicted_latency_s == ve.predicted_latency_s
+        if va.kind is AdmissionKind.ACCEPT:
+            assert va.solution.boundaries == ve.solution.boundaries
+            assert va.solution.assignment == ve.solution.assignment
+    assert ctrl_a.counters == ctrl_e.counters
+
+    sids_a, lat_a, rho_a = orch_a.price_fleet()
+    sids_e, lat_e, rho_e = orch_e.price_fleet()
+    assert sids_a == sids_e
+    np.testing.assert_array_equal(lat_a, lat_e)
+    np.testing.assert_array_equal(rho_a, rho_e)
+
+
+# ---------------------------------------------------------------------------
+# calibration ON keeps the resident-state invariants
+# ---------------------------------------------------------------------------
+
+def test_steady_state_stays_pack_free_with_calibration_on(monkeypatch):
+    """A real (non-identity) profile changes prices, not the steady-state
+    contract: warm cycles do zero pack work and zero row writes."""
+    import repro.core.fleet as fleet_mod
+    import repro.core.fleet_eval as fe
+
+    graphs = [_graph(8, seed=k) for k in range(6)]
+    profile = SegmentProfile({
+        g.name: _profile_for(g, time_ratios=[1.2] * 8, bytes_ratio=0.9)
+        for g in graphs
+    })
+    cm = CalibratedCostModel(profile)
+    assert all(cm.calibrated(g) is not g for g in graphs)  # really firing
+
+    orch = _orch(_state(6, util=0.1), cost_model=cm)
+    orch.thresholds = Thresholds(latency_max_s=30.0, cooldown_s=0.5)
+    for k, g in enumerate(graphs):
+        orch.admit(g, Workload(16, 4, 0.2), source_node=k % 3, now=0.0)
+    orch.step(now=0.0)                     # warm: builds buffers + compiles
+
+    calls = {"pack": 0}
+    real = fe.pack_sessions
+
+    def counting_pack(*a, **k):
+        calls["pack"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(fe, "pack_sessions", counting_pack)
+    monkeypatch.setattr(fleet_mod, "pack_sessions", counting_pack)
+    writes0 = orch._buffers.stats["row_writes"]
+    for t in range(1, 6):
+        fd = orch.step(now=float(t))
+        assert fd.n_keep == len(orch.sessions)
+        assert fd.pack_time_s == 0.0
+    assert calls["pack"] == 0
+    assert orch._buffers.stats["row_writes"] == writes0
+
+
+# ---------------------------------------------------------------------------
+# the measurement path itself (real forward passes; slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_segment_profiler_round_trip(tmp_path):
+    import jax
+
+    from repro.configs import get_bundle
+    from repro.serving import SegmentProfiler
+
+    bundle = get_bundle("stablelm-3b", reduced=True)
+    prof = SegmentProfiler(bundle, batch=1, tokens=16, reps=2, warmup=1)
+    mp = prof.profile()
+    assert mp.arch == bundle.model_graph().name
+    assert mp.graph_units == len(bundle.model_graph())
+    assert mp.segments and mp.segments[0].lo == 0
+    assert mp.segments[-1].hi == mp.graph_units
+    for s in mp.segments:
+        assert math.isfinite(s.step_time_s) and s.step_time_s > 0
+        assert math.isfinite(s.analytic_time_s) and s.analytic_time_s > 0
+    # interior cuts carry measured wire bytes; the tail crosses nothing
+    assert all(s.boundary_bytes_tok > 0 for s in mp.segments[:-1])
+    assert mp.segments[-1].boundary_bytes_tok == 0.0
+
+    path = tmp_path / "p.json"
+    SegmentProfile({mp.arch: mp}).save(path, refreshed=[mp.arch])
+    cm = CalibratedCostModel.from_file(path)
+    full = get_bundle("stablelm-3b").model_graph()   # full-size catalog graph
+    view = cm.calibrated(full)
+    assert view is not full
+    np.testing.assert_array_equal(view.weight_bytes, full.weight_bytes)
+    assert np.isfinite(view.flops).all() and (view.flops > 0).all()
+    del jax  # imported to assert the runtime path is available
