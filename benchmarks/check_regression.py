@@ -49,6 +49,16 @@ one means a corrupt profile or a broken calibration layer, not a slow
 kernel).  ``--profiles`` additionally validates the committed profile
 artifact itself: schema stamp, >= 3 models, per-segment required keys,
 finite positive scales.
+
+The v6 ``chaos`` section (seed-paired control-plane chaos A/B) is gated on
+absolutes of the SAME run: the handling arm must uphold every control-plane
+invariant (zero recorded violations across all monitoring cycles), fence
+the pre-crash zombie on every attempt (``zombie_committed == 0``), restore
+from the journal within ``BENCH_CHAOS_RESTORE_MS`` milliseconds (default
+1000), and accumulate strictly fewer SLO-breach minutes than the
+no-handling arm.  The campaign itself must have exercised the machinery
+(>= 1 controller crash).  Baselines of any earlier schema (v1–v5, no chaos
+section) still gate a v6 run — absent sections are skipped with a note.
 """
 
 from __future__ import annotations
@@ -186,6 +196,59 @@ def check_storm(doc: dict) -> list[str]:
     return failures
 
 
+def check_chaos(doc: dict) -> list[str]:
+    """Absolute gates on the v6 control-plane chaos A/B rows (no baseline).
+
+    Handling arm: zero invariant violations across every monitoring cycle
+    (config coherence, monotone versions, capacity conservation, bounded
+    defer queue, zero tier-0 preemptions), the pre-crash zombie never
+    commits over the recovered controller, journal restore bounded by
+    ``BENCH_CHAOS_RESTORE_MS`` (default 1000 ms), and strictly fewer
+    SLO-breach minutes than the no-handling arm of the SAME run.  The
+    campaign must actually exercise crash recovery (>= 1 restart).
+    """
+    rows = doc.get("chaos") or doc.get("chaos_ab") or []
+    if not rows:
+        print("[chaos] no chaos section in fresh run — skipped")
+        return []
+    refreshed = doc.get("refreshed")
+    if refreshed is not None and "chaos" not in refreshed:
+        print("[chaos] section carried over from a previous sweep — skipped")
+        return []
+    max_restore = float(os.environ.get("BENCH_CHAOS_RESTORE_MS", "1000"))
+    failures: list[str] = []
+    by_cap: dict[int, dict[str, dict]] = {}
+    for r in rows:
+        by_cap.setdefault(int(r["session_cap"]), {})[r["arm"]] = r
+
+    def gate(cap, name, value, ok, limit_desc):
+        verdict = "OK " if ok else "REGRESSION"
+        print(f"[chaos cap {cap:>3}] {name}: {value} ({limit_desc}) {verdict}")
+        if not ok:
+            failures.append(f"chaos cap {cap} {name}: {value} ({limit_desc})")
+
+    for cap, arms in sorted(by_cap.items()):
+        on = arms.get("handling")
+        off = arms.get("no-handling")
+        if on is None:
+            continue
+        gate(cap, "crashes", on.get("crashes", 0),
+             int(on.get("crashes", 0)) >= 1,
+             "campaign must include >= 1 controller crash")
+        gate(cap, "invariant_violations", on["invariant_violations"],
+             int(on["invariant_violations"]) == 0, "must be 0")
+        gate(cap, "zombie_committed", on.get("zombie_committed", 0),
+             int(on.get("zombie_committed", 0)) == 0, "must be 0")
+        gate(cap, "max_restore_ms", on.get("max_restore_ms", 0.0),
+             float(on.get("max_restore_ms", 0.0)) <= max_restore,
+             f"must be <= {max_restore}")
+        if off is not None:
+            gate(cap, "slo_breach_minutes", on["slo_breach_minutes"],
+                 on["slo_breach_minutes"] < off["slo_breach_minutes"],
+                 f"must be < no-handling {off['slo_breach_minutes']}")
+    return failures
+
+
 def check_drift(doc: dict) -> list[str]:
     """Sanity gates on the v5 drift rows (calibration-layer liveness).
 
@@ -293,6 +356,7 @@ def main() -> int:
     fresh_doc = json.loads(pathlib.Path(args.fresh).read_text())
     failures: list[str] = check_qos(fresh_doc)
     failures += check_storm(fresh_doc)
+    failures += check_chaos(fresh_doc)
     failures += check_drift(fresh_doc)
     if args.profiles:
         failures += check_profiles(pathlib.Path(args.profiles))

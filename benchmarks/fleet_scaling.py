@@ -52,6 +52,7 @@ from repro.core import (
 from repro.core.placement import repair_capacity, surrogate_cost
 from repro.core.profiling import CapacityProfiler
 from repro.edgesim import (
+    ChaosSpec,
     FailureSpec,
     FleetScenarioParams,
     FleetSimConfig,
@@ -271,20 +272,22 @@ def write_bench_fleet(sections: dict[str, list[dict]],
     seed-paired forecast A/B with onset-ρ / SLO-breach / preemption KPIs)
     and ``resident_fc_cycle_ms`` in the monitor rows; v4 added the ``storm``
     section (seed-paired correlated-node-failure A/B: recovery time,
-    memory-violation minutes, revocation counts); v5 adds the ``drift``
+    memory-violation minutes, revocation counts); v5 added the ``drift``
     section (calibrated-vs-analytic pricing on identical placements, from
-    the committed ``BENCH_profiles.json``).  Sections absent from
+    the committed ``BENCH_profiles.json``); v6 adds the ``chaos`` section
+    (seed-paired control-plane chaos A/B: invariant violations, crash
+    recovery, zombie fencing, SLO-breach minutes).  Sections absent from
     ``sections`` are carried over from the committed file, so a
     ``--monitor``-only refresh never drops the qos baseline (and vice
     versa).
     """
-    doc = {"schema": "bench-fleet/v5",
+    doc = {"schema": "bench-fleet/v6",
            "source": ("benchmarks/fleet_scaling.py "
-                      "--monitor/--qos/--storm/--drift")}
+                      "--monitor/--qos/--storm/--drift/--chaos")}
     if path.exists():
         try:
             old = json.loads(path.read_text())
-            for k in ("monitor", "qos", "storm", "drift"):
+            for k in ("monitor", "qos", "storm", "drift", "chaos"):
                 if k in old:
                     doc[k] = old[k]
         except (json.JSONDecodeError, OSError):
@@ -446,6 +449,91 @@ def failure_storm(*, cap: int = 32, duration_s: float = 60.0,
     return rows
 
 
+def chaos_ab(*, cap: int = 32, duration_s: float = 120.0,
+             monitor_interval_s: float = 0.5,
+             seed: int = 13, chaos_seed: int = 9) -> list[dict]:
+    """Seed-paired control-plane chaos A/B: controller crash/restart, RPC
+    transport faults (drop/duplicate/delay on prepare/commit), and
+    telemetry corruption (NaN utilization + link rows) on the saturated
+    cap-``cap`` fleet, ≥200 monitoring cycles per arm.
+
+    Both arms share one arrival stream AND one pre-drawn chaos campaign
+    (:class:`~repro.edgesim.ChaosSpec`); only the handling differs.
+    OFF = naive control plane: one unfenced RPC attempt per delivery, a
+    restarted controller scrapes the data plane (defer queue, EWMAs,
+    forecast rings, and the broadcast version counter are lost — reissued
+    version numbers break global monotonicity), and poisoned telemetry is
+    priced verbatim (NaN latencies = unserved SLO).  ON = the resilient
+    control plane: journaled crash recovery + epoch fencing of the
+    pre-crash zombie, bounded-retry broadcasts with idempotent agent-side
+    dedup, and the telemetry guard (quarantine + last-good substitution).
+
+    The :class:`~repro.edgesim.InvariantChecker` runs after every
+    monitoring cycle on BOTH arms; ``benchmarks/check_regression.py``
+    gates the ON arm's absolutes (zero invariant violations, zombie never
+    commits, bounded restore wall-time, strictly fewer SLO-breach minutes
+    than OFF).
+    """
+    rows = []
+    spec = ChaosSpec(
+        seed=chaos_seed,
+        # two pinned crashes guarantee the recovery machinery is exercised
+        # whatever the Poisson draw does; the rate adds seed-dependent extras
+        crash_rate_per_s=0.01, min_crash_spacing_s=20.0,
+        crash_times=(0.25 * duration_s, 0.625 * duration_s),
+        rpc_fault_rate_per_s=0.05, rpc_fault_duration_s=6.0,
+        rpc_drop_p=0.2, rpc_dup_p=0.15, rpc_delay_p=0.1,
+        telemetry_rate_per_s=0.04, telemetry_duration_s=4.0,
+    )
+    for handling in (False, True):
+        # moderate load (not the storm benchmark's saturation): baseline
+        # SLO breaches must stay rare so the A/B margin measures what the
+        # CHAOS causes, not what the offered load causes in both arms
+        p = FleetScenarioParams(sim=FleetSimConfig(
+            duration_s=duration_s,
+            tick_s=0.25,
+            monitor_interval_s=monitor_interval_s,
+            max_sessions=cap,
+            initial_sessions=cap // 4,
+            session_arrival_per_s=max(0.2, cap / 90.0),
+            mean_lifetime_s=40.0,
+            seed=seed,
+            admission=True,
+            chaos=spec,
+            chaos_handling=handling,
+        ))
+        sim = build_fleet_scenario(p)
+        t0 = time.perf_counter()
+        res = sim.run()
+        wall = time.perf_counter() - t0
+        k = res.kpis(0.0, duration_s)
+        cs = sim.chaos_stats
+        guard = sim.orch.telemetry_guard
+        rows.append(dict(
+            arm="handling" if handling else "no-handling",
+            session_cap=cap,
+            cycles=int(duration_s / monitor_interval_s),
+            crashes=len(sim._chaos.crash_times),
+            rpc_fault_windows=len(sim._chaos.rpc_windows),
+            telemetry_events=len(sim._chaos.telemetry_events),
+            invariant_violations=len(sim.invariants.violations),
+            controller_restarts=cs["controller_restarts"],
+            zombie_attempts=cs["zombie_attempts"],
+            zombie_fenced=cs["zombie_fenced"],
+            zombie_committed=cs["zombie_committed"],
+            lost_deferred=cs["lost_deferred"],
+            max_restore_ms=round(1e3 * cs["max_restore_wall_s"], 2),
+            degraded_cycles=sim.orch.degraded_cycles,
+            guard_clamped_samples=(guard.clamped_samples
+                                   if guard is not None else 0),
+            slo_breach_minutes=round(k.get("slo_breach_minutes", 0.0), 4),
+            qos_violation_frac=round(k.get("qos_violation_frac", 0.0), 4),
+            p95_latency_ms=round(1e3 * k.get("p95_latency_s", 0.0), 1),
+            sim_wall_s=round(wall, 1),
+        ))
+    return rows
+
+
 def pricing_drift(*, profiles: pathlib.Path | None = None,
                   n_sessions: int = 32, seed: int = 0) -> list[dict]:
     """Calibrated-vs-analytic pricing drift from the committed profiles.
@@ -558,9 +646,12 @@ def main() -> None:  # pragma: no cover
     ap.add_argument("--drift", action="store_true",
                     help="calibrated-vs-analytic pricing drift from the "
                          "committed BENCH_profiles.json")
+    ap.add_argument("--chaos", action="store_true",
+                    help="control-plane chaos A/B (crash recovery, RPC "
+                         "faults, telemetry corruption, invariant checks)")
     args = ap.parse_args()
     run_all = not (args.amortization or args.monitor or args.qos
-                   or args.storm or args.drift)
+                   or args.storm or args.drift or args.chaos)
 
     out: dict[str, list[dict]] = {}
     if run_all or args.amortization:
@@ -614,6 +705,17 @@ def main() -> None:  # pragma: no cover
             print(r)
         if not args.smoke:
             bench_sections["storm"] = out["failure_storm"]
+    if run_all or args.chaos:
+        print("\n== control-plane chaos A/B (crash/restart + RPC faults + "
+              "telemetry corruption, seed-paired handling off/on) ==")
+        out["chaos_ab"] = chaos_ab(
+            cap=8 if args.smoke else 32,
+            duration_s=30.0 if args.smoke else 120.0,
+        )
+        for r in out["chaos_ab"]:
+            print(r)
+        if not args.smoke:
+            bench_sections["chaos"] = out["chaos_ab"]
     if run_all or args.drift:
         print("\n== calibrated-vs-analytic pricing drift (committed "
               "BENCH_profiles.json) ==")

@@ -35,7 +35,13 @@ from .admission import (
     AdmissionVerdict,
     FleetAdmissionController,
 )
-from .broadcast import InProcessAgent, PartitionConfig, ReconfigurationBroadcast
+from .broadcast import (
+    FlakyAgent,
+    InProcessAgent,
+    PartitionConfig,
+    ReconfigurationBroadcast,
+    RolloutPolicy,
+)
 from .cost_model import (
     AnalyticCostModel,
     CostBreakdown,
@@ -49,7 +55,12 @@ from .cost_model import (
     memory_violations_packed,
     phi,
 )
-from .fleet import FleetDecision, FleetOrchestrator, FleetSession
+from .fleet import (
+    FleetDecision,
+    FleetOrchestrator,
+    FleetSession,
+    TelemetryGuard,
+)
 from .forecast import CapacityForecaster, ForecastConfig
 from .fleet_eval import (
     BatchedMigrationSolver,
@@ -109,13 +120,15 @@ __all__ = [
     "CapacityForecaster", "ForecastConfig",
     "CapacityProfiler", "CostBreakdown", "CostWeights", "Decision",
     "DecisionKind", "EWMA", "FleetAdmissionController", "FleetCostEvaluator",
+    "FlakyAgent",
     "FleetDecision", "FleetOrchestrator", "FleetSession", "FleetStateBuffers",
     "GraphNode", "InProcessAgent", "JaxJointSplitter", "ModelGraph",
     "ModelProfile", "NodeSample", "PackedSessions", "PartitionConfig",
     "QOS_BATCH",
     "QOS_CLASSES", "QOS_INTERACTIVE", "QOS_STANDARD", "QoSClass",
     "ReconfigurationBroadcast", "ResidentFleetKernel", "ResidentPrice",
-    "SegmentProfile", "SegmentProfileEntry",
+    "RolloutPolicy",
+    "SegmentProfile", "SegmentProfileEntry", "TelemetryGuard",
     "SessionProblem", "Solution", "SplitRevision", "SplitScheme",
     "SystemState", "Thresholds", "TriggerState", "TrustPolicy", "Workload",
     "assert_privacy_ok", "brute_force_joint", "chain_latency", "evaluate",

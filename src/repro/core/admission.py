@@ -36,7 +36,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .cost_model import (CostModel, Workload, memory_violations, node_loads)
-from .fleet import FleetOrchestrator, FleetSession, session_induced_loads
+from .fleet import (
+    AdmissionRolloutError,
+    FleetOrchestrator,
+    FleetSession,
+    session_induced_loads,
+)
 from .graph import ModelGraph
 from .placement import Solution
 from .splitter import PackedProblem, SessionProblem, coalesce_same_node
@@ -238,7 +243,7 @@ class FleetAdmissionController:
                 AdmissionKind.REJECT,
                 reason=f"session cap {self.max_sessions} reached",
             )
-        state = orch.profiler.system_state()
+        state = orch.observed_state(now=now)
         table = self._fleet_table(state, now)
         # the capacity the fleet load is folded into: worst case within the
         # forecast horizon when available, the instantaneous C(t) otherwise
@@ -330,11 +335,17 @@ class FleetAdmissionController:
                             f"{slo[i]*1e3:.0f}ms SLO){fc}"),
                 )
 
-        sid = orch.admit(
-            graph, req.workload, source_node=req.source_node,
-            arch=req.arch, now=now, qos=req.qos, solution=sol,
-            prepacked=prepacked,
-        )
+        try:
+            sid = orch.admit(
+                graph, req.workload, source_node=req.source_node,
+                arch=req.arch, now=now, qos=req.qos, solution=sol,
+                prepacked=prepacked,
+            )
+        except AdmissionRolloutError as e:
+            # deploy broadcast aborted (transport faults, fenced epoch) —
+            # capacity was fine, so DEFER and retry when the path heals
+            return AdmissionVerdict(AdmissionKind.DEFER, None, lat,
+                                    reason=str(e))
         return AdmissionVerdict(AdmissionKind.ACCEPT, sid, lat,
                                 reason="within SLO and rho ceiling",
                                 solution=sol)
@@ -378,7 +389,7 @@ class FleetAdmissionController:
         """
         orch = self.orchestrator
         if state is None:
-            state = orch.profiler.system_state()
+            state = orch.observed_state(now=now)
         out: list[tuple[FleetSession, AdmissionRequest | None]] = []
         while orch.sessions:
             wb = {
@@ -443,3 +454,62 @@ class FleetAdmissionController:
             **{f"preempted_{name}": float(v)
                for name, v in sorted(self.preempted_by_class.items())},
         }
+
+    # ------------------------------------------------------------------ #
+    # crash-recoverable state: the defer queue + counters fold into the
+    # orchestrator journal (FleetOrchestrator.state_dict(admission=...)).
+    # Before this, a controller restart silently rejected every deferred
+    # request by losing it — the queue is the one place a *not-yet-admitted*
+    # tenant's state lives.
+    # ------------------------------------------------------------------ #
+    def state_dict(self) -> dict:
+        from .fleet import _graph_to_dict, _qos_to_dict, _workload_to_dict
+        return {
+            "counters": dict(self.counters),
+            "preempted_by_class": dict(self.preempted_by_class),
+            "queue": [
+                {
+                    "deadline": float(deadline),
+                    "request": {
+                        "graph": _graph_to_dict(req.graph),
+                        "workload": _workload_to_dict(req.workload),
+                        "source_node": req.source_node,
+                        "arch": req.arch,
+                        "qos": _qos_to_dict(req.qos),
+                        "input_bytes_per_token": req.input_bytes_per_token,
+                        "t_submit": req.t_submit,
+                        "preempted": req.preempted,
+                    },
+                }
+                # the packed-problem tensors are device state, rebuilt
+                # lazily by _prepack on the first post-restore poll
+                for deadline, req, _pp in self._queue
+            ],
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        from .cost_model import Workload
+        from .fleet import _graph_from_dict, _qos_from_dict
+        self.counters.update({k: int(v) for k, v in d["counters"].items()})
+        self.preempted_by_class = {
+            k: int(v) for k, v in d["preempted_by_class"].items()
+        }
+        self._queue = deque(
+            (
+                float(e["deadline"]),
+                AdmissionRequest(
+                    graph=_graph_from_dict(r["graph"]),
+                    workload=Workload(**r["workload"]),
+                    source_node=int(r["source_node"]),
+                    arch=r["arch"],
+                    qos=_qos_from_dict(r["qos"]),
+                    input_bytes_per_token=float(r["input_bytes_per_token"]),
+                    t_submit=float(r["t_submit"]),
+                    preempted=bool(r["preempted"]),
+                ),
+                None,
+            )
+            for e in d["queue"]
+            for r in [e["request"]]
+        )
+        self._table_key, self._table_cache = (), None

@@ -51,6 +51,9 @@ writer (see the fleet-state lifecycle note in :mod:`repro.core.fleet_eval`).
 
 from __future__ import annotations
 
+import json
+import os
+import tempfile
 import time
 from dataclasses import dataclass, field
 
@@ -80,7 +83,7 @@ from .fleet_eval import (
     packed_induced_loads,
 )
 from .forecast import CapacityForecaster
-from .graph import ModelGraph
+from .graph import GraphNode, ModelGraph
 from .orchestrator import Decision, DecisionKind
 from .placement import Solution, local_search
 from .profiling import CapacityProfiler
@@ -107,7 +110,19 @@ if TYPE_CHECKING:
     # admission -> fleet); the field is plain data, never constructed here
     from ..distributed.fault_tolerance import HeartbeatRegistry
 
-__all__ = ["FleetSession", "FleetDecision", "FleetOrchestrator"]
+__all__ = ["FleetSession", "FleetDecision", "FleetOrchestrator",
+           "TelemetryGuard", "JOURNAL_SCHEMA", "AdmissionRolloutError"]
+
+JOURNAL_SCHEMA = "fleet-journal/v1"
+
+
+class AdmissionRolloutError(RuntimeError):
+    """The two-phase deploy broadcast aborted during session admission.
+
+    Raised instead of silently dropping the session so the admission
+    controller can DEFER the request (a transport fault is transient — the
+    defer queue retries it) rather than treat it as a capacity rejection.
+    """
 
 
 @dataclass
@@ -195,6 +210,221 @@ def session_induced_loads(
 
 
 @dataclass
+class TelemetryGuard:
+    """Degraded-mode telemetry firewall in front of every pricing consumer.
+
+    Real monitoring pipelines emit garbage: a scrape races a counter reset
+    and a node's utilization arrives as NaN, a link probe divides by zero.
+    Before this guard, one such sample flowed straight into the fused
+    pricing dispatch and every output — latencies, trigger EWMAs, forecast
+    rings — went NaN *permanently* (NaN compares false, so no trigger ever
+    fired again).
+
+    ``sanitize`` replaces a corrupt node's telemetry with its **last-good
+    sample** and marks the node *quarantined* — a trigger-visible class
+    distinct from ``node-fail``: the hardware is presumed alive (heartbeats
+    still arrive), only its measurements are untrusted, so sessions on it
+    are re-evaluated through the ordinary cooldown/throttle gate rather
+    than force-committed.  A node corrupt for longer than
+    ``staleness_budget_s`` stops being priced off stale data and degrades
+    to conservative capacity (util 0.99, zero model memory, floor links) —
+    the same shape a dead node takes — which makes migrating off it
+    attractive.  Clean telemetry passes through untouched (same object, so
+    guarded runs are bit-identical to unguarded ones until a fault).
+    """
+
+    staleness_budget_s: float = 30.0
+    clamped_samples: int = 0
+    _last_good: SystemState | None = None
+    _bad_since: dict[int, float] = field(default_factory=dict)
+
+    @property
+    def quarantined(self) -> tuple[int, ...]:
+        return tuple(sorted(self._bad_since))
+
+    @staticmethod
+    def _bad_nodes(state: SystemState) -> np.ndarray:
+        lbw = np.asarray(state.link_bw, dtype=np.float64)
+        llat = np.asarray(state.link_lat, dtype=np.float64)
+        return (
+            ~np.isfinite(np.asarray(state.background_util, dtype=np.float64))
+            | np.isnan(np.asarray(state.flops_per_s, dtype=np.float64))
+            | np.isnan(np.asarray(state.mem_bytes, dtype=np.float64))
+            | np.isnan(np.asarray(state.mem_bw, dtype=np.float64))
+            | np.isnan(lbw).any(axis=1) | np.isnan(lbw).any(axis=0)
+            | np.isnan(llat).any(axis=1) | np.isnan(llat).any(axis=0)
+        )
+
+    def _substitute(self, st: SystemState, n: int, now: float) -> None:
+        good = self._last_good
+        fresh = (good is not None
+                 and now - self._bad_since[n] <= self.staleness_budget_s)
+        if fresh:
+            st.background_util[n] = good.background_util[n]
+            st.flops_per_s[n] = good.flops_per_s[n]
+            st.mem_bytes[n] = good.mem_bytes[n]
+            st.mem_bw[n] = good.mem_bw[n]
+            st.link_bw[n, :] = good.link_bw[n, :]
+            st.link_bw[:, n] = good.link_bw[:, n]
+            st.link_lat[n, :] = good.link_lat[n, :]
+            st.link_lat[:, n] = good.link_lat[:, n]
+            return
+        # stale beyond budget (or never seen good): conservative degraded
+        # capacity — dead-node shaped, so placement flows away from it
+        st.background_util[n] = 0.99
+        st.mem_bytes[n] = 0.0
+        st.flops_per_s[n] = max(1.0, float(np.nan_to_num(st.flops_per_s[n],
+                                                         nan=1.0)))
+        st.mem_bw[n] = max(1.0, float(np.nan_to_num(st.mem_bw[n], nan=1.0)))
+        off = np.arange(st.num_nodes) != n
+        st.link_bw[n, off] = 1.0
+        st.link_bw[off, n] = 1.0
+        st.link_bw[n, n] = np.inf
+        st.link_lat[n, :] = np.nan_to_num(st.link_lat[n, :], nan=0.0)
+        st.link_lat[:, n] = np.nan_to_num(st.link_lat[:, n], nan=0.0)
+
+    def sanitize(self, state: SystemState,
+                 now: float | None = None) -> SystemState:
+        """Return a telemetry-trustworthy view of ``state``.
+
+        Clean input with no live quarantine returns the SAME object (the
+        zero-overhead fast path); otherwise a sanitized copy.
+        """
+        bad = self._bad_nodes(state)
+        t = 0.0 if now is None else float(now)
+        if not bad.any():
+            if self._bad_since:
+                self._bad_since.clear()
+            self._last_good = state.copy()
+            return state
+        st = state.copy()
+        for n in np.flatnonzero(bad):
+            n = int(n)
+            self.clamped_samples += 1
+            self._bad_since.setdefault(n, t)
+            self._substitute(st, n, t)
+        for n in [n for n in self._bad_since if not bad[n]]:
+            del self._bad_since[n]
+        # remember the sanitized view: good nodes carry fresh telemetry,
+        # quarantined ones their last-good (keeps substitution stable)
+        self._last_good = st.copy()
+        return st
+
+    # -- snapshot ------------------------------------------------------- #
+    def state_dict(self) -> dict:
+        d: dict = {
+            "staleness_budget_s": self.staleness_budget_s,
+            "clamped_samples": self.clamped_samples,
+            "bad_since": {str(k): v for k, v in self._bad_since.items()},
+            "last_good": None,
+        }
+        if self._last_good is not None:
+            d["last_good"] = _state_to_dict(self._last_good)
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        self.staleness_budget_s = float(d["staleness_budget_s"])
+        self.clamped_samples = int(d["clamped_samples"])
+        self._bad_since = {int(k): float(v)
+                           for k, v in d["bad_since"].items()}
+        self._last_good = (None if d["last_good"] is None
+                           else _state_from_dict(d["last_good"]))
+
+
+# --------------------------------------------------------------------- #
+# journal (de)serialization helpers — plain-data codecs for the snapshot
+# --------------------------------------------------------------------- #
+def _graph_to_dict(g: ModelGraph) -> dict:
+    return {"name": g.name, "nodes": [
+        [n.name, float(n.flops), float(n.weight_bytes),
+         float(n.act_out_bytes), bool(n.privacy_critical)] for n in g.nodes
+    ]}
+
+
+def _graph_from_dict(d: dict) -> ModelGraph:
+    return ModelGraph(d["name"], [
+        GraphNode(nm, fl, wb, ab, bool(pv)) for nm, fl, wb, ab, pv in d["nodes"]
+    ])
+
+
+def _state_to_dict(st: SystemState) -> dict:
+    return {
+        "flops_per_s": np.asarray(st.flops_per_s, dtype=np.float64).tolist(),
+        "mem_bytes": np.asarray(st.mem_bytes, dtype=np.float64).tolist(),
+        "background_util": np.asarray(st.background_util,
+                                      dtype=np.float64).tolist(),
+        "trusted": np.asarray(st.trusted, dtype=bool).tolist(),
+        "link_bw": np.asarray(st.link_bw, dtype=np.float64).tolist(),
+        "link_lat": np.asarray(st.link_lat, dtype=np.float64).tolist(),
+        "mem_bw": np.asarray(st.mem_bw, dtype=np.float64).tolist(),
+        "names": list(st.names),
+    }
+
+
+def _state_from_dict(d: dict) -> SystemState:
+    return SystemState(
+        flops_per_s=np.asarray(d["flops_per_s"], dtype=np.float64),
+        mem_bytes=np.asarray(d["mem_bytes"], dtype=np.float64),
+        background_util=np.asarray(d["background_util"], dtype=np.float64),
+        trusted=np.asarray(d["trusted"], dtype=bool),
+        link_bw=np.asarray(d["link_bw"], dtype=np.float64),
+        link_lat=np.asarray(d["link_lat"], dtype=np.float64),
+        mem_bw=np.asarray(d["mem_bw"], dtype=np.float64),
+        names=tuple(d["names"]),
+    )
+
+
+def _qos_to_dict(q: QoSClass | None) -> dict | None:
+    if q is None:
+        return None
+    return {"name": q.name, "latency_slo_s": q.latency_slo_s,
+            "defer_timeout_s": q.defer_timeout_s}
+
+
+def _qos_from_dict(d: dict | None) -> QoSClass | None:
+    if d is None:
+        return None
+    from .triggers import QOS_CLASSES
+    q = QOS_CLASSES.get(d["name"])
+    if (q is not None and q.latency_slo_s == d["latency_slo_s"]
+            and q.defer_timeout_s == d["defer_timeout_s"]):
+        return q
+    return QoSClass(**d)
+
+
+def _config_to_dict(c: PartitionConfig | None) -> dict | None:
+    if c is None:
+        return None
+    return {"version": c.version, "boundaries": list(c.boundaries),
+            "assignment": list(c.assignment), "reason": c.reason,
+            "issued_at": c.issued_at, "session": c.session, "epoch": c.epoch}
+
+
+def _config_from_dict(d: dict | None) -> PartitionConfig | None:
+    if d is None:
+        return None
+    return PartitionConfig(
+        version=int(d["version"]), boundaries=tuple(d["boundaries"]),
+        assignment=tuple(d["assignment"]), reason=d["reason"],
+        issued_at=float(d["issued_at"]), session=d["session"],
+        epoch=int(d.get("epoch", 0)),
+    )
+
+
+def _workload_to_dict(w: Workload) -> dict:
+    return {"tokens_in": w.tokens_in, "tokens_out": w.tokens_out,
+            "arrival_rate": w.arrival_rate}
+
+
+def _ewma_to_list(e: EWMA) -> list:
+    return [e.alpha, e.value]
+
+
+def _ewma_from_list(v: list) -> EWMA:
+    return EWMA(float(v[0]), None if v[1] is None else float(v[1]))
+
+
+@dataclass
 class FleetOrchestrator:
     """Adaptive Split Orchestration over a set of concurrent sessions."""
 
@@ -240,6 +470,13 @@ class FleetOrchestrator:
     # throttle, AND the commit hysteresis — a storm is just a large
     # triggered set riding the existing fused migrate/re-split dispatches
     heartbeats: HeartbeatRegistry | None = None
+
+    # degraded-mode telemetry firewall (None → trust telemetry verbatim);
+    # clean samples pass through bit-identically, so the guard is on by
+    # default
+    telemetry_guard: TelemetryGuard | None = field(
+        default_factory=TelemetryGuard)
+    degraded_cycles: int = 0           # fused-price-was-NaN KEEP-all cycles
 
     sessions: dict[int, FleetSession] = field(default_factory=dict)
     decisions: list[FleetDecision] = field(default_factory=list)
@@ -386,6 +623,20 @@ class FleetOrchestrator:
             state_args=state_args, forecaster=self.forecaster, now=now,
         )
 
+    def observed_state(self, state: SystemState | None = None,
+                       now: float | None = None) -> SystemState:
+        """C(t) as every pricing consumer should see it: profiler output
+        (or an explicitly supplied sample) passed through the telemetry
+        guard.  The single choke point for degraded-mode handling — the
+        monitoring cycle, the per-tick fleet pricing, and admission all
+        route here, so one corrupt scrape can't reach the fused kernels
+        from any entry."""
+        if state is None:
+            state = self.profiler.system_state()
+        if self.telemetry_guard is not None:
+            state = self.telemetry_guard.sanitize(state, now)
+        return state
+
     def forecast_base(self, state: SystemState) -> SystemState:
         """C(t) floored at the worst case within the forecast horizon.
 
@@ -473,8 +724,7 @@ class FleetOrchestrator:
         the (n,) totals come back to host.  ``now`` lets the forecaster
         treat the tick as an observation (sample-interval gated).
         """
-        if state is None:
-            state = self.profiler.system_state()
+        state = self.observed_state(state, now)
         sids = list(self.sessions)
         if not sids:
             return [], np.zeros(0), state.background_util.astype(float).copy()
@@ -563,7 +813,12 @@ class FleetOrchestrator:
             now=now, session=sid,
         )
         if cfg is None:
-            raise RuntimeError(f"admission rollout failed for session {sid}")
+            # two-phase deploy aborted (transport faults / fenced zombie
+            # epoch): the session never existed — give its sid back so the
+            # caller can retry later without burning the id space
+            self._next_sid -= 1
+            raise AdmissionRolloutError(
+                f"admission rollout failed for session {sid}")
         sess.config = cfg
         sess.t_last_reconfig = now
         self.sessions[sid] = sess
@@ -706,7 +961,9 @@ class FleetOrchestrator:
         idle node (the herd guard).
         """
         t0 = time.perf_counter()
-        state = self.profiler.system_state()
+        state = self.observed_state(now=now)
+        qnodes: set[int] = (set(self.telemetry_guard.quarantined)
+                            if self.telemetry_guard is not None else set())
         # liveness first: the node-fail trigger class is computed from the
         # heartbeat registry, not from C(t) — a node whose capacity traces
         # merely degrade is handled by the ordinary util/bw triggers
@@ -756,6 +1013,31 @@ class FleetOrchestrator:
                 rlist, price.lat_fc, price.max_util_fc, price.min_bw_fc
             )
         eval_t = time.perf_counter() - t_ev
+        if (np.isnan(lat_h).any() or np.isnan(util_h).any()
+                or np.isnan(bw_h).any()):
+            # degraded cycle: the fused price itself is poisoned (telemetry
+            # the guard never saw, or the guard is off).  Committing on NaN
+            # comparisons would be garbage-in-garbage-out — KEEP every
+            # incumbent, leave the trigger EWMAs untouched, and count it.
+            self.degraded_cycles += 1
+            for i, sid in enumerate(sids):
+                sess = self.sessions[sid]
+                per_session[sid] = Decision(
+                    DecisionKind.KEEP, sess.config, ("degraded-pricing",),
+                    float(lat_h[i]), 0.0,
+                )
+            fd = FleetDecision(
+                t=now, per_session=per_session,
+                solver_time_s=time.perf_counter() - t0,
+                n_keep=len(sids), n_migrate=0, n_resplit=0, n_cooldown=0,
+                eval_time_s=eval_t,
+                pack_time_s=buf.stats["pack_time_s"] - pack0,
+                n_node_fail=len(storm), dead_nodes=tuple(sorted(dead_set)),
+            )
+            self.decisions.append(fd)
+            for sid, d in per_session.items():
+                self.sessions[sid].decisions.append(d)
+            return fd
         cur_lat = {sid: float(lat_h[i]) for i, sid in enumerate(sids)}
         # candidate-vs-incumbent comparisons run on ONE consistent pricing:
         # forecast worst-case when the forecaster rides, instantaneous else
@@ -787,6 +1069,28 @@ class FleetOrchestrator:
                 env, th, now=now, t_last_reconfig=sess.t_last_reconfig,
                 throttle=sess.throttle,
             )
+            if (gate == "keep" and qnodes and sess.config is not None
+                    and any(n in qnodes for n in sess.config.assignment)):
+                # telemetry-quarantine trigger class: the session's chain
+                # crosses a node whose measurements are untrusted.  Unlike
+                # node-fail the hardware is presumed alive, so the solve is
+                # gated by the ordinary cooldown/throttle (no force-commit,
+                # no EWMA reset) — it just stops waiting for thresholds
+                # computed from telemetry we no longer believe.
+                touched = sorted(set(sess.config.assignment) & qnodes)
+                envq = TriggerState(
+                    ewma_latency_s=env.ewma_latency_s,
+                    max_node_util=env.max_node_util,
+                    min_link_bw_bps=env.min_link_bw_bps,
+                    reasons=[f"telemetry-quarantine: node(s) {touched}"],
+                    kinds=("quarantine",),
+                )
+                gq = decision_gate(
+                    envq, th, now=now, t_last_reconfig=sess.t_last_reconfig,
+                    throttle=sess.throttle, prefired=True,
+                )
+                if gq == "solve":
+                    env, gate = envq, "solve"
             if gate == "keep" and use_fc:
                 # proactive trigger: the observed env is inside Θ but the
                 # predicted env within the horizon is not — enter the
@@ -1114,3 +1418,221 @@ class FleetOrchestrator:
         per_session[sid] = Decision(kind, cfg, reasons, chosen_lat, 0.0)
         self._upsert_row(sess)
         return True
+
+    # ------------------------------------------------------------------ #
+    # crash-recoverable control-plane state (the journal)
+    # ------------------------------------------------------------------ #
+    # The orchestrator is the one unreplicated failure domain in the stack:
+    # before this, a controller restart silently dropped every session's
+    # trigger/cooldown/throttle context, the admission defer queue, the
+    # heartbeat registry, and the broadcast version counter (only the
+    # forecast ring persisted, PR 6).  ``state_dict``/``save``/``load``
+    # snapshot ALL control-plane state that affects future decisions; the
+    # device-resident buffers are deliberately NOT serialized — a cold
+    # ``_resident()`` rebuild is bit-identical to the incremental state
+    # (test-enforced since PR 3), so restore + rebuild continues exactly
+    # where the crashed controller left off.
+
+    def state_dict(self, *, admission=None) -> dict:
+        """Plain-data snapshot: ``{"meta": json-able, "forecast": arrays}``.
+
+        ``admission`` (a :class:`~repro.core.admission.FleetAdmissionController`)
+        folds the defer queue + counters into the same snapshot so a restart
+        while requests wait in the queue loses none of them.
+        """
+        sessions = []
+        for sid, s in self.sessions.items():
+            sessions.append({
+                "sid": sid,
+                "graph": _graph_to_dict(s.graph),
+                "workload": _workload_to_dict(s.workload),
+                "source_node": s.source_node,
+                "arch": s.arch,
+                "input_bytes_per_token": s.input_bytes_per_token,
+                "qos": _qos_to_dict(s.qos),
+                "config": _config_to_dict(s.config),
+                "ewma": _ewma_to_list(s.ewma_latency),
+                "t_admitted": s.t_admitted,
+                "t_last_reconfig": s.t_last_reconfig,
+                "throttle": {
+                    "backoff_s": s.throttle.backoff_s,
+                    "tol_frac": s.throttle.tol_frac,
+                    "t_last": s.throttle.t_last,
+                    "kinds": list(s.throttle.kinds),
+                    "ewma": s.throttle.ewma,
+                },
+            })
+        p = self.profiler
+        meta: dict = {
+            "schema": JOURNAL_SCHEMA,
+            "next_sid": self._next_sid,
+            "degraded_cycles": self.degraded_cycles,
+            "sessions": sessions,
+            "broadcast": {"version": self.broadcast._version,
+                          "epoch": self.broadcast.epoch},
+            "profiler": {
+                "ewma_alpha": p.ewma_alpha,
+                "base_state": _state_to_dict(p.base_state),
+                "util": {str(n): _ewma_to_list(e)
+                         for n, e in p._util.items()},
+                "util_total": {str(n): _ewma_to_list(e)
+                               for n, e in p._util_total.items()},
+                "lat": _ewma_to_list(p._lat),
+                "link_bw": (None if p._link_bw is None
+                            else np.asarray(p._link_bw,
+                                            dtype=np.float64).tolist()),
+            },
+            "heartbeats": None,
+            "guard": (None if self.telemetry_guard is None
+                      else self.telemetry_guard.state_dict()),
+            "admission": None if admission is None else admission.state_dict(),
+        }
+        hb = self.heartbeats
+        if hb is not None:
+            meta["heartbeats"] = {
+                "nodes": list(hb.nodes),
+                "miss_limit": hb.miss_limit,
+                "last_beat": {str(n): t for n, t in hb._last_beat.items()},
+                "dead": sorted(hb._dead),
+                "revived": list(hb._revived),
+                "tick": hb._tick,
+            }
+        fc = self.forecaster.state_dict() if self.forecaster is not None else {}
+        return {"meta": meta, "forecast": fc}
+
+    def load_state_dict(self, sd: dict, *, admission=None,
+                        claim_epoch: bool = True,
+                        reseed_agents: bool = False) -> None:
+        """Restore a :meth:`state_dict` snapshot into this orchestrator.
+
+        Call on a freshly constructed orchestrator wired to the surviving
+        data plane (the broadcast agents keep their committed configs across
+        a *controller* crash).  ``claim_epoch`` fences the pre-crash zombie:
+        the restored controller bumps every agent's epoch, so any in-flight
+        rollout from the dead controller is rejected at prepare.
+        ``reseed_agents`` additionally re-stamps each session's active
+        config onto its agents — for recovery drills where the data plane
+        restarted too.
+        """
+        meta = sd["meta"]
+        if meta.get("schema") != JOURNAL_SCHEMA:
+            raise ValueError(f"unknown journal schema {meta.get('schema')!r}")
+        self.sessions.clear()
+        for e in meta["sessions"]:
+            thr = e["throttle"]
+            sess = FleetSession(
+                sid=int(e["sid"]),
+                graph=_graph_from_dict(e["graph"]),
+                workload=Workload(**e["workload"]),
+                source_node=int(e["source_node"]),
+                arch=e["arch"],
+                input_bytes_per_token=float(e["input_bytes_per_token"]),
+                qos=_qos_from_dict(e["qos"]),
+                config=_config_from_dict(e["config"]),
+                ewma_latency=_ewma_from_list(e["ewma"]),
+                t_admitted=float(e["t_admitted"]),
+                t_last_reconfig=float(e["t_last_reconfig"]),
+                throttle=SolveThrottle(
+                    backoff_s=float(thr["backoff_s"]),
+                    tol_frac=float(thr["tol_frac"]),
+                    t_last=float(thr["t_last"]),
+                    kinds=tuple(thr["kinds"]),
+                    ewma=float(thr["ewma"]),
+                ),
+            )
+            self.sessions[sess.sid] = sess
+        self._next_sid = int(meta["next_sid"])
+        self.degraded_cycles = int(meta["degraded_cycles"])
+        self.broadcast._version = int(meta["broadcast"]["version"])
+        self.broadcast.epoch = int(meta["broadcast"]["epoch"])
+        # profiler EWMAs feed every future C(t): restore in place
+        pm = meta["profiler"]
+        p = self.profiler
+        p.ewma_alpha = float(pm["ewma_alpha"])
+        p.base_state = _state_from_dict(pm["base_state"])
+        p._util = {int(n): _ewma_from_list(v) for n, v in pm["util"].items()}
+        p._util_total = {int(n): _ewma_from_list(v)
+                         for n, v in pm["util_total"].items()}
+        p._lat = _ewma_from_list(pm["lat"])
+        p._link_bw = (None if pm["link_bw"] is None
+                      else np.asarray(pm["link_bw"], dtype=np.float64))
+        if meta["heartbeats"] is not None:
+            from ..distributed.fault_tolerance import HeartbeatRegistry
+            hm = meta["heartbeats"]
+            hb = HeartbeatRegistry(nodes=list(hm["nodes"]),
+                                   miss_limit=int(hm["miss_limit"]))
+            hb._last_beat = {int(n): int(t)
+                             for n, t in hm["last_beat"].items()}
+            hb._dead = set(hm["dead"])
+            hb._revived = list(hm["revived"])
+            hb._tick = int(hm["tick"])
+            self.heartbeats = hb
+        else:
+            self.heartbeats = None
+        if meta["guard"] is not None:
+            if self.telemetry_guard is None:
+                self.telemetry_guard = TelemetryGuard()
+            self.telemetry_guard.load_state_dict(meta["guard"])
+        else:
+            self.telemetry_guard = None
+        fc = sd.get("forecast") or {}
+        if fc:
+            if self.forecaster is None:
+                raise ValueError(
+                    "journal carries forecast state but this orchestrator "
+                    "has no forecaster — construct it with the same "
+                    "ForecastConfig before loading")
+            self.forecaster.load_state_dict(fc)
+        if admission is not None and meta["admission"] is not None:
+            admission.load_state_dict(meta["admission"])
+        if reseed_agents:
+            for sid, sess in self.sessions.items():
+                if sess.config is None:
+                    continue
+                hosting = set(sess.config.assignment)
+                for a in self.broadcast.agents:
+                    inner = a.inner if hasattr(a, "inner") else a
+                    if inner.node_id in hosting:
+                        inner.active_by[sid] = sess.config
+        if claim_epoch:
+            self.broadcast.claim_epoch()
+        self.decisions.clear()
+        self.invalidate_resident_state()
+
+    def save(self, path, *, admission=None) -> None:
+        """Atomically persist :meth:`state_dict` as one ``.npz`` journal.
+
+        Same publish discipline as :mod:`repro.checkpoint`: write to a
+        temporary file in the destination directory, then ``os.replace`` —
+        a crash mid-save leaves the previous journal intact, never a torn
+        one.
+        """
+        sd = self.state_dict(admission=admission)
+        blob = json.dumps(sd["meta"]).encode("utf-8")
+        arrays: dict[str, np.ndarray] = {
+            "meta": np.frombuffer(blob, dtype=np.uint8)
+        }
+        for k, v in sd["forecast"].items():
+            arrays[f"fc__{k}"] = np.asarray(v)
+        path = os.fspath(path)
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(path) or ".", suffix=".journal.tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def load(self, path, *, admission=None, claim_epoch: bool = True,
+             reseed_agents: bool = False) -> None:
+        """Restore a :meth:`save` journal (see :meth:`load_state_dict`)."""
+        with np.load(os.fspath(path), allow_pickle=False) as z:
+            meta = json.loads(bytes(z["meta"].tobytes()).decode("utf-8"))
+            fc = {k[4:]: np.array(z[k]) for k in z.files
+                  if k.startswith("fc__")}
+        self.load_state_dict({"meta": meta, "forecast": fc},
+                             admission=admission, claim_epoch=claim_epoch,
+                             reseed_agents=reseed_agents)

@@ -105,15 +105,26 @@ def seasonal_update(ring, resid, idx, count, y, advance, alpha: float):
     nor the advance gate recompiles the program.  When ``advance`` is false
     the inputs pass through unchanged (a read-only pricing dispatch).
     Returns ``(ring', resid')``.
+
+    Non-finite elements of ``y`` are skipped element-wise: one NaN capacity
+    sample used to enter the ring AND the residual EWMA, and because both
+    recursions feed the sample forward, every future forecast for that node
+    went NaN *permanently* (which admission then read as worst-case
+    capacity ∞/NaN).  A poisoned element keeps its season-old ring value
+    and its previous residual instead — skip-and-hold, bit-identical for
+    finite inputs.
     """
     import jax.numpy as jnp
 
     S = ring.shape[0]
     yhat = ring[idx]                      # prediction made one season ago
+    ok = jnp.isfinite(y)
+    y_safe = jnp.where(ok, y, yhat)       # poisoned element: hold the prior
     seen = count >= S                     # slot idx only valid after 1 season
     upd = advance & seen
-    resid2 = jnp.where(upd, alpha * (y - yhat) + (1.0 - alpha) * resid, resid)
-    ring2 = ring.at[idx].set(jnp.where(advance, y, yhat))
+    resid2 = jnp.where(
+        upd & ok, alpha * (y_safe - yhat) + (1.0 - alpha) * resid, resid)
+    ring2 = ring.at[idx].set(jnp.where(advance, y_safe, yhat))
     return ring2, resid2
 
 
@@ -187,6 +198,9 @@ class CapacityForecaster:
         # host copies of the latest worst-case capacity (admission pricing)
         self.bg_wc: np.ndarray | None = None
         self.bw_wc: np.ndarray | None = None
+        # non-finite sample elements skipped by the update guard (counted
+        # where the sample is host-visible; the fused path skips silently)
+        self.bad_samples = 0
 
     # -- state ---------------------------------------------------------- #
     @property
@@ -359,7 +373,11 @@ class CapacityForecaster:
         n = bg.shape[0]
         bw = (np.full((n, n), np.inf) if link_bw is None
               else np.asarray(link_bw, dtype=np.float64))
-        bw = np.nan_to_num(bw, posinf=1e30)
+        self.bad_samples += int((~np.isfinite(bg)).sum()
+                                + np.isnan(bw).sum())
+        # +inf is the legitimate "local link" encoding → clamp to BIG; NaN
+        # is poison → keep it NaN so the update guard skips-and-holds
+        bw = np.nan_to_num(bw, nan=np.nan, posinf=1e30)
         (args, adv) = self.kernel_args(n, now)
         util_ring, bw_ring, resid_u, resid_b, idx, count, advance = args
         a = self.cfg.residual_alpha

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass, field
 
 __all__ = ["Thresholds", "TriggerState", "should_reconfigure", "EWMA",
@@ -62,6 +63,10 @@ class EWMA:
         self.value: float | None = init
 
     def update(self, x: float) -> float:
+        # a non-finite sample would stick in the recursion forever (NaN in,
+        # NaN out for every future update) — skip it, hold the last value
+        if not math.isfinite(x):
+            return self.get(x)
         self.value = x if self.value is None else (
             self.alpha * x + (1.0 - self.alpha) * self.value
         )

@@ -1,5 +1,6 @@
 """5G-MEC edge-environment simulator (paper §IV scenario + fleet mode)."""
 
+from .chaos import ChaosInjector, ChaosSpec, InvariantChecker
 from .failures import FailureInjector, FailureSpec
 from .scenario import (
     FleetScenarioParams,
@@ -26,9 +27,11 @@ from .simulator import (
 from .traces import Trace, constant, ou_process, square_wave
 
 __all__ = [
-    "EdgeSimulator", "FailureInjector", "FailureSpec", "FleetScenarioParams",
+    "ChaosInjector", "ChaosSpec", "EdgeSimulator", "FailureInjector",
+    "FailureSpec", "FleetScenarioParams",
     "FleetSimConfig", "FleetSimResult",
-    "FleetSimulator", "FleetTickMetrics", "MECScenarioParams", "SimConfig",
+    "FleetSimulator", "FleetTickMetrics", "InvariantChecker",
+    "MECScenarioParams", "SimConfig",
     "SimResult", "TickMetrics", "Trace", "base_system_state",
     "build_fleet_scenario", "build_mec_scenario", "constant",
     "fleet_model_catalog", "llama3_8b_graph", "mec_traces", "ou_process",

@@ -25,6 +25,9 @@ Two modes share the trace plumbing:
 from __future__ import annotations
 
 import heapq
+import os
+import tempfile
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -48,6 +51,7 @@ from ..core.orchestrator import AdaptiveOrchestrator, DecisionKind
 from ..core.profiling import CapacityProfiler, NodeSample
 from ..core.triggers import QOS_CLASSES, QoSClass
 from ..distributed.fault_tolerance import HeartbeatRegistry
+from .chaos import ChaosInjector, ChaosSpec, InvariantChecker
 from .failures import FailureInjector, FailureSpec
 from .traces import Trace
 
@@ -270,6 +274,19 @@ class FleetSimConfig:
     # how long a preempted session waits in the defer queue for capacity to
     # return (None → its QoS class's admission defer patience)
     preempt_patience_s: float | None = None
+    # control-plane chaos (PR 8): a ChaosSpec pre-draws controller crashes,
+    # RPC transport faults, and telemetry-corruption windows from its own
+    # seed.  ``chaos_handling=True`` arms the resilient control plane —
+    # journaled crash recovery (state restored from the npz journal, epoch
+    # fencing against the pre-crash zombie), retrying fenced broadcasts, and
+    # the telemetry guard.  ``False`` is the naive seed-paired OFF arm: the
+    # restarted controller scrapes the data plane (defer queue, EWMAs,
+    # forecast rings, and the version counter are simply lost), rollouts get
+    # one unfenced attempt, and corrupt telemetry is trusted verbatim.
+    chaos: "ChaosSpec | None" = None
+    chaos_handling: bool = True
+    # where the ON arm journals orchestrator state (None → a temp file)
+    journal_path: str | None = None
 
 
 @dataclass
@@ -311,8 +328,14 @@ class FleetSimResult:
         if not w:
             return {}
         # pool (tick, session) samples so p95 is a true tail percentile,
-        # comparable to the single-session SimResult KPI of the same name
+        # comparable to the single-session SimResult KPI of the same name.
+        # A poisoned-telemetry arm (chaos, PR 8) can price NaN latencies /
+        # rho for a few ticks; those count as SLO breaches in
+        # qos_violation_frac, not as latency samples.
         pool = np.concatenate([m.latencies for m in w])
+        pool = pool[np.isfinite(pool)]
+        if not pool.size:
+            pool = np.zeros(1)
         viol = np.array([m.qos_violation_frac for m in w])
         rho = np.stack([m.node_rho for m in w])
         span = max(1e-9, t1 - t0)
@@ -329,8 +352,8 @@ class FleetSimResult:
             "p95_latency_s": float(np.percentile(pool, 95)),
             "qos_violation_frac": float(viol.mean()),
             "mean_sessions": float(np.mean([m.n_sessions for m in w])),
-            "max_rho": float(rho.max()),
-            "mean_rho": float(np.clip(rho, 0, 1).mean()),
+            "max_rho": float(np.nanmax(rho)),
+            "mean_rho": float(np.nanmean(np.clip(rho, 0, 1))),
             "migrations_per_s": sum(m.n_migrate for m in w) / span,
             "resplits_per_s": sum(m.n_resplit for m in w) / span,
             "mean_solver_ms": 1e3 * float(np.mean(
@@ -455,6 +478,46 @@ class FleetSimulator:
                 orchestrator.heartbeats = self._hb
         if self.admission is not None and config.preempt_patience_s is not None:
             self.admission.preempt_patience_s = config.preempt_patience_s
+        # control-plane chaos (PR 8)
+        self._chaos: ChaosInjector | None = None
+        self.invariants: InvariantChecker | None = None
+        self._flaky: list = []
+        self.chaos_stats = {
+            "controller_restarts": 0, "zombie_attempts": 0,
+            "zombie_fenced": 0, "zombie_committed": 0,
+            "lost_deferred": 0, "max_restore_wall_s": 0.0,
+        }
+        self._journal_file: str | None = None
+        if config.chaos is not None:
+            from ..core.broadcast import FlakyAgent, RolloutPolicy
+
+            sp = config.chaos
+            self._chaos = ChaosInjector(
+                sp, num_nodes=base_state.num_nodes,
+                horizon_s=config.duration_s,
+            )
+            if sp.rpc_fault_rate_per_s > 0 and self._chaos.rpc_windows:
+                wrapped = []
+                for a in orchestrator.broadcast.agents:
+                    fa = FlakyAgent(
+                        a, seed=sp.seed * 1000 + a.node_id,
+                        drop_p=sp.rpc_drop_p, dup_p=sp.rpc_dup_p,
+                        delay_p=sp.rpc_delay_p,
+                        windows=self._chaos.rpc_windows,
+                    )
+                    wrapped.append(fa)
+                    self._flaky.append(fa)
+                orchestrator.broadcast.agents = wrapped
+            # handling ON → bounded retries with backoff; OFF → one naive
+            # unfenced attempt per RPC (the transport faults land raw)
+            orchestrator.broadcast.policy = (
+                RolloutPolicy() if config.chaos_handling
+                else RolloutPolicy(max_attempts=1)
+            )
+            if not config.chaos_handling:
+                orchestrator.telemetry_guard = None
+            self.invariants = InvariantChecker(
+                queue_cap=config.admission_queue_cap)
         mix = config.qos_mix
         self._qos_classes = tuple(QOS_CLASSES[name] for name, _ in mix)
         w = np.array([float(p) for _, p in mix])
@@ -486,6 +549,119 @@ class FleetSimulator:
         life = float(self.rng.exponential(cfg.mean_lifetime_s))
         return arch, graph, wl, src, qos, life
 
+    def _crash_restart(self, t: float,
+                       pending_life: dict[int, float]) -> None:
+        """Kill the controller process at ``t`` and bring up a successor.
+
+        Handling ON: the successor restores the journal — sessions, trigger
+        cooldown/hysteresis/throttle contexts, the defer queue, heartbeat
+        registry, forecast rings, and the broadcast version counter — then
+        claims a fresh epoch, fencing the pre-crash zombie.  Handling OFF:
+        the successor scrapes active configs off the data plane; every
+        piece of soft state (defer queue, EWMAs, cooldowns, forecast rings,
+        the version counter) is simply gone, and no epoch is claimed.
+
+        Either way the *data plane* (node agents with their staged/active
+        configs and commit histories) survives — only the controller dies.
+        """
+        from ..core.broadcast import ReconfigurationBroadcast
+        from ..core.fleet import FleetSession
+
+        cfg = self.cfg
+        old, old_ctrl = self.orch, self.admission
+        old_bc = old.broadcast
+        t0 = time.perf_counter()
+        new_bc = ReconfigurationBroadcast(
+            list(old_bc.agents), policy=old_bc.policy)
+        forecaster = None
+        if old.forecaster is not None:
+            from ..core.forecast import CapacityForecaster
+
+            forecaster = CapacityForecaster(old.forecaster.cfg)
+        new_orch = FleetOrchestrator(
+            profiler=CapacityProfiler(
+                base_state=old.profiler.base_state.copy(),
+                ewma_alpha=old.profiler.ewma_alpha),
+            broadcast=new_bc,
+            thresholds=old.thresholds, weights=old.weights,
+            cost_model=old.cost_model,
+            splitter=old.splitter,      # compiled solver caches are code,
+            evaluator=old.evaluator,    # not state — a real restart re-JITs;
+            kernel=old.kernel,          # reuse keeps the sim wall-clock sane
+            repairer=old.repairer,
+            max_units=old.max_units, local_rounds=old.local_rounds,
+            min_improvement_frac=old.min_improvement_frac,
+            bw_floor_frac=old.bw_floor_frac,
+            solve_backoff_s=old.solve_backoff_s,
+            backoff_tol_frac=old.backoff_tol_frac,
+            forecaster=forecaster,
+        )
+        new_ctrl = None
+        if old_ctrl is not None:
+            new_ctrl = FleetAdmissionController(
+                new_orch,
+                max_sessions=old_ctrl.max_sessions,
+                rho_ceiling=old_ctrl.rho_ceiling,
+                queue_cap=old_ctrl.queue_cap,
+                use_forecast=old_ctrl.use_forecast,
+                preempt_patience_s=old_ctrl.preempt_patience_s,
+            )
+        if cfg.chaos_handling:
+            lives = ([pending_life.get(id(req))
+                      for _, req, _ in old_ctrl._queue]
+                     if old_ctrl is not None else [])
+            new_orch.load(self._journal_file, admission=new_ctrl,
+                          claim_epoch=True)
+            self._hb = new_orch.heartbeats
+            if new_ctrl is not None:
+                # restored requests are new objects; re-key the remaining
+                # lifetimes by defer-queue position (order is journal-stable)
+                for slot, life in zip(new_ctrl._queue, lives):
+                    if life is not None:
+                        pending_life[id(slot[1])] = life
+        else:
+            if old_ctrl is not None:
+                self.chaos_stats["lost_deferred"] += old_ctrl.queued
+            for sid, sess in old.sessions.items():
+                held = [a.active_by[sid] for a in old_bc.agents
+                        if sid in a.active_by]
+                cfg0 = max(held, key=lambda c: c.version,
+                           default=sess.config)
+                new_orch.sessions[sid] = FleetSession(
+                    sid=sid, graph=sess.graph, workload=sess.workload,
+                    source_node=sess.source_node, arch=sess.arch,
+                    input_bytes_per_token=sess.input_bytes_per_token,
+                    qos=sess.qos, config=cfg0, t_admitted=t,
+                )
+            new_orch._next_sid = max(old.sessions, default=-1) + 1
+            new_orch.telemetry_guard = None
+            if self._hb is not None and cfg.failures is not None:
+                self._hb = HeartbeatRegistry(
+                    nodes=list(range(self.base_state.num_nodes)),
+                    miss_limit=cfg.failures.heartbeat_miss_limit,
+                )
+                new_orch.heartbeats = self._hb
+        self.chaos_stats["controller_restarts"] += 1
+        self.chaos_stats["max_restore_wall_s"] = max(
+            self.chaos_stats["max_restore_wall_s"],
+            time.perf_counter() - t0)
+        self.orch, self.admission = new_orch, new_ctrl
+        # the dead controller's in-flight rollout lands AFTER the restart:
+        # fenced by the successor's epoch claim on the ON arm, committed
+        # over the recovered state on the OFF arm — exactly the coherence
+        # violation the invariant checker exists to catch
+        if self._chaos.spec.zombie_after_crash and old.sessions:
+            sid = max(old.sessions)
+            zcfg = old.sessions[sid].config
+            if zcfg is not None:
+                self.chaos_stats["zombie_attempts"] += 1
+                z = old_bc.rollout(zcfg.boundaries, zcfg.assignment,
+                                   reason="zombie", now=t, session=sid)
+                if z is None:
+                    self.chaos_stats["zombie_fenced"] += 1
+                else:
+                    self.chaos_stats["zombie_committed"] += 1
+
     def run(self) -> FleetSimResult:
         cfg = self.cfg
         orch = self.orch
@@ -497,9 +673,15 @@ class FleetSimulator:
         depart_at: dict[int, float] = {}           # sid → scheduled departure
         next_monitor = 0.0
         inj = self._injector
+        chaos = self._chaos
+        crash_i = 0
 
         def _overlay(state: SystemState, t: float) -> SystemState:
-            return state if inj is None else inj.apply(state, t)
+            if inj is not None:
+                state = inj.apply(state, t)
+            if chaos is not None:
+                state = chaos.corrupt(state, t)
+            return state
 
         def _admit(t: float) -> str:
             """One arrival through admission control; returns the outcome."""
@@ -537,8 +719,29 @@ class FleetSimulator:
         for _ in range(cfg.initial_sessions):
             _admit(0.0)
 
+        # journaled recovery (PR 8): persist orchestrator + admission state
+        # so a crash-restart resumes from the last end-of-tick snapshot
+        last_sig: tuple | None = None
+        if chaos is not None and cfg.chaos_handling:
+            path = cfg.journal_path
+            if path is None:
+                fd, path = tempfile.mkstemp(
+                    prefix="fleet-journal-", suffix=".npz")
+                os.close(fd)
+            self._journal_file = path
+            orch.save(path, admission=ctrl)
+
         t = 0.0
         while t < cfg.duration_s:
+            if (chaos is not None and crash_i < len(chaos.crash_times)
+                    and t >= chaos.crash_times[crash_i]):
+                while (crash_i < len(chaos.crash_times)
+                       and t >= chaos.crash_times[crash_i]):
+                    crash_i += 1
+                self._crash_restart(t, pending_life)
+                orch, ctrl = self.orch, self.admission
+            for fa in self._flaky:
+                fa.now = t
             state = _overlay(apply_traces(self.base_state, self.util_traces,
                                           self.bw_traces, t), t)
             orch.profiler.base_state = state
@@ -633,6 +836,10 @@ class FleetSimulator:
                         log.append((t, "preempt", sess.sid, sess.arch))
                         if req is not None and remaining > 0:
                             pending_life[id(req)] = remaining
+                if self.invariants is not None:
+                    self.invariants.check(
+                        t=t, orch=orch, agents=orch.broadcast.agents,
+                        admission=ctrl)
 
             mem_over = 0.0
             if inj is not None and orch.sessions:
@@ -647,8 +854,12 @@ class FleetSimulator:
                 t=t,
                 n_sessions=len(orch.sessions),
                 latencies=lat_arr,
+                # a NaN latency (poisoned telemetry priced verbatim) is not
+                # "fast" — it is an unserved SLO and counts as a breach
                 qos_violation_frac=(
-                    float((lat_arr > slo_arr).mean()) if lat_arr.size else 0.0
+                    float(((lat_arr > slo_arr)
+                           | ~np.isfinite(lat_arr)).mean())
+                    if lat_arr.size else 0.0
                 ),
                 node_rho=rho,
                 admitted=admitted, departed=departed, rejected=rejected,
@@ -658,5 +869,16 @@ class FleetSimulator:
                 mem_violation_bytes=mem_over,
                 preempted=n_preempted, recovered=recovered,
             ))
+            if self._journal_file is not None:
+                # re-journal when durable control-plane state moved: the
+                # session set, the version counter, the defer queue, or a
+                # monitoring cycle (EWMAs / forecast rings / heartbeats)
+                sig = (orch._next_sid, orch.broadcast._version,
+                       len(orch.sessions),
+                       ctrl.queued if ctrl is not None else 0,
+                       next_monitor)
+                if sig != last_sig:
+                    orch.save(self._journal_file, admission=ctrl)
+                    last_sig = sig
             t = round(t + cfg.tick_s, 9)
         return FleetSimResult(ticks, log)

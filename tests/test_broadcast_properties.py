@@ -1,0 +1,249 @@
+"""Property tests for the hardened broadcast path (PR 8): idempotent
+version-deduped delivery, epoch fencing, atomic release handoff, and the
+bounded-retry policy absorbing a deterministic flaky transport."""
+
+import itertools
+
+from repro.core.broadcast import (
+    FlakyAgent,
+    InProcessAgent,
+    PartitionConfig,
+    ReconfigurationBroadcast,
+    RolloutPolicy,
+)
+
+from _hypothesis_compat import given, settings, st
+
+
+def _cfg(version, assignment=(0, 1), session=0, epoch=0):
+    return PartitionConfig(
+        version=version, boundaries=(0, 3, 6), assignment=assignment,
+        session=session, epoch=epoch)
+
+
+def _snapshot(a: InProcessAgent):
+    return (
+        {s: c.version for s, c in a.active_by.items()},
+        {s: c.version for s, c in a.staged_by.items()},
+        dict(a.released),
+        tuple(a.history),
+    )
+
+
+# --------------------------------------------------------------------- #
+# idempotency / ordering
+# --------------------------------------------------------------------- #
+
+def test_duplicate_prepare_and_commit_are_noops():
+    a = InProcessAgent(0)
+    cfg = _cfg(1)
+    assert a.prepare(cfg) and a.commit(1)
+    snap = _snapshot(a)
+    # arbitrary replays of either phase change nothing
+    for _ in range(3):
+        assert a.prepare(cfg)
+        assert a.commit(1)
+    assert _snapshot(a) == snap
+    assert a.history == [1]
+
+
+def test_out_of_order_older_version_never_regresses():
+    a = InProcessAgent(0)
+    assert a.prepare(_cfg(5)) and a.commit(5)
+    # a late v3 delivery (delayed in flight) is acked but not applied
+    assert a.prepare(_cfg(3))
+    assert 0 not in a.staged_by or a.staged_by[0].version > 3
+    assert a.commit(3) is False or a.active_by[0].version == 5
+    assert a.active_by[0].version == 5
+    assert a.history == [5]
+
+
+@settings(max_examples=25)
+@given(seq=st.sets(st.integers(min_value=1, max_value=6),
+                   min_size=1, max_size=6))
+def test_any_delivery_order_converges_to_max_version(seq):
+    """Whatever subset of versions arrives, in every permutation, with every
+    prepare immediately followed (or not) by its commit — the agent ends on
+    the highest fully-delivered version with a strictly increasing history."""
+    versions = sorted(seq)
+    for order in itertools.islice(itertools.permutations(versions), 24):
+        a = InProcessAgent(0)
+        for v in order:
+            a.prepare(_cfg(v))
+            a.commit(v)
+        hist = a.history
+        assert all(x < y for x, y in zip(hist, hist[1:]))
+        assert a.active_by[0].version == max(
+            v for v in versions
+            if v in hist) if hist else True
+        # the final active version is the max committed one
+        if hist:
+            assert a.active_by[0].version == max(hist)
+
+
+@settings(max_examples=15)
+@given(n_dups=st.integers(min_value=2, max_value=5))
+def test_duplicated_rollout_deliveries_commit_once(n_dups):
+    a = InProcessAgent(0)
+    cfg = _cfg(7)
+    for _ in range(n_dups):
+        assert a.prepare(cfg)
+    for _ in range(n_dups):
+        assert a.commit(7)
+    assert a.history == [7]
+    assert a.active_by[0].version == 7
+
+
+# --------------------------------------------------------------------- #
+# epoch fencing
+# --------------------------------------------------------------------- #
+
+def test_epoch_fencing_rejects_zombie_controller():
+    agents = [InProcessAgent(i) for i in range(2)]
+    zombie = ReconfigurationBroadcast(agents)
+    live = ReconfigurationBroadcast(agents)
+    assert zombie.rollout((0, 3, 6), (0, 1), session=0) is not None
+
+    # the recovered successor fences every prior controller...
+    live._version = zombie._version
+    live.claim_epoch()
+    assert live.rollout((0, 3, 6), (0, 1), session=0) is not None
+
+    # ...so the zombie's next broadcast dies at prepare, fleet unchanged
+    before = [_snapshot(a) for a in agents]
+    assert zombie.rollout((0, 2, 6), (1, 0), session=0) is None
+    assert [_snapshot(a) for a in agents] == before
+    assert zombie.stats["fenced_rollouts"] == 1
+    # the rollout dies at the FIRST fenced agent; later ones never see it
+    assert any(a.fenced >= 1 for a in agents)
+
+
+def test_claim_epoch_is_monotone_across_claims():
+    agents = [InProcessAgent(0)]
+    b1 = ReconfigurationBroadcast(agents)
+    b2 = ReconfigurationBroadcast(agents)
+    e1 = b1.claim_epoch()
+    e2 = b2.claim_epoch()
+    e3 = b1.claim_epoch()
+    assert e1 < e2 < e3
+    assert agents[0].epoch == e3
+
+
+# --------------------------------------------------------------------- #
+# release handoff
+# --------------------------------------------------------------------- #
+
+def test_migration_releases_the_old_holder():
+    agents = [InProcessAgent(i) for i in range(3)]
+    bc = ReconfigurationBroadcast(agents)
+    c1 = bc.rollout((0, 3, 6), (0, 1), session=0)
+    assert c1 is not None
+    assert 0 in agents[0].active_by and 0 in agents[1].active_by
+
+    # migrate wholly onto node 2: nodes 0/1 ride the same rollout and
+    # commit releases — exactly one holder remains
+    c2 = bc.rollout((0, 6), (2,), session=0)
+    assert c2 is not None
+    holders = [a.node_id for a in agents if 0 in a.active_by]
+    assert holders == [2]
+    assert agents[0].released[0] == c2.version
+    assert agents[1].released[0] == c2.version
+    # releases do not pollute commit histories
+    assert agents[0].history == [c1.version]
+    # and a replayed release delivery is a no-op ack
+    assert agents[0].prepare(c2) and agents[0].commit(c2.version)
+    assert 0 not in agents[0].active_by
+
+
+def test_failed_handoff_rolls_back_the_release():
+    """If a later agent's commit fails mid-handoff, an already-released
+    holder gets its previous active config back — never a half-migrated
+    scope."""
+    agents = [InProcessAgent(i) for i in range(3)]
+    bc = ReconfigurationBroadcast(agents, policy=RolloutPolicy(max_attempts=1))
+    c1 = bc.rollout((0, 6), (0,), session=0)
+    assert c1 is not None
+
+    # order matters: the releasing old holder (node 0) commits BEFORE the
+    # target (node 2) fails — agents are visited in list order
+    agents[2].fail_commit = True
+    assert bc.rollout((0, 6), (2,), session=0) is None
+    assert agents[0].active_by[0].version == c1.version
+    assert 0 not in agents[2].active_by
+    assert agents[0].history == [c1.version]
+
+
+# --------------------------------------------------------------------- #
+# flaky transport × retry policy
+# --------------------------------------------------------------------- #
+
+def test_flaky_draws_are_deterministic_and_windowed():
+    mk = lambda: FlakyAgent(InProcessAgent(0), seed=42, drop_p=0.3,
+                            dup_p=0.2, delay_p=0.2,
+                            windows=((10.0, 20.0),))
+    a, b = mk(), mk()
+    a.now = b.now = 15.0
+    seq_a = [a._draw("prepare", v) for v in range(20)]
+    seq_b = [b._draw("prepare", v) for v in range(20)]
+    assert seq_a == seq_b
+    assert set(seq_a) - {"ok"}, "campaign must draw some faults"
+
+    # outside the window the transport is perfectly healthy
+    c = mk()
+    c.now = 5.0
+    assert all(c._draw("prepare", v) == "ok" for v in range(20))
+
+
+def test_policy_retries_absorb_in_window_faults():
+    """With retries + dedup, a rollout through a lossy in-window transport
+    still commits exactly once; with max_attempts=1 the same seed aborts."""
+    def run(policy, seed=7):
+        agents = [FlakyAgent(InProcessAgent(i), seed=seed, drop_p=0.45,
+                             dup_p=0.25, windows=None)
+                  for i in range(2)]
+        bc = ReconfigurationBroadcast(agents, policy=policy)
+        ok = sum(bc.rollout((0, 3, 6), (0, 1), session=s) is not None
+                 for s in range(10))
+        return ok, agents, bc
+
+    ok1, _, _ = run(RolloutPolicy(max_attempts=1))
+    ok6, agents, bc = run(RolloutPolicy(max_attempts=6))
+    assert ok6 > ok1
+    assert bc.stats["retries"] > 0
+    # dedup holds under duplication: one history entry per committed scope
+    for fa in agents:
+        hist = fa.inner.history
+        assert len(hist) == len(set(hist))
+        assert all(x < y for x, y in zip(hist, hist[1:]))
+
+
+def test_dropped_commit_never_splits_the_fleet():
+    """Whatever the transport does, after every rollout both agents agree:
+    a scope is either fully on the new config everywhere or fully rolled
+    back everywhere (the invariant the chaos checker enforces in-sim)."""
+    for seed in range(12):
+        agents = [FlakyAgent(InProcessAgent(i), seed=seed, drop_p=0.4,
+                             dup_p=0.2, delay_p=0.15, windows=None)
+                  for i in range(2)]
+        bc = ReconfigurationBroadcast(
+            agents, policy=RolloutPolicy(max_attempts=2))
+        for k in range(8):
+            bc.rollout((0, 3, 6), (0, 1), session=0, now=float(k))
+            held = {a.inner.node_id: a.inner.active_by.get(0)
+                    for a in agents}
+            versions = {c.version for c in held.values() if c is not None}
+            assert len(versions) <= 1, (
+                f"seed {seed}: fleet split across versions {versions}")
+
+
+def test_backoff_is_deterministic_and_bounded():
+    pol = RolloutPolicy()
+    xs = [pol.backoff_s(3, 1, a) for a in (1, 2, 3)]
+    ys = [pol.backoff_s(3, 1, a) for a in (1, 2, 3)]
+    assert xs == ys
+    # exponential envelope with jitter in [1, 1+jitter_frac)
+    for i, x in enumerate(xs, start=1):
+        base = pol.backoff_base_s * pol.backoff_mult ** (i - 1)
+        assert base <= x < base * (1 + pol.jitter_frac)
+    # different (version, node) → different jitter, same envelope
+    assert pol.backoff_s(3, 1, 1) != pol.backoff_s(4, 1, 1)

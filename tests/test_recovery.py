@@ -1,0 +1,303 @@
+"""Crash-recoverable control plane: journaled snapshots, bit-identical
+resume, restart-while-deferred, and the degraded-mode telemetry firewall."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FleetOrchestrator,
+    InProcessAgent,
+    ReconfigurationBroadcast,
+    SystemState,
+    TelemetryGuard,
+    Thresholds,
+    Workload,
+)
+from repro.core.admission import (
+    AdmissionKind,
+    AdmissionRequest,
+    FleetAdmissionController,
+)
+from repro.core.forecast import CapacityForecaster, ForecastConfig
+from repro.core.graph import GraphNode, ModelGraph
+from repro.core.profiling import CapacityProfiler
+from repro.core.triggers import EWMA, QOS_STANDARD, QoSClass
+
+
+def _state(n=3, util=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    bw = np.full((n, n), 1e9)
+    np.fill_diagonal(bw, np.inf)
+    return SystemState(
+        flops_per_s=np.full(n, 1e13) * rng.uniform(0.9, 1.1, n),
+        mem_bytes=np.full(n, 40e9),
+        background_util=np.full(n, util),
+        trusted=np.full(n, True),
+        link_bw=bw,
+        link_lat=np.full((n, n), 1e-3) * (1 - np.eye(n)),
+        mem_bw=np.full(n, 5e11),
+    )
+
+
+def _graph(units=6, flops=2e10, act_bytes=8e3, name="m"):
+    return ModelGraph(name, [
+        GraphNode(f"u{i}", flops, 5e8, act_bytes) for i in range(units)
+    ])
+
+
+def _orch(n=3, *, forecast=False, seed=0):
+    state = _state(n, seed=seed)
+    fc = None
+    if forecast:
+        fc = CapacityForecaster(ForecastConfig(
+            horizon_steps=4, season_steps=8, sample_interval_s=1.0))
+    return FleetOrchestrator(
+        profiler=CapacityProfiler(base_state=state),
+        broadcast=ReconfigurationBroadcast(
+            [InProcessAgent(i) for i in range(n)]
+        ),
+        thresholds=Thresholds(cooldown_s=1.0),
+        forecaster=fc,
+    )
+
+
+def _wl(rate=0.5):
+    return Workload(tokens_in=32, tokens_out=8, arrival_rate=rate)
+
+
+def _drive(orch, t):
+    """One deterministic monitoring cycle at time ``t``: oscillate node 0's
+    background load so triggers (and occasional migrations) actually fire."""
+    st = orch.profiler.base_state
+    st.background_util[:] = 0.1
+    st.background_util[0] = 0.92 if int(t) % 6 < 3 else 0.1
+    return orch.step(now=t)
+
+
+def _fingerprint(orch):
+    """Everything a resumed controller must agree on, bitwise."""
+    sess = {}
+    for sid, s in orch.sessions.items():
+        sess[sid] = (
+            s.config.version, s.config.boundaries, s.config.assignment,
+            s.ewma_latency.value, s.t_last_reconfig,
+            s.throttle.t_last, s.throttle.kinds, s.throttle.ewma,
+        )
+    return (sess, orch.broadcast._version, orch.degraded_cycles)
+
+
+def test_crash_at_cycle_k_resumes_bit_identically(tmp_path):
+    """Crash-at-cycle-k + journal restore continues bit-identically to the
+    never-crashed arm: same commits, versions, EWMAs, trigger contexts."""
+    K, N = 5, 12
+
+    def boot():
+        orch = _orch(3, forecast=True)
+        for i in range(3):
+            orch.admit(_graph(name=f"m{i}"), _wl(0.4 + 0.1 * i),
+                       source_node=i % 2, now=0.0, qos=QOS_STANDARD)
+        return orch
+
+    # arm A: never crashes
+    a = boot()
+    fps_a = []
+    for i in range(N):
+        _drive(a, float(i))
+        fps_a.append(_fingerprint(a))
+
+    # arm B: identical until cycle K, then crash + restore into a FRESH
+    # orchestrator over the SAME surviving data plane
+    b = boot()
+    for i in range(K):
+        _drive(b, float(i))
+    path = tmp_path / "journal.npz"
+    b.save(path)
+    assert _fingerprint(b) == fps_a[K - 1]
+
+    b2 = FleetOrchestrator(
+        profiler=CapacityProfiler(
+            base_state=b.profiler.base_state.copy()),
+        broadcast=ReconfigurationBroadcast(
+            b.broadcast.agents, policy=b.broadcast.policy),
+        thresholds=b.thresholds,
+        forecaster=CapacityForecaster(b.forecaster.cfg),
+        splitter=b.splitter, evaluator=b.evaluator,
+        kernel=b.kernel, repairer=b.repairer,
+    )
+    b2.load(path, claim_epoch=True)
+    assert _fingerprint(b2) == fps_a[K - 1]
+
+    for i in range(K, N):
+        _drive(b2, float(i))
+        assert _fingerprint(b2) == fps_a[i], f"diverged at cycle {i}"
+
+
+def test_journal_roundtrip_preserves_state_dict(tmp_path):
+    """save → load → state_dict is a fixed point (meta JSON-identical,
+    forecast arrays exact)."""
+    orch = _orch(3, forecast=True)
+    orch.admit(_graph(), _wl(), now=0.0, qos=QOS_STANDARD)
+    for i in range(4):
+        _drive(orch, float(i))
+    path = tmp_path / "j.npz"
+    orch.save(path)
+
+    o2 = _orch(3, forecast=True)
+    o2.load(path, claim_epoch=False)
+    d1, d2 = orch.state_dict(), o2.state_dict()
+    assert json.dumps(d1["meta"], sort_keys=True) == \
+        json.dumps(d2["meta"], sort_keys=True)
+    assert set(d1["forecast"]) == set(d2["forecast"])
+    for k in d1["forecast"]:
+        np.testing.assert_array_equal(np.asarray(d1["forecast"][k]),
+                                      np.asarray(d2["forecast"][k]))
+
+
+def test_restart_while_deferred_keeps_queue(tmp_path):
+    """A request parked in the defer queue survives a controller restart:
+    the restored queue re-prices on poll and admits once capacity frees."""
+    # SLO sits between the solo latency (~5.7 s) and the contended
+    # latency (~12.9 s): first heavy session admits, second defers
+    patient = QoSClass("patient", latency_slo_s=10.0, defer_timeout_s=1e3)
+    heavy = Workload(tokens_in=48, tokens_out=8, arrival_rate=1.2)
+
+    def mk():
+        state = _state(2)
+        orch = FleetOrchestrator(
+            profiler=CapacityProfiler(base_state=state),
+            broadcast=ReconfigurationBroadcast(
+                [InProcessAgent(i) for i in range(2)]),
+            thresholds=Thresholds(cooldown_s=1.0),
+        )
+        ctrl = FleetAdmissionController(orch, rho_ceiling=1.0)
+        return orch, ctrl
+
+    orch, ctrl = mk()
+    g = _graph(act_bytes=1e9)   # huge activations: stays on one node
+    v1 = ctrl.request(AdmissionRequest(g, heavy, qos=patient), now=0.0)
+    assert v1.kind is AdmissionKind.ACCEPT
+    v2 = ctrl.request(
+        AdmissionRequest(_graph(act_bytes=1e9, name="m2"), heavy,
+                         qos=patient),
+        now=0.0)
+    assert v2.kind is AdmissionKind.DEFER
+    assert ctrl.queued == 1
+
+    path = tmp_path / "j.npz"
+    orch.save(path, admission=ctrl)
+
+    orch2, ctrl2 = mk()
+    orch2.load(path, admission=ctrl2)
+    assert ctrl2.queued == 1
+    assert ctrl2.counters == ctrl.counters
+    assert set(orch2.sessions) == set(orch.sessions)
+
+    # still no capacity → stays queued; after the incumbent departs → admit
+    assert ctrl2.poll(1.0) == []
+    orch2.depart(v1.sid)
+    out = ctrl2.poll(2.0)
+    assert len(out) == 1 and out[0][1].kind is AdmissionKind.ACCEPT
+    assert ctrl2.counters["accepted_from_queue"] == 1
+
+
+def test_degraded_pricing_keeps_all_incumbents():
+    """Guard disabled + NaN telemetry → the fused price is poisoned; the
+    cycle must KEEP every incumbent and count one degraded cycle instead of
+    committing (or thrashing on) NaN-priced decisions."""
+    orch = _orch(3)
+    orch.telemetry_guard = None
+    for i in range(2):
+        orch.admit(_graph(name=f"m{i}"), _wl(), now=0.0, qos=QOS_STANDARD)
+    before = {sid: s.config.version for sid, s in orch.sessions.items()}
+
+    orch.profiler.base_state.background_util[1] = np.nan
+    fd = orch.step(now=5.0)
+    assert orch.degraded_cycles == 1
+    assert fd.n_keep == 2 and fd.n_migrate == 0 and fd.n_resplit == 0
+    after = {sid: s.config.version for sid, s in orch.sessions.items()}
+    assert after == before
+    # per-session decisions carry the degraded-pricing reason
+    for d in orch.decisions[-1].per_session.values():
+        assert "degraded-pricing" in d.reasons
+
+
+def test_telemetry_guard_quarantine_and_staleness():
+    guard = TelemetryGuard(staleness_budget_s=10.0)
+    clean = _state(3)
+    # clean pass-through: SAME object, nothing quarantined
+    assert guard.sanitize(clean, now=0.0) is clean
+    assert guard.quarantined == ()
+
+    bad = clean.copy()
+    bad.background_util[1] = np.nan
+    out = guard.sanitize(bad, now=1.0)
+    assert out is not bad
+    assert guard.quarantined == (1,)
+    assert guard.clamped_samples == 1
+    # within the staleness budget: last-good substitution, bit-exact
+    np.testing.assert_array_equal(out.background_util,
+                                  clean.background_util)
+    np.testing.assert_array_equal(out.link_bw, clean.link_bw)
+
+    # a NaN link ROW is ambiguous about which endpoint lies — both sides
+    # of every poisoned edge are quarantined (conservative by design)
+    g2 = TelemetryGuard(staleness_budget_s=10.0)
+    g2.sanitize(clean, now=0.0)
+    linky = clean.copy()
+    linky.link_bw[1, :] = np.nan
+    g2.sanitize(linky, now=1.0)
+    assert 1 in g2.quarantined and len(g2.quarantined) == 3
+
+    # beyond the budget: conservative degraded capacity, dead-node shaped
+    out2 = guard.sanitize(bad.copy(), now=20.0)
+    assert out2.background_util[1] == pytest.approx(0.99)
+    assert out2.mem_bytes[1] == 0.0
+    off_diag = [out2.link_bw[1, 0], out2.link_bw[1, 2]]
+    assert np.all(np.isfinite(off_diag))
+
+    # recovery: a clean sample lifts the quarantine
+    assert guard.sanitize(clean, now=21.0) is clean
+    assert guard.quarantined == ()
+
+
+def test_quarantine_is_trigger_visible():
+    """A session whose config touches a quarantined node enters the solve
+    set through the 'quarantine' trigger kind (cooldown-gated, not the
+    node-fail force path)."""
+    orch = _orch(3)
+    sid = orch.admit(_graph(), _wl(), now=0.0, qos=QOS_STANDARD)
+    orch.step(now=1.0)   # clean cycle seeds the guard's last-good snapshot
+    n = orch.sessions[sid].config.assignment[0]
+    orch.profiler.base_state.background_util[n] = np.nan
+    orch.step(now=5.0)   # last-good substitution keeps pricing finite
+    assert n in orch.telemetry_guard.quarantined
+    d = orch.decisions[-1].per_session[sid]
+    assert any("quarantine" in r for r in d.reasons)
+
+
+def test_forecaster_skips_poisoned_samples():
+    """Non-finite telemetry never enters the seasonal ring; it is counted
+    in ``bad_samples`` and the forecast stays finite."""
+    fc = CapacityForecaster(ForecastConfig(
+        horizon_steps=2, season_steps=4, sample_interval_s=1.0))
+    n = 3
+    bw = np.full((n, n), 1e9)
+    np.fill_diagonal(bw, np.inf)
+    for t in range(8):
+        bg = np.full(n, 0.2)
+        if t == 3:
+            bg[1] = np.nan
+        fc.observe(float(t), bg, bw)
+    assert fc.bad_samples >= 1
+    assert fc.bg_wc is not None and np.all(np.isfinite(fc.bg_wc))
+
+
+def test_ewma_skip_and_hold_on_nonfinite():
+    e = EWMA(alpha=0.5)
+    e.update(1.0)
+    assert e.update(float("nan")) == 1.0
+    assert e.update(float("inf")) == 1.0
+    assert e.value == 1.0
+    assert e.update(3.0) == pytest.approx(2.0)
