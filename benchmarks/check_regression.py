@@ -59,6 +59,20 @@ from the journal within ``BENCH_CHAOS_RESTORE_MS`` milliseconds (default
 no-handling arm.  The campaign itself must have exercised the machinery
 (>= 1 controller crash).  Baselines of any earlier schema (v1–v5, no chaos
 section) still gate a v6 run — absent sections are skipped with a note.
+
+The v7 ``thrash`` section (seed-paired high-churn fixed-point A/B) is gated
+on absolutes of the SAME run: the fixed-point ON arm must commit with ZERO
+conflict-KEEPs and zero joint-guard aborts, and accumulate no more SLO
+breach-minutes than the cycle-start-greedy OFF arm
+(``BENCH_THRASH_BREACH_SLACK`` minutes of slack, default 0).  Absent or
+carried-over sections are skipped with a note, as above.
+
+``--smoke-only`` is the fast PR-path mode: it gates ONLY consistency
+absolutes of a ``--smoke`` monitor run (warm resident cycle p50 finite and
+under ``BENCH_SMOKE_CYCLE_MS``, ``repair_calls_per_cycle`` == 0,
+``conflict_keeps_per_cycle`` == 0, plus the thrash absolutes when a smoke
+run carries that section) and skips every baseline comparison — PR runners
+are too noisy for the 1.3x timing gate, which stays scheduled-only.
 """
 
 from __future__ import annotations
@@ -249,6 +263,97 @@ def check_chaos(doc: dict) -> list[str]:
     return failures
 
 
+def check_thrash(doc: dict) -> list[str]:
+    """Absolute gates on the v7 fixed-point thrash A/B rows (no baseline).
+
+    ON arm (``fixed_point_on``): zero conflict-KEEPs — the device red/black
+    fixed point re-prices every triggered row against live residuals, so a
+    dirtied-residual commit-gate reject is a bug, not load — zero joint
+    Eq. 4 guard aborts (the lexicographic half-sweep gate makes the final
+    abort structurally unreachable), and SLO breach-minutes no worse than
+    the cycle-start-greedy OFF arm of the SAME seed-paired run.  The
+    breach gate gets ``BENCH_THRASH_BREACH_SLACK`` (minutes, default 0) as
+    the usual runner escape hatch; the sim is seed-deterministic on a
+    given jax stack, so the default stays exact.
+    """
+    rows = doc.get("thrash") or doc.get("thrash_ab") or []
+    if not rows:
+        print("[thrash] no fixed-point thrash section in fresh run — skipped")
+        return []
+    refreshed = doc.get("refreshed")
+    if refreshed is not None and "thrash" not in refreshed:
+        print("[thrash] section carried over from a previous sweep — skipped")
+        return []
+    slack = float(os.environ.get("BENCH_THRASH_BREACH_SLACK", "0"))
+    failures: list[str] = []
+    by_size: dict[int, dict[str, dict]] = {}
+    for r in rows:
+        by_size.setdefault(int(r["sessions"]), {})[r["arm"]] = r
+
+    def gate(size, name, value, ok, limit_desc):
+        verdict = "OK " if ok else "REGRESSION"
+        print(f"[thrash {size:>3}s] {name}: {value} ({limit_desc}) {verdict}")
+        if not ok:
+            failures.append(f"thrash {size}s {name}: {value} ({limit_desc})")
+
+    for size, arms in sorted(by_size.items()):
+        on = arms.get("fixed_point_on")
+        off = arms.get("fixed_point_off")
+        if on is None:
+            continue
+        gate(size, "conflict_keeps", on["conflict_keeps"],
+             int(on["conflict_keeps"]) == 0, "must be 0")
+        gate(size, "fixed_point_aborts", on.get("fixed_point_aborts", 0),
+             int(on.get("fixed_point_aborts", 0)) == 0, "must be 0")
+        if off is not None:
+            limit = float(off["breach_minutes"]) + slack
+            gate(size, "breach_minutes", on["breach_minutes"],
+                 float(on["breach_minutes"]) <= limit,
+                 f"must be <= fixed_point_off {off['breach_minutes']}"
+                 + (f" + {slack}" if slack else ""))
+    return failures
+
+
+def check_smoke(doc: dict) -> list[str]:
+    """PR-path smoke gates: consistency absolutes of a ``--smoke`` monitor
+    run, no committed baseline involved (PR runners are too noisy for the
+    1.3x timing gate — that stays on the scheduled sweep).
+
+    Per monitor row: the warm resident cycle must exist with a finite
+    positive p50 under ``BENCH_SMOKE_CYCLE_MS`` (default 2000 — an order
+    of magnitude above any healthy container; this catches recompiles per
+    cycle, not jitter), the hot path must make zero host repair calls, and
+    the steady state must report zero conflict-KEEPs.
+    """
+    import math
+    max_ms = float(os.environ.get("BENCH_SMOKE_CYCLE_MS", "2000"))
+    failures: list[str] = []
+    rows = _rows(doc)
+    if not rows:
+        print("[smoke] ERROR: no monitor rows in fresh run")
+        return ["smoke: no monitor rows"]
+
+    def gate(size, name, value, ok, limit_desc):
+        verdict = "OK " if ok else "REGRESSION"
+        print(f"[smoke {size:>3}s] {name}: {value} ({limit_desc}) {verdict}")
+        if not ok:
+            failures.append(f"smoke {size}s {name}: {value} ({limit_desc})")
+
+    for size, row in sorted(rows.items()):
+        p50 = _get(row, ("resident_cycle_ms", "p50"))
+        gate(size, "resident_cycle_ms.p50", p50,
+             p50 is not None and math.isfinite(p50) and 0.0 < p50 <= max_ms,
+             f"must be finite, > 0, <= {max_ms}")
+        rc = _get(row, ("repair_calls_per_cycle",))
+        gate(size, "repair_calls_per_cycle", rc,
+             rc is not None and rc == 0.0, "must be 0")
+        ck = _get(row, ("conflict_keeps_per_cycle",))
+        gate(size, "conflict_keeps_per_cycle", ck,
+             ck is not None and ck == 0.0, "must be 0")
+    failures += check_thrash(doc)
+    return failures
+
+
 def check_drift(doc: dict) -> list[str]:
     """Sanity gates on the v5 drift rows (calibration-layer liveness).
 
@@ -351,12 +456,27 @@ def main() -> int:
                          "default 1.3)")
     ap.add_argument("--profiles", default=None, metavar="PATH",
                     help="also validate this BENCH_profiles.json artifact")
+    ap.add_argument("--smoke-only", action="store_true",
+                    help="PR-path mode: consistency absolutes of a --smoke "
+                         "monitor run (cycle-time sanity, zero host repair "
+                         "calls, zero conflict-KEEPs) — no baseline, no "
+                         "timing tolerance gate")
     args = ap.parse_args()
 
     fresh_doc = json.loads(pathlib.Path(args.fresh).read_text())
+    if args.smoke_only:
+        failures = check_smoke(fresh_doc)
+        if failures:
+            print(f"\n{len(failures)} smoke regression(s):")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
+        print("\nsmoke checks passed")
+        return 0
     failures: list[str] = check_qos(fresh_doc)
     failures += check_storm(fresh_doc)
     failures += check_chaos(fresh_doc)
+    failures += check_thrash(fresh_doc)
     failures += check_drift(fresh_doc)
     if args.profiles:
         failures += check_profiles(pathlib.Path(args.profiles))

@@ -131,7 +131,8 @@ def solver_amortization(*, reps: int = 5, max_units: int = 96) -> list[dict]:
 
 def _saturated_fleet(n_sessions: int, seed: int,
                      forecast: bool = False,
-                     cost_model=None) -> FleetOrchestrator:
+                     cost_model=None,
+                     fixed_point: bool = True) -> FleetOrchestrator:
     """A fleet of ``n_sessions`` live sessions on the §IV topology, loaded
     hard enough that latency/util triggers fire every monitoring cycle.
 
@@ -155,6 +156,7 @@ def _saturated_fleet(n_sessions: int, seed: int,
         forecaster=(CapacityForecaster(ForecastConfig(
             horizon_steps=8, season_steps=8)) if forecast else None),
         cost_model=cost_model,
+        use_fixed_point=fixed_point,
     )
     rng = np.random.default_rng(seed)
     catalog = fleet_model_catalog()
@@ -226,6 +228,9 @@ def monitoring_cost(*, sessions=(32, 64, 128), cycles: int = 15,
             t_eval.append(fd.eval_time_s)
             t_pack.append(fd.pack_time_s)
         repair_per_cycle = (repair_capacity.calls - repair0) / cycles
+        ck_per_cycle = sum(
+            d.n_conflict_keep for d in orch.decisions[-cycles:]
+        ) / cycles
 
         # A/B: identical fleet, but the resident state is dropped before
         # every cycle so each step pays the full O(fleet) repack + transfer
@@ -258,6 +263,7 @@ def monitoring_cost(*, sessions=(32, 64, 128), cycles: int = 15,
             eval_ms=_pcts(t_eval),
             pack_ms=_pcts(t_pack),
             repair_calls_per_cycle=round(repair_per_cycle, 2),
+            conflict_keeps_per_cycle=round(ck_per_cycle, 2),
             repack_overhead_ms_p50=round(p_cold["p50"] - p_res["p50"], 3),
             speedup_p50=round(p_cold["p50"] / max(p_res["p50"], 1e-9), 2),
         ))
@@ -276,18 +282,22 @@ def write_bench_fleet(sections: dict[str, list[dict]],
     section (calibrated-vs-analytic pricing on identical placements, from
     the committed ``BENCH_profiles.json``); v6 adds the ``chaos`` section
     (seed-paired control-plane chaos A/B: invariant violations, crash
-    recovery, zombie fencing, SLO-breach minutes).  Sections absent from
+    recovery, zombie fencing, SLO-breach minutes); v7 adds the ``thrash``
+    section (seed-paired high-churn fixed-point A/B: conflict-KEEP rate,
+    commit-thrash count, breach-minutes, converged-sweep histogram) and
+    ``conflict_keeps_per_cycle`` in the monitor rows.  Sections absent from
     ``sections`` are carried over from the committed file, so a
     ``--monitor``-only refresh never drops the qos baseline (and vice
     versa).
     """
-    doc = {"schema": "bench-fleet/v6",
+    doc = {"schema": "bench-fleet/v7",
            "source": ("benchmarks/fleet_scaling.py "
-                      "--monitor/--qos/--storm/--drift/--chaos")}
+                      "--monitor/--qos/--storm/--drift/--chaos/--thrash")}
     if path.exists():
         try:
             old = json.loads(path.read_text())
-            for k in ("monitor", "qos", "storm", "drift", "chaos"):
+            for k in ("monitor", "qos", "storm", "drift", "chaos",
+                      "thrash"):
                 if k in old:
                     doc[k] = old[k]
         except (json.JSONDecodeError, OSError):
@@ -633,6 +643,94 @@ def fleet_qos(*, duration_s: float = 60.0, seed: int = 0,
     return rows
 
 
+def thrash_ab(*, n_sessions: int = 16, cycles: int = 30,
+              churn_every: int = 2, seed: int = 0) -> list[dict]:
+    """Seed-paired high-churn A/B: cycle-start-greedy commit gate (fixed
+    point OFF) vs the device red/black fixed point (ON).
+
+    Both arms start from byte-identical saturated fleets and replay an
+    IDENTICAL pre-drawn churn schedule (every ``churn_every`` cycles the
+    oldest session departs and an identically-drawn replacement is
+    admitted), so every difference in the rows is the commit gate.
+
+    Per arm: total conflict-KEEPs (dirtied-residual commit-gate rejects —
+    the thrash signature this PR eliminates), no-gain KEEPs, commits,
+    commit-thrash count (a session assignment returning to its
+    2-cycles-ago placement after moving away: A→B→A), SLO breach-minutes
+    integrated from each cycle's per-session predicted latency vs its SLO,
+    and — ON arm — the converged-sweep histogram and joint-guard aborts.
+    ``check_regression.check_thrash`` gates ON-arm conflict-KEEPs == 0 and
+    ON breach-minutes ≤ OFF.
+    """
+    from collections import Counter
+
+    from repro.core import breach_seconds
+
+    catalog = fleet_model_catalog()
+    rng = np.random.default_rng(seed + 1)
+    schedule = [
+        dict(graph_idx=int(rng.integers(len(catalog))),
+             tokens_in=int(rng.integers(32, 96)),
+             tokens_out=int(rng.integers(8, 16)),
+             rate=float(rng.uniform(2.0, 5.0)),
+             source=int(rng.integers(0, 3)))
+        for _ in range(cycles // churn_every + 1)
+    ]
+    rows = []
+    for fixed_point in (False, True):
+        orch = _saturated_fleet(n_sessions, seed, fixed_point=fixed_point)
+        for t in range(3):                      # warm / compile
+            orch.step(now=float(t))
+        live = sorted(orch.sessions)
+        hist: dict[int, list[tuple]] = {}
+        conflict = nogain = commits = thrash = aborts = 0
+        sweep_hist: Counter = Counter()
+        breach_s = 0.0
+        churn_i = 0
+        for c in range(cycles):
+            now = 3.0 + float(c)
+            if c % churn_every == 0 and live:
+                orch.depart(live.pop(0))
+                sp = schedule[churn_i]
+                churn_i += 1
+                _, graph = catalog[sp["graph_idx"]]
+                live.append(orch.admit(
+                    graph,
+                    Workload(sp["tokens_in"], sp["tokens_out"], sp["rate"]),
+                    source_node=sp["source"], now=now,
+                ))
+            fd = orch.step(now=now)
+            conflict += fd.n_conflict_keep
+            nogain += fd.n_nogain_keep
+            commits += fd.n_migrate + fd.n_resplit
+            aborts += fd.fixed_point_aborts
+            if fixed_point and fd.fixed_point_sweeps:
+                sweep_hist[fd.fixed_point_sweeps] += 1
+            # breach integrated with ONE estimator for both arms: the fused
+            # read-path price of every committed config (decision-recorded
+            # latencies mix pricing stages and would bias the comparison)
+            p_sids, p_lat, _ = orch.price_fleet()
+            for sid, lat in zip(p_sids, p_lat):
+                sess = orch.sessions[sid]
+                slo = (sess.qos.latency_slo_s if sess.qos is not None
+                       else orch.thresholds.latency_max_s)
+                breach_s += breach_seconds(float(lat), slo)
+                h = hist.setdefault(sid, [])
+                h.append(sess.config.assignment)
+                if (len(h) >= 3 and h[-1] == h[-3] and h[-1] != h[-2]):
+                    thrash += 1
+        rows.append(dict(
+            arm="fixed_point_on" if fixed_point else "fixed_point_off",
+            sessions=n_sessions, cycles=cycles, churn_every=churn_every,
+            conflict_keeps=conflict, nogain_keeps=nogain, commits=commits,
+            commit_thrash=thrash,
+            breach_minutes=round(breach_s / 60.0, 3),
+            fixed_point_aborts=aborts,
+            sweep_hist={str(k): v for k, v in sorted(sweep_hist.items())},
+        ))
+    return rows
+
+
 def main() -> None:  # pragma: no cover
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true",
@@ -649,9 +747,13 @@ def main() -> None:  # pragma: no cover
     ap.add_argument("--chaos", action="store_true",
                     help="control-plane chaos A/B (crash recovery, RPC "
                          "faults, telemetry corruption, invariant checks)")
+    ap.add_argument("--thrash", action="store_true",
+                    help="seed-paired high-churn fixed-point A/B "
+                         "(conflict-KEEP rate, commit thrash, breach-"
+                         "minutes, converged-sweep histogram)")
     args = ap.parse_args()
     run_all = not (args.amortization or args.monitor or args.qos
-                   or args.storm or args.drift or args.chaos)
+                   or args.storm or args.drift or args.chaos or args.thrash)
 
     out: dict[str, list[dict]] = {}
     if run_all or args.amortization:
@@ -716,6 +818,17 @@ def main() -> None:  # pragma: no cover
             print(r)
         if not args.smoke:
             bench_sections["chaos"] = out["chaos_ab"]
+    if run_all or args.thrash:
+        print("\n== fixed-point thrash A/B (seed-paired high churn, "
+              "commit gate off/on) ==")
+        out["thrash_ab"] = thrash_ab(
+            n_sessions=8 if args.smoke else 16,
+            cycles=10 if args.smoke else 30,
+        )
+        for r in out["thrash_ab"]:
+            print(r)
+        if not args.smoke:
+            bench_sections["thrash"] = out["thrash_ab"]
     if run_all or args.drift:
         print("\n== calibrated-vs-analytic pricing drift (committed "
               "BENCH_profiles.json) ==")

@@ -65,6 +65,7 @@ from .forecast import CapacityForecaster, ForecastConfig
 from .fleet_eval import (
     BatchedMigrationSolver,
     BatchedRepairPass,
+    FixedPointResult,
     FleetCostEvaluator,
     FleetStateBuffers,
     PackedSessions,
@@ -77,6 +78,7 @@ from .graph import GraphNode, ModelGraph, SplitScheme, make_transformer_graph
 from .orchestrator import AdaptiveOrchestrator, Decision, DecisionKind
 from .placement import (
     Solution,
+    fixed_point_reference,
     greedy_placement,
     local_search,
     repair_capacity,
@@ -109,6 +111,7 @@ from .triggers import (
     QoSClass,
     Thresholds,
     TriggerState,
+    breach_seconds,
     should_reconfigure,
 )
 
@@ -126,7 +129,8 @@ __all__ = [
     "ModelProfile", "NodeSample", "PackedSessions", "PartitionConfig",
     "QOS_BATCH",
     "QOS_CLASSES", "QOS_INTERACTIVE", "QOS_STANDARD", "QoSClass",
-    "ReconfigurationBroadcast", "ResidentFleetKernel", "ResidentPrice",
+    "FixedPointResult", "ReconfigurationBroadcast", "ResidentFleetKernel",
+    "ResidentPrice", "fixed_point_reference", "breach_seconds",
     "RolloutPolicy",
     "SegmentProfile", "SegmentProfileEntry", "TelemetryGuard",
     "SessionProblem", "Solution", "SplitRevision", "SplitScheme",

@@ -179,6 +179,18 @@ class FleetDecision:
     n_node_fail: int = 0
     dead_nodes: tuple[int, ...] = ()
     infeasible_sids: tuple[int, ...] = ()
+    # KEEP taxonomy (PR 9): a commit-gate KEEP caused by residuals another
+    # session's commit dirtied THIS cycle (or by the fixed-point joint
+    # guard) is a CONFLICT — the thrash the device fixed point exists to
+    # eliminate — and must not be conflated with an ordinary no-gain
+    # hysteresis KEEP
+    n_conflict_keep: int = 0
+    n_nogain_keep: int = 0
+    # red/black sweeps the fixed-point dispatch ran this cycle (0 when no
+    # row triggered or the legacy cycle-start-greedy path is active), and
+    # whether its final joint Eq. 4 guard reverted the cycle
+    fixed_point_sweeps: int = 0
+    fixed_point_aborts: int = 0
 
 
 def session_induced_loads(
@@ -470,6 +482,14 @@ class FleetOrchestrator:
     # throttle, AND the commit hysteresis — a storm is just a large
     # triggered set riding the existing fused migrate/re-split dispatches
     heartbeats: HeartbeatRegistry | None = None
+    # joint reconfiguration mode (PR 9): ON runs the device red/black
+    # fixed point over the triggered set — each accepted move is priced
+    # against residuals containing every earlier move, so the host commit
+    # gate never has to conflict-KEEP a candidate whose residuals another
+    # commit dirtied.  OFF keeps the legacy cycle-start-greedy path (the
+    # --thrash A/B baseline).
+    use_fixed_point: bool = True
+    fixed_point_sweeps: int = 8
 
     # degraded-mode telemetry firewall (None → trust telemetry verbatim);
     # clean samples pass through bit-identically, so the guard is on by
@@ -1121,11 +1141,109 @@ class FleetOrchestrator:
                 kind, sess.config, reasons, cur_lat[sid], 0.0
             )
 
-        resplit_rows: list[tuple[int, Solution, float]] = []  # (sid, mig, lat)
+        resplit_rows: list[tuple[int, Solution, float]] = []  # (sid, sol, lat)
         infeasible: list[int] = []          # storm-cycle Eq. 4 rejects
         dirty = False                       # any commit this cycle?
         table = None
-        if triggered:
+        fp = None                           # fixed-point dispatch result
+        n_conflict = 0                      # conflict KEEPs (see FleetDecision)
+        n_nogain = 0                        # hysteresis no-gain KEEPs
+        fp_sweeps_run = 0
+        fp_aborts = 0
+        if triggered and self.use_fixed_point:
+            # joint fixed point (PR 9): ONE device dispatch resolves the
+            # whole triggered set — each accepted move was priced against
+            # residuals containing every earlier accepted move (red/black
+            # sequential consistency), so the host commits the returned
+            # rows WITHOUT re-checking hysteresis or Eq. 4 against a table
+            # other commits dirtied.  The conflict-KEEP re-check paths of
+            # the legacy branch below are retired here.
+            t_ev = time.perf_counter()
+            trig_m = np.zeros(buf.n_rows, dtype=bool)
+            force_m = np.zeros(buf.n_rows, dtype=bool)
+            slo_m = np.full(buf.n_rows, self.thresholds.latency_max_s)
+            for sid in sids:
+                slo_m[rows[sid]] = self._session_thresholds(
+                    self.sessions[sid]).latency_max_s
+            for sid in triggered:
+                trig_m[rows[sid]] = True
+                if sid in storm:
+                    force_m[rows[sid]] = True
+            fp = self.kernel.migrate_fixed_point(
+                buf, state, trig=trig_m, force=force_m, slo=slo_m,
+                weights=self.weights, bw_floor=self.bw_floor_frac,
+                min_improvement_frac=self.min_improvement_frac,
+                max_sweeps=self.fixed_point_sweeps, state_args=state_args,
+                base_bg=(base.background_util if base is not None else None),
+                base_lbw=(base.link_bw if base is not None else None),
+            )
+            trows = [rows[sid] for sid in triggered]
+            fa_h, fl_h, moved_h, movedpre_h = gather_rows(
+                trows, fp.assign, fp.lat, fp.moved, fp.moved_pre
+            )
+            fp_sweeps_run = int(fp.sweeps)
+            fp_aborts = int(bool(fp.aborted))
+            eval_t += time.perf_counter() - t_ev
+            # the device totals already DESCRIBE the fixed-point assignment,
+            # so committed moves need no per-commit table refresh: per-sid
+            # entries fill lazily from the (new) configs and stay consistent
+            # with these totals.  (A chaos-aborted rollout leaves the totals
+            # one move ahead for the rest of this cycle; heals next cycle.)
+            table = (
+                {},
+                np.array(fp.tot_node), np.array(fp.tot_link),
+                np.array(fp.tot_w),
+            )
+            for pos, sid in enumerate(triggered):
+                sess = self.sessions[sid]
+                th = self._session_thresholds(sess)
+                k = len(sess.config.boundaries) - 1
+                f_lat = float(fl_h[pos])
+                committed = False
+                if moved_h[pos]:
+                    # deliberately NOT coalesced: the committed config must
+                    # stay bit-identical to the device row, or the post-FP
+                    # totals stop describing the fleet (a later re-split
+                    # coalesces anyway)
+                    mig = Solution(
+                        sess.config.boundaries,
+                        tuple(int(x) for x in fa_h[pos, :k]), f_lat,
+                    )
+                    status = self._commit(
+                        sid, mig, f_lat, cmp_lat[sid], DecisionKind.MIGRATE,
+                        reasons_by_sid[sid], per_session, now,
+                        force=sid in storm, pregated=True,
+                    )
+                    committed = status == "committed"
+                if f_lat > th.latency_max_s:
+                    # the joint fixed point still breaches this row's SLO:
+                    # escalate to the batched re-split, comparing against
+                    # the (possibly just-committed) incumbent
+                    resplit_rows.append((sid, Solution(
+                        sess.config.boundaries, sess.config.assignment, 0.0,
+                    ), f_lat))
+                    if not committed:
+                        per_session[sid] = Decision(
+                            DecisionKind.RESPLIT, sess.config,
+                            reasons_by_sid[sid], f_lat, 0.0,
+                        )
+                    continue
+                if not moved_h[pos]:
+                    if movedpre_h[pos]:
+                        # the joint Eq. 4 guard reverted this row's accepted
+                        # move — the fixed-point flavour of a conflict KEEP
+                        n_conflict += 1
+                        tag = ("conflict-keep", "fixed-point-abort")
+                        if dead_set:
+                            infeasible.append(sid)
+                    else:
+                        n_nogain += 1
+                        tag = ("no-gain-keep",)
+                    per_session[sid] = Decision(
+                        DecisionKind.KEEP, sess.config,
+                        reasons_by_sid[sid] + tag, f_lat, 0.0,
+                    )
+        elif triggered:
             t_ev = time.perf_counter()
             assign_d, mig_lat_d, mig_cost_d = self.kernel.migrate(
                 buf, price, state, weights=self.weights,
@@ -1183,10 +1301,17 @@ class FleetOrchestrator:
                             if dirty else mig_feasible[sid])
                 if not feasible:
                     # record the KEPT incumbent's latency, not the price of
-                    # the candidate just rejected
+                    # the candidate just rejected.  A dirtied-residual reject
+                    # is a CONFLICT (an earlier commit claimed the memory);
+                    # a cycle-start reject is plain Eq. 4 infeasibility.
+                    if dirty:
+                        n_conflict += 1
+                        tag = ("conflict-keep",)
+                    else:
+                        tag = ("infeasible-keep",)
                     per_session[sid] = Decision(
-                        DecisionKind.KEEP, sess.config, reasons_by_sid[sid],
-                        c_lat, 0.0,
+                        DecisionKind.KEEP, sess.config,
+                        reasons_by_sid[sid] + tag, c_lat, 0.0,
                     )
                     if dead_set:
                         infeasible.append(sid)
@@ -1196,11 +1321,15 @@ class FleetOrchestrator:
                 # totals, and the lazy table may not hold it yet
                 if sid not in table[0]:
                     table[0][sid] = session_induced_loads(sess, state)
-                if self._commit(sid, mig, m_lat, c_lat, DecisionKind.MIGRATE,
-                                reasons_by_sid[sid], per_session, now,
-                                force=sid in storm):
+                status = self._commit(
+                    sid, mig, m_lat, c_lat, DecisionKind.MIGRATE,
+                    reasons_by_sid[sid], per_session, now, force=sid in storm,
+                )
+                if status == "committed":
                     self._refresh_loads(table, sid, state)
                     dirty = True
+                elif status == "keep-no-gain":
+                    n_nogain += 1
 
         # batched full re-split (Eq. 8): ONE vmapped DP for the failing set
         if resplit_rows:
@@ -1223,14 +1352,22 @@ class FleetOrchestrator:
                 for (sid, *_), rs in zip(resplit_rows, rs_sols)
             ]
             rrows = [rows[sid] for sid, *_ in resplit_rows]
-            # forecast cycles price re-split candidates against the same
-            # worst-case effective rows the migrate kernel used
-            bg_h, lbw_h, mem_h = gather_rows(
-                rrows,
-                price.bg_fc if use_fc else price.bg,
-                price.lbw_fc if use_fc else price.link_bw,
-                price.mem,
-            )
+            if fp is not None:
+                # fixed-point cycles price the escalated re-splits against
+                # the CONVERGED effective rows — the residual surface after
+                # every accepted move, not the cycle-start one
+                bg_h, lbw_h, mem_h = gather_rows(
+                    rrows, fp.bg, fp.link_bw, fp.mem,
+                )
+            else:
+                # forecast cycles price re-split candidates against the same
+                # worst-case effective rows the migrate kernel used
+                bg_h, lbw_h, mem_h = gather_rows(
+                    rrows,
+                    price.bg_fc if use_fc else price.bg,
+                    price.lbw_fc if use_fc else price.link_bw,
+                    price.mem,
+                )
             packed_rs = pack_sessions(rs_items, min_k=buf.max_segs)
             # Eq. 4 over the WHOLE re-split set at once: one vectorized
             # check, and — only when something violates — ONE fused
@@ -1263,6 +1400,101 @@ class FleetOrchestrator:
                     state=state, weights=self.weights,
                 )
             eval_t += time.perf_counter() - t_ev
+            if fp is not None:
+                # fixed-point escalation: the incumbent already IS the best
+                # joint-feasible row (committed or kept above); accept the
+                # re-split only if it improves on it, with one single-row
+                # repair retry against the live residuals before conceding
+                # a conflict-KEEP
+                for pos, (sid, cur_sol, f_lat) in enumerate(resplit_rows):
+                    sess = self.sessions[sid]
+                    rs, r_lat = rs_sols[pos], float(rs_lat[pos])
+                    c_lat = f_lat
+                    if dirty:
+                        r_lat = self._lat_py(sess, rs, state, table, base)
+                        c_lat = self._lat_py(sess, cur_sol, state, table, base)
+                    feasible = (self._mem_feasible(sess, rs, state, table)
+                                if dirty else not over_rs[pos].any())
+                    if not feasible and dirty:
+                        # a dirtied reject never stands on a stale price:
+                        # first a single-row repair of the batch candidate
+                        # against the LIVE residuals, then — if that still
+                        # violates — a fresh single-row re-solve.  Whatever
+                        # is gated below was priced against the residuals
+                        # it commits into, so the stale-price conflict-KEEP
+                        # of the legacy path is structurally gone here.
+                        # (Clean-table rejects skip the rescue: the batch
+                        # candidate was already repaired against the
+                        # CONVERGED fixed-point residuals in one fused
+                        # dispatch, so a violation there is plain Eq. 4
+                        # infeasibility — re-solving per row would pay B
+                        # host round-trips per cycle in saturated overload
+                        # for candidates that cannot become feasible.)
+                        eff = self.effective_state(
+                            state, exclude=(sid,), _table=table, base=base,
+                        )
+                        rs2 = self.repair_solution(
+                            sess.graph, rs, eff, sess.workload,
+                            source_node=sess.source_node,
+                            input_bytes_per_token=sess.input_bytes_per_token,
+                        )
+                        if rs2.assignment == rs.assignment or \
+                                not self._mem_feasible(sess, rs2, state,
+                                                       table):
+                            [rs2] = self.splitter.solve_batch(
+                                [self._session_problem(sess)], eff,
+                                max_units=self.max_units,
+                            )
+                            rs2 = coalesce_same_node(rs2)
+                            rs2 = self.repair_solution(
+                                sess.graph, rs2, eff, sess.workload,
+                                source_node=sess.source_node,
+                                input_bytes_per_token=(
+                                    sess.input_bytes_per_token),
+                            )
+                        if self._mem_feasible(sess, rs2, state, table):
+                            rs = rs2
+                            r_lat = self._lat_py(sess, rs, state, table, base)
+                            feasible = True
+                    if not feasible:
+                        # irreparable even after the repair retry AND a
+                        # fresh re-solve against the LIVE residuals: no
+                        # feasible split exists for this row in the current
+                        # fleet state.  That is plain Eq. 4 infeasibility —
+                        # never a conflict-KEEP, because nothing gated here
+                        # was priced against residuals a sibling commit
+                        # dirtied (the rescue above re-priced it live).
+                        tag = ("infeasible-keep",)
+                        prior = per_session.get(sid)
+                        if (prior is None
+                                or prior.kind is not DecisionKind.MIGRATE):
+                            per_session[sid] = Decision(
+                                DecisionKind.KEEP, sess.config,
+                                reasons_by_sid[sid] + tag, c_lat, 0.0,
+                            )
+                        if dead_set:
+                            infeasible.append(sid)
+                        continue
+                    if sid not in table[0]:
+                        table[0][sid] = session_induced_loads(sess, state)
+                    prior = per_session.get(sid)
+                    status = self._commit(
+                        sid, rs, r_lat, c_lat, DecisionKind.RESPLIT,
+                        reasons_by_sid[sid], per_session, now,
+                        force=sid in storm,
+                    )
+                    if status == "committed":
+                        self._refresh_loads(table, sid, state)
+                        dirty = True
+                    elif (prior is not None
+                          and prior.kind is DecisionKind.MIGRATE):
+                        # the fixed-point MIGRATE committed above stands;
+                        # a failed refinement must not downgrade the
+                        # recorded decision to KEEP
+                        per_session[sid] = prior
+                    elif status == "keep-no-gain":
+                        n_nogain += 1
+                resplit_rows = []
             for pos, (sid, mig, m_lat) in enumerate(resplit_rows):
                 sess = self.sessions[sid]
                 rs, r_lat = rs_sols[pos], float(rs_lat[pos])
@@ -1293,10 +1525,15 @@ class FleetOrchestrator:
                     feasible = not over_rs[pos].any()
                 if not feasible:
                     # as in the migrate branch: the KEEP records the kept
-                    # incumbent's latency
+                    # incumbent's latency, tagged by WHY it was rejected
+                    if dirty:
+                        n_conflict += 1
+                        tag = ("conflict-keep",)
+                    else:
+                        tag = ("infeasible-keep",)
                     per_session[sid] = Decision(
-                        DecisionKind.KEEP, sess.config, reasons_by_sid[sid],
-                        c_lat, 0.0,
+                        DecisionKind.KEEP, sess.config,
+                        reasons_by_sid[sid] + tag, c_lat, 0.0,
                     )
                     if dead_set:
                         infeasible.append(sid)
@@ -1305,11 +1542,15 @@ class FleetOrchestrator:
                 # replaces the config (see the migrate branch above)
                 if sid not in table[0]:
                     table[0][sid] = session_induced_loads(sess, state)
-                if self._commit(sid, chosen, chosen_lat, c_lat, kind,
-                                reasons_by_sid[sid], per_session, now,
-                                force=sid in storm):
+                status = self._commit(
+                    sid, chosen, chosen_lat, c_lat, kind,
+                    reasons_by_sid[sid], per_session, now, force=sid in storm,
+                )
+                if status == "committed":
                     self._refresh_loads(table, sid, state)
                     dirty = True
+                elif status == "keep-no-gain":
+                    n_nogain += 1
 
         solver_time = time.perf_counter() - t0
         if dead_set:
@@ -1343,6 +1584,10 @@ class FleetOrchestrator:
             n_node_fail=len(storm),
             dead_nodes=tuple(sorted(dead_set)),
             infeasible_sids=tuple(infeasible),
+            n_conflict_keep=n_conflict,
+            n_nogain_keep=n_nogain,
+            fixed_point_sweeps=fp_sweeps_run,
+            fixed_point_aborts=fp_aborts,
         )
         self.decisions.append(fd)
         for sid, d in per_session.items():
@@ -1361,12 +1606,18 @@ class FleetOrchestrator:
         per_session: dict[int, Decision],
         now: float,
         force: bool = False,
-    ) -> bool:
+        pregated: bool = False,
+    ) -> str:
         """Hysteresis + two-phase rollout; KEEP on no-gain or abort.
 
-        Returns True iff a new config was actually committed (callers then
-        refresh the shared load table for the rest of the cycle; the
-        session's resident-buffer row is updated here).
+        Returns a commit status: ``"committed"`` iff a new config was
+        actually rolled out (callers then refresh the shared load table for
+        the rest of the cycle; the session's resident-buffer row is updated
+        here), else one of ``"keep-same"`` (identical config),
+        ``"keep-no-gain"`` (hysteresis rejected the candidate — the
+        ordinary anti-thrash KEEP), or ``"keep-abort"`` (the two-phase
+        rollout itself aborted).  The split lets :meth:`step` count no-gain
+        KEEPs separately from conflict KEEPs (PR 9 satellite).
 
         SLO rescue: the anti-thrash hysteresis demands a material
         (``min_improvement_frac``) gain before paying for a rollout — but a
@@ -1381,6 +1632,12 @@ class FleetOrchestrator:
         node, whatever its price — both latencies were measured on a
         topology that no longer exists.  A committed forced move also
         resets the session's latency EWMA for the same reason.
+
+        ``pregated`` (the fixed-point path) also skips the improvement
+        threshold — the device accept predicate already applied it inside
+        the red/black loop, against fresher residuals than the host has —
+        but does NOT reset the EWMA: the hardware the session measured is
+        still alive.
         """
         sess = self.sessions[sid]
         same = ((chosen.boundaries, chosen.assignment)
@@ -1390,17 +1647,20 @@ class FleetOrchestrator:
             (chosen.boundaries, chosen.assignment),
             chosen_lat, cur_lat, self.min_improvement_frac,
         )
-        if force:
+        if force or pregated:
             keep = same
         elif keep:
             slo = self._session_thresholds(sess).latency_max_s
             if not same and cur_lat > slo >= chosen_lat:
                 keep = False
         if keep:
+            status = "keep-same" if same else "keep-no-gain"
+            tag = () if same else ("no-gain-keep",)
             per_session[sid] = Decision(
-                DecisionKind.KEEP, sess.config, reasons, chosen_lat, 0.0
+                DecisionKind.KEEP, sess.config, reasons + tag, chosen_lat,
+                0.0,
             )
-            return False
+            return status
         cfg = self.broadcast.rollout(
             chosen.boundaries, chosen.assignment,
             reason=f"session {sid}: " + "; ".join(reasons), now=now,
@@ -1408,16 +1668,17 @@ class FleetOrchestrator:
         )
         if cfg is None:  # rollout aborted — keep serving the old config
             per_session[sid] = Decision(
-                DecisionKind.KEEP, sess.config, reasons, chosen_lat, 0.0
+                DecisionKind.KEEP, sess.config,
+                reasons + ("rollout-abort",), chosen_lat, 0.0,
             )
-            return False
+            return "keep-abort"
         sess.config = cfg
         sess.t_last_reconfig = now
         if force:
             sess.ewma_latency = EWMA(sess.ewma_latency.alpha)
         per_session[sid] = Decision(kind, cfg, reasons, chosen_lat, 0.0)
         self._upsert_row(sess)
-        return True
+        return "committed"
 
     # ------------------------------------------------------------------ #
     # crash-recoverable control-plane state (the journal)

@@ -83,6 +83,7 @@ __all__ = [
     "BatchedMigrationSolver",
     "BatchedRepairPass",
     "FleetStateBuffers",
+    "FixedPointResult",
     "ResidentFleetKernel",
     "ResidentPrice",
     "gather_rows",
@@ -1366,6 +1367,239 @@ def _make_fused_migrate(K: int, n: int, alpha: float, beta: float,
     return migrate
 
 
+def _make_fixed_point(K: int, n: int, alpha: float, beta: float, gamma: float,
+                      mem_penalty: float, bw_floor: float, imp_frac: float,
+                      max_sweeps: int):
+    """Red/black fixed-point joint reconfiguration over the triggered set.
+
+    The fused migrate kernel prices every candidate against CYCLE-START
+    residuals, so two simultaneous movers cannot see each other's landing —
+    the host commit gate re-checked each row against dirtied residuals and
+    KEEPed on conflict, degrading to thrash at high churn (ROADMAP open
+    item 5).  This program replaces that with a device-side sequential-
+    consistency loop: rows are coloured by parity, and each half-sweep
+
+    1. recomputes every row's EFFECTIVE state (bg / link bw / residual
+       memory) from the fleet's *current* joint assignment — i.e. including
+       all moves committed by earlier half-sweeps (the :func:`_price_core`
+       fold with ``base_bg`` / ``base_lbw`` as the fold base, so the
+       forecast worst-case base slots in unchanged),
+    2. runs the migration DP + greedy Eq. 4 repair for ALL rows against
+       those residuals (one colour's accepts per half-sweep keeps the
+       compiled shape fixed),
+    3. accepts a candidate only for triggered, active rows of the sweep's
+       colour whose move is fleet-globally justified: the objective is each
+       row's predicted SLO *breach-seconds* (``max(0, lat - slo)``), with
+       the legacy hysteresis latency test as the tie-break at equal breach
+       — so the loop is coordinate descent on total predicted
+       breach-seconds, not per-session greedy latency,
+
+    iterating until no row moves or the sweep budget is exhausted.  A final
+    JOINT Eq. 4 guard compares total fleet overflow at the fixed point
+    against the starting assignment and reverts everything if the loop made
+    it worse (counted by the caller as conflict-KEEPs; the thrash gate
+    asserts it never fires).  Rows never accept an Eq. 4-violating
+    candidate (``cand_over`` mask), but an overfull INCUMBENT may escape
+    through a feasible candidate even without a latency gain (``escape``).
+
+    The scalar reference is :func:`repro.core.placement.
+    fixed_point_reference` — the same schedule, op for op, in numpy; device
+    bit-identity on the integer assignments is test-enforced in
+    ``tests/test_fixed_point.py``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    dp = _make_migration_dp(K, n)
+    ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
+    rep = _make_repair_core(K, n)
+
+    def fixed_point(seg_flops, seg_w, seg_priv, seg_node0, valid, xbytes,
+                    n_segs, t_in, t_out, lam, source, input_bytes_tok,
+                    active, trig, force, slo,
+                    base_bg, base_lbw, link_bw, link_lat, flops_per_s,
+                    mem_bw, trusted, mem_bytes):
+        B = seg_flops.shape[0]
+        bidx = jnp.arange(B)[:, None]
+        rows = jnp.arange(B)
+        av = valid & active[:, None]
+        w_av = jnp.where(av, seg_w, 0.0)
+        total_tok = t_in + t_out
+        colour = (jnp.arange(B) % 2) == 0
+
+        def eff(a):
+            # induced loads at joint assignment `a`, folded onto the base
+            # capacities — the _price_core sequence with seg_node := a
+            f_raw = jnp.maximum(flops_per_s[a], _EPS)
+            m_raw = jnp.maximum(mem_bw[a], _EPS)
+            ft = seg_flops / f_raw
+            svc = t_in[:, None] * ft + t_out[:, None] * jnp.maximum(
+                ft, seg_w / m_raw
+            )
+            svc = jnp.where(av, svc, 0.0)
+            node_r = jnp.zeros((B, n)).at[bidx, a].add(lam[:, None] * svc)
+            wb = jnp.zeros((B, n)).at[bidx, a].add(w_av)
+            prev = jnp.concatenate([source[:, None], a[:, :-1]], axis=1)
+            cross = (prev != a) & av & (xbytes > 0)
+            lrho = jnp.where(
+                cross,
+                lam[:, None] * xbytes * total_tok[:, None]
+                / jnp.maximum(link_bw[prev, a], _EPS),
+                0.0,
+            )
+            link_r = jnp.zeros((B, n, n)).at[bidx, prev, a].add(lrho)
+            tot_node = node_r.sum(axis=0)
+            tot_link = link_r.sum(axis=0)
+            tot_w = wb.sum(axis=0)
+            bg = jnp.clip(
+                base_bg[None, :] + (tot_node[None, :] - node_r), 0.0, 0.99
+            )
+            lbw = base_lbw[None] * jnp.clip(
+                1.0 - (tot_link[None] - link_r), bw_floor, 1.0
+            )
+            mem = jnp.maximum(
+                0.0, mem_bytes[None, :] - (tot_w[None, :] - wb)
+            )
+            return bg, lbw, mem, wb, tot_node, tot_link, tot_w
+
+        def half(a, colour_mask):
+            bg, lbw, mem, wb, *_ = eff(a)
+            exec_cost, xfer, src_xfer = _surrogate_batch(
+                seg_flops, seg_w, seg_priv, xbytes, t_in, t_out, lam,
+                source, input_bytes_tok, bg, lbw, link_lat, flops_per_s,
+                mem_bw, trusted, mem, n,
+            )
+            C, parents = jax.vmap(dp)(exec_cost, xfer, n_segs, src_xfer)
+            j0 = jnp.argmin(C, axis=1)
+
+            def bt(j, step):
+                j = jnp.where(step <= n_segs - 2, parents[rows, step, j], j)
+                return j, j
+
+            _, ys = jax.lax.scan(bt, j0, jnp.arange(K - 2, -1, -1))
+            cand = jnp.concatenate(
+                [jnp.flip(ys, axis=0).T, j0[:, None]], axis=1
+            )
+            cand = jax.vmap(rep)(seg_w, valid, n_segs, cand, mem,
+                                 exec_cost, xfer, src_xfer)
+            # invalid positions carry the incumbent so `changed` is clean
+            cand = jnp.where(valid, cand, a)
+            cur_lat, _, _ = ev(seg_flops, seg_w, seg_priv, a, valid,
+                               xbytes, t_in, t_out, lam, bg, lbw, link_lat,
+                               flops_per_s, mem_bw, trusted, mem)
+            cand_lat, _, _ = ev(seg_flops, seg_w, seg_priv, cand, valid,
+                                xbytes, t_in, t_out, lam, bg, lbw, link_lat,
+                                flops_per_s, mem_bw, trusted, mem)
+            used_cand = jnp.zeros((B, n)).at[bidx, cand].add(w_av)
+            cand_over = jnp.any(used_cand > mem, axis=1)
+            cur_over = jnp.any(wb > mem, axis=1)
+            changed = jnp.any(cand != a, axis=1)
+            cur_breach = jnp.maximum(0.0, cur_lat - slo)
+            cand_breach = jnp.maximum(0.0, cand_lat - slo)
+            better = cand_lat < cur_lat * (1.0 - imp_frac)
+            gain = (cand_breach < cur_breach) | (
+                (cand_breach == cur_breach) & better
+            )
+            escape = cur_over & ~cand_over
+            accept = (trig & active & colour_mask & changed & ~cand_over
+                      & (gain | escape | force))
+            a_new = jnp.where(accept[:, None], cand, a)
+            # fleet-global monotonicity: the colour's accepted moves only
+            # stand if the TOTAL predicted breach-seconds — re-priced under
+            # the residuals those moves induce — does not increase (or the
+            # moves shrink total Eq. 4 overflow: storm escapes must land
+            # even at a latency cost).  Per-row accepts are greedy in the
+            # row's own breach; this gate makes each half-sweep a descent
+            # step on the JOINT objective, so an exhausted sweep budget can
+            # never commit a mid-oscillation state worse than cycle start.
+            bg2, lbw2, mem2, *_ = eff(a_new)
+            new_lat, _, _ = ev(seg_flops, seg_w, seg_priv, a_new, valid,
+                               xbytes, t_in, t_out, lam, bg2, lbw2,
+                               link_lat, flops_per_s, mem_bw, trusted, mem2)
+            breach_cur = jnp.where(
+                active, jnp.maximum(0.0, cur_lat - slo), 0.0
+            ).sum()
+            breach_new = jnp.where(
+                active, jnp.maximum(0.0, new_lat - slo), 0.0
+            ).sum()
+
+            def tot_over(ax):
+                used = jnp.zeros((B, n)).at[bidx, ax].add(w_av)
+                return jnp.maximum(0.0, used.sum(axis=0) - mem_bytes).sum()
+
+            over_cur, over_new = tot_over(a), tot_over(a_new)
+            # lexicographic descent on (total overflow, total breach): the
+            # half-sweep may never increase joint Eq. 4 overflow, and at
+            # equal overflow may not increase total breach — so the final
+            # joint guard below is a belt-and-braces check that cannot
+            # actually fire, and a commit is never a conflict by design
+            ok = (over_new <= over_cur) & (
+                (breach_new <= breach_cur + 1e-9) | (over_new < over_cur)
+            )
+            return jnp.where(ok, a_new, a), ok & accept.any()
+
+        def body(carry):
+            a, i, _, moved_rows = carry
+            a1, m1 = half(a, colour)
+            a2, m2 = half(a1, ~colour)
+            moved_rows = moved_rows | jnp.any(a2 != a, axis=1)
+            return a2, i + 1, m1 | m2, moved_rows
+
+        def cond(carry):
+            _, i, moved, _ = carry
+            return (i < max_sweeps) & moved
+
+        init = (seg_node0, jnp.zeros((), jnp.int64), jnp.ones((), bool),
+                jnp.zeros(B, dtype=bool))
+        a_fp, sweeps, _, moved_pre = jax.lax.while_loop(cond, body, init)
+
+        # final joint Eq. 4 guard: the fixed point must not be worse than
+        # the starting joint assignment in total fleet overflow
+        def total_over(ax):
+            used = jnp.zeros((B, n)).at[bidx, ax].add(w_av)
+            return jnp.maximum(0.0, used.sum(axis=0) - mem_bytes).sum()
+
+        abort = total_over(a_fp) > total_over(seg_node0)
+        a_out = jnp.where(abort, seg_node0, a_fp)
+        moved = moved_pre & jnp.any(a_out != seg_node0, axis=1)
+        bg, lbw, mem, _, tot_node, tot_link, tot_w = eff(a_out)
+        lat, _, _ = ev(seg_flops, seg_w, seg_priv, a_out, valid, xbytes,
+                       t_in, t_out, lam, bg, lbw, link_lat, flops_per_s,
+                       mem_bw, trusted, mem)
+        return (a_out, lat, sweeps, moved, moved_pre, abort,
+                bg, lbw, mem, tot_node, tot_link, tot_w)
+
+    return fixed_point
+
+
+@dataclass(frozen=True)
+class FixedPointResult:
+    """Device outputs of one fixed-point dispatch (row-indexed).
+
+    ``assign`` / ``lat`` are the JOINT fixed-point assignment and the
+    latency each row sees under it; ``moved`` marks rows whose final
+    assignment differs from cycle start (already accept-gated on device —
+    the host commits them without re-checking hysteresis).  ``tot_*`` are
+    the fleet totals AT the final assignment, so the caller can seed a
+    residual table that is consistent with the committed moves without any
+    per-commit refresh; ``bg`` / ``link_bw`` / ``mem`` are the matching
+    per-row effective states for the re-split refinement stage.
+    """
+
+    assign: object     # (B, K) joint fixed-point assignment
+    lat: object        # (B,)   latency at the joint assignment
+    sweeps: object     # ()     red/black sweeps run (incl. the converged one)
+    moved: object      # (B,)   rows whose assignment changed (post-guard)
+    moved_pre: object  # (B,)   rows that moved before the joint Eq. 4 guard
+    aborted: object    # ()     joint guard fired — all rows reverted
+    bg: object         # (B, n) effective background util at `assign`
+    link_bw: object    # (B, n, n) effective link bandwidth at `assign`
+    mem: object        # (B, n) residual memory at `assign`
+    tot_node: object   # (n,)   fleet-total induced node rho at `assign`
+    tot_link: object   # (n, n) fleet-total link rho at `assign`
+    tot_w: object      # (n,)   fleet-total resident bytes at `assign`
+
+
 class ResidentFleetKernel:
     """Compiled fused-step programs, keyed by (rows, segs, n, weights).
 
@@ -1382,6 +1616,7 @@ class ResidentFleetKernel:
     def __init__(self, cost_model: CostModel | None = None) -> None:
         self._price_c: dict[tuple, object] = {}
         self._mig_c: dict[tuple, object] = {}
+        self._fp_c: dict[tuple, object] = {}
         self.cost_model = cost_model if cost_model is not None \
             else AnalyticCostModel()
 
@@ -1501,3 +1736,65 @@ class ResidentFleetKernel:
                 link_lat, flops_per_s, mem_bw, trusted,
             )
         return assign, mig_lat, cost
+
+    def migrate_fixed_point(
+        self,
+        buf: FleetStateBuffers,
+        state: SystemState,
+        *,
+        trig: np.ndarray,
+        force: np.ndarray,
+        slo: np.ndarray,
+        weights: CostWeights = CostWeights(),
+        mem_penalty: float = 1e3,
+        bw_floor: float = 0.05,
+        min_improvement_frac: float = 0.10,
+        max_sweeps: int = 8,
+        state_args: tuple | None = None,
+        base_bg: np.ndarray | None = None,
+        base_lbw: np.ndarray | None = None,
+    ) -> FixedPointResult:
+        """One dispatch: red/black fixed point over the triggered set.
+
+        ``trig`` / ``force`` / ``slo`` are (n_rows,) row-indexed masks/SLOs;
+        a forced row (failure storm) accepts any feasible change regardless
+        of gain.  ``base_bg`` / ``base_lbw`` override the fold base with the
+        forecast worst-case capacities (``None`` keeps the instantaneous
+        C(t), matching the reactive path); induced-load denominators always
+        use the instantaneous link matrix, exactly like the fused forecast
+        pricing.  Needs no :class:`ResidentPrice` — the program recomputes
+        effective state per half-sweep from the evolving joint assignment.
+        """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        n = state.num_nodes
+        key = (buf.n_rows, buf.max_segs, n, weights, float(mem_penalty),
+               float(bw_floor), float(min_improvement_frac), int(max_sweeps))
+        if key not in self._fp_c:
+            self._fp_c[key] = jax.jit(_make_fixed_point(
+                buf.max_segs, n, weights.alpha, weights.beta, weights.gamma,
+                mem_penalty, bw_floor, min_improvement_frac, max_sweeps,
+            ))
+        if state_args is None:
+            state_args = self.state_args(state)
+        (bg0, link_bw, link_lat, flops_per_s, mem_bw, trusted,
+         mem_bytes) = state_args
+        with enable_x64(True):
+            bb = bg0 if base_bg is None else jnp.asarray(
+                np.asarray(base_bg, dtype=np.float64))
+            bl = link_bw if base_lbw is None else jnp.asarray(np.nan_to_num(
+                np.asarray(base_lbw, dtype=np.float64), posinf=_BIG))
+            out = self._fp_c[key](
+                buf.seg_flops, buf.seg_wbytes, buf.seg_priv, buf.seg_node,
+                buf.valid, buf.xfer_bytes_tok, buf.n_segs, buf.t_in,
+                buf.t_out, buf.lam, buf.source, buf.input_bytes_tok,
+                buf.active,
+                jnp.asarray(np.asarray(trig, dtype=bool)),
+                jnp.asarray(np.asarray(force, dtype=bool)),
+                jnp.asarray(np.asarray(slo, dtype=np.float64)),
+                bb, bl, link_bw, link_lat, flops_per_s, mem_bw, trusted,
+                mem_bytes,
+            )
+        return FixedPointResult(*out)

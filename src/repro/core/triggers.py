@@ -9,7 +9,7 @@ from dataclasses import dataclass, field
 __all__ = ["Thresholds", "TriggerState", "should_reconfigure", "EWMA",
            "SolveThrottle", "QoSClass", "QOS_INTERACTIVE", "QOS_STANDARD",
            "QOS_BATCH", "QOS_CLASSES", "decision_gate", "hysteresis_keep",
-           "forecast_reconfigure"]
+           "forecast_reconfigure", "breach_seconds"]
 
 
 @dataclass(frozen=True)
@@ -219,3 +219,15 @@ def should_reconfigure(env: TriggerState, th: Thresholds) -> bool:
         )
     env.kinds = tuple(kinds)
     return bool(env.reasons)
+
+
+def breach_seconds(latency_s: float, slo_s: float) -> float:
+    """Predicted per-token SLO breach magnitude, in seconds (Eq. 3 slack).
+
+    ``max(0, latency − SLO)``: the fleet-global tie-break the fixed-point
+    reconfiguration minimises (total predicted breach-seconds across the
+    triggered set), and the unit the ``--thrash`` A/B integrates into
+    breach-minutes.  Zero for any row meeting its SLO, so summing over a
+    fleet never rewards over-delivering on already-feasible sessions.
+    """
+    return max(0.0, float(latency_s) - float(slo_s))

@@ -270,6 +270,8 @@ def build_fleet_scenario(
             cooldown_s=10.0
         ),
         weights=CostWeights(alpha=1.0, beta=0.02, gamma=1000.0),
+        use_fixed_point=p.sim.fixed_point,
+        fixed_point_sweeps=p.sim.fixed_point_sweeps,
     )
     return FleetSimulator(
         base_state=state,

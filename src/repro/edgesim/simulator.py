@@ -287,6 +287,13 @@ class FleetSimConfig:
     chaos_handling: bool = True
     # where the ON arm journals orchestrator state (None → a temp file)
     journal_path: str | None = None
+    # joint fixed-point reconfiguration (PR 9): resolve the whole triggered
+    # set in ONE device-side red/black sweep loop so every accepted move is
+    # priced against residuals containing the other accepted moves.  False
+    # restores the cycle-start-greedy commit gate (the seed-paired OFF arm
+    # of the --thrash A/B, which exhibits conflict-KEEP thrash at churn).
+    fixed_point: bool = True
+    fixed_point_sweeps: int = 8
 
 
 @dataclass
@@ -309,6 +316,10 @@ class FleetTickMetrics:
     mem_violation_bytes: float = 0.0   # resident weights over node memory
     preempted: int = 0             # sessions revoked by admission this tick
     recovered: int = 0             # preempted sessions re-admitted this tick
+    # fixed-point telemetry (PR 9); conflict KEEPs also flow from the
+    # legacy commit gate so the --thrash OFF arm can measure its thrash
+    n_conflict_keep: int = 0       # dirtied-residual commit-gate rejects
+    fp_sweeps: int = 0             # red/black sweeps the device loop ran
 
     @property
     def mean_latency_s(self) -> float:
@@ -374,6 +385,11 @@ class FleetSimResult:
             ) / 60.0,
             "sessions_preempted": float(sum(m.preempted for m in w)),
             "sessions_recovered": float(sum(m.recovered for m in w)),
+            # fixed-point KPIs (PR 9): total dirtied-residual commit-gate
+            # rejects (thrash signature of the cycle-start-greedy gate) and
+            # total device red/black sweeps spent converging
+            "conflict_keeps": float(sum(m.n_conflict_keep for m in w)),
+            "fixed_point_sweeps": float(sum(m.fp_sweeps for m in w)),
         }
 
     def recovery_time_s(self, t_fail: float) -> float | None:
@@ -595,6 +611,8 @@ class FleetSimulator:
             solve_backoff_s=old.solve_backoff_s,
             backoff_tol_frac=old.backoff_tol_frac,
             forecaster=forecaster,
+            use_fixed_point=old.use_fixed_point,
+            fixed_point_sweeps=old.fixed_point_sweeps,
         )
         new_ctrl = None
         if old_ctrl is not None:
@@ -816,12 +834,14 @@ class FleetSimulator:
                 orch.profiler.observe_latency(float(lat_arr.mean()))
 
             n_mig = n_rs = n_pre = n_preempted = 0
+            n_ck = fp_sw = 0
             solver_t = 0.0
             if orch.sessions and t >= next_monitor:
                 fd = orch.step(now=t)
                 next_monitor = t + cfg.monitor_interval_s
                 n_mig, n_rs = fd.n_migrate, fd.n_resplit
                 n_pre = fd.n_preempt
+                n_ck, fp_sw = fd.n_conflict_keep, fd.fixed_point_sweeps
                 solver_t = fd.solver_time_s
                 if (self._hb is not None and ctrl is not None
                         and fd.infeasible_sids):
@@ -868,6 +888,7 @@ class FleetSimulator:
                 n_dead_nodes=len(inj.dead_nodes(t)) if inj is not None else 0,
                 mem_violation_bytes=mem_over,
                 preempted=n_preempted, recovered=recovered,
+                n_conflict_keep=n_ck, fp_sweeps=fp_sw,
             ))
             if self._journal_file is not None:
                 # re-journal when durable control-plane state moved: the
