@@ -67,6 +67,19 @@ breach-minutes than the cycle-start-greedy OFF arm
 (``BENCH_THRASH_BREACH_SLACK`` minutes of slack, default 0).  Absent or
 carried-over sections are skipped with a note, as above.
 
+The v8 ``shards`` section (region-sharded cycle-cost sweep) is gated on
+absolutes of the SAME artifact: across the multi-region rows (sorted by
+total sessions) the p50 cycle time must grow SUB-linearly — for each
+consecutive pair, ``p50_2 <= p50_1 * (n2/n1) * BENCH_SHARDS_SUBLIN_FRAC +
+2ms`` (default fraction 0.75: growing slower than 75% of linear; the
+tentpole claim is ~O(triggered set), and the triggered-set size is held
+fixed across the sweep) — and the ``regions=1`` comparability row (the
+monitor section's saturated 128-session fleet stepped through the
+verbatim-delegating wrapper) must stay within
+``BENCH_SHARDS_MONITOR_RATIO`` (default 1.6) of the monitor row's
+resident p50 + 2 ms, pinning the wrapper's single-region overhead to
+zero-ish.  Carried-over sections are skipped with a note, as above.
+
 ``--smoke-only`` is the fast PR-path mode: it gates ONLY consistency
 absolutes of a ``--smoke`` monitor run (warm resident cycle p50 finite and
 under ``BENCH_SMOKE_CYCLE_MS``, ``repair_calls_per_cycle`` == 0,
@@ -314,6 +327,70 @@ def check_thrash(doc: dict) -> list[str]:
     return failures
 
 
+def check_shards(doc: dict) -> list[str]:
+    """Absolute gates on the v8 region-sharded cycle-cost rows.
+
+    Sub-linearity: at a fixed triggered-set size, adding quiet shards must
+    NOT add proportional cycle cost — the quiet shards ride the one vmapped
+    screen dispatch.  For each consecutive multi-region pair (sorted by
+    total sessions), ``p50_2 <= p50_1 * (n2/n1) * frac + 2ms`` with
+    ``frac = BENCH_SHARDS_SUBLIN_FRAC`` (default 0.75).  Comparability: the
+    ``regions=1`` row steps the monitor section's saturated 128-session
+    fleet through the delegating wrapper, so its p50 must stay within
+    ``BENCH_SHARDS_MONITOR_RATIO`` (default 1.6) of the monitor row's
+    ``resident_cycle_ms`` p50 + 2 ms — the wrapper adds no hidden cost at
+    one region.
+    """
+    rows = doc.get("shards") or doc.get("shard_scaling") or []
+    if not rows:
+        print("[shards] no shard-scaling section in fresh run — skipped")
+        return []
+    refreshed = doc.get("refreshed")
+    if refreshed is not None and "shards" not in refreshed:
+        print("[shards] section carried over from a previous sweep — skipped")
+        return []
+    frac = float(os.environ.get("BENCH_SHARDS_SUBLIN_FRAC", "0.75"))
+    ratio = float(os.environ.get("BENCH_SHARDS_MONITOR_RATIO", "1.6"))
+    failures: list[str] = []
+
+    def gate(label, name, value, ok, limit_desc):
+        verdict = "OK " if ok else "REGRESSION"
+        print(f"[shards {label:>6}] {name}: {value} ({limit_desc}) {verdict}")
+        if not ok:
+            failures.append(f"shards {label} {name}: {value} ({limit_desc})")
+
+    multi = sorted((r for r in rows if int(r["regions"]) > 1),
+                   key=lambda r: int(r["sessions"]))
+    for prev, cur in zip(multi, multi[1:]):
+        n1, n2 = int(prev["sessions"]), int(cur["sessions"])
+        p1 = _get(prev, ("cycle_ms", "p50"))
+        p2 = _get(cur, ("cycle_ms", "p50"))
+        if p1 is None or p2 is None:
+            failures.append(f"shards {n1}->{n2}: missing cycle_ms.p50")
+            continue
+        limit = p1 * (n2 / n1) * frac + 2.0
+        gate(f"{n2}s", "cycle_ms.p50", p2, p2 <= limit,
+             f"must be <= {limit:.3f} "
+             f"(= {p1:.3f} x {n2}/{n1} x {frac} + 2ms: sub-linear)")
+
+    one = next((r for r in rows if int(r["regions"]) == 1), None)
+    mon = _rows(doc)
+    if one is not None:
+        n = int(one["sessions"])
+        mrow = mon.get(n)
+        p1 = _get(one, ("cycle_ms", "p50"))
+        mp = _get(mrow, ("resident_cycle_ms", "p50")) if mrow else None
+        if mp is None:
+            print(f"[shards] no monitor row at {n} sessions — "
+                  "comparability skipped")
+        elif p1 is not None:
+            limit = mp * ratio + 2.0
+            gate(f"{n}s", "regions=1 cycle_ms.p50", p1, p1 <= limit,
+                 f"must be <= {limit:.3f} "
+                 f"(monitor resident p50 {mp:.3f} x {ratio} + 2ms)")
+    return failures
+
+
 def check_smoke(doc: dict) -> list[str]:
     """PR-path smoke gates: consistency absolutes of a ``--smoke`` monitor
     run, no committed baseline involved (PR runners are too noisy for the
@@ -477,6 +554,7 @@ def main() -> int:
     failures += check_storm(fresh_doc)
     failures += check_chaos(fresh_doc)
     failures += check_thrash(fresh_doc)
+    failures += check_shards(fresh_doc)
     failures += check_drift(fresh_doc)
     if args.profiles:
         failures += check_profiles(pathlib.Path(args.profiles))

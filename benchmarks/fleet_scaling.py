@@ -27,7 +27,7 @@ Three questions the fleet layer must answer before any further scaling PR:
 
 Run:  PYTHONPATH=src python benchmarks/fleet_scaling.py [--smoke] [--json out.json]
       (--quick is an alias for --smoke; section flags: --amortization,
-       --monitor, --qos, --storm run a subset)
+       --monitor, --qos, --storm, --shards run a subset)
 """
 
 from __future__ import annotations
@@ -41,16 +41,21 @@ import numpy as np
 
 from repro.core import (
     BatchedJointSplitter,
+    CapacityForecaster,
     FleetOrchestrator,
+    ForecastConfig,
     InProcessAgent,
     JaxJointSplitter,
     ReconfigurationBroadcast,
     SessionProblem,
+    ShardedFleetOrchestrator,
     Thresholds,
     Workload,
+    make_transformer_graph,
 )
 from repro.core.placement import repair_capacity, surrogate_cost
 from repro.core.profiling import CapacityProfiler
+from repro.core.splitter import coalesce_same_node
 from repro.edgesim import (
     ChaosSpec,
     FailureSpec,
@@ -59,6 +64,8 @@ from repro.edgesim import (
     MECScenarioParams,
     base_system_state,
     build_fleet_scenario,
+    build_regional_orchestrator,
+    diurnal,
     fleet_model_catalog,
     spike_onsets,
 )
@@ -285,19 +292,22 @@ def write_bench_fleet(sections: dict[str, list[dict]],
     recovery, zombie fencing, SLO-breach minutes); v7 adds the ``thrash``
     section (seed-paired high-churn fixed-point A/B: conflict-KEEP rate,
     commit-thrash count, breach-minutes, converged-sweep histogram) and
-    ``conflict_keeps_per_cycle`` in the monitor rows.  Sections absent from
-    ``sections`` are carried over from the committed file, so a
+    ``conflict_keeps_per_cycle`` in the monitor rows; v8 adds the ``shards``
+    section (region-sharded cycle-cost sweep at 1,024/4,096/10,240 total
+    sessions with a fixed triggered-set size, plus the shards=1
+    comparability row gated against the monitor rows).  Sections absent
+    from ``sections`` are carried over from the committed file, so a
     ``--monitor``-only refresh never drops the qos baseline (and vice
     versa).
     """
-    doc = {"schema": "bench-fleet/v7",
-           "source": ("benchmarks/fleet_scaling.py "
-                      "--monitor/--qos/--storm/--drift/--chaos/--thrash")}
+    doc = {"schema": "bench-fleet/v8",
+           "source": ("benchmarks/fleet_scaling.py --monitor/--qos/--storm/"
+                      "--drift/--chaos/--thrash/--shards")}
     if path.exists():
         try:
             old = json.loads(path.read_text())
             for k in ("monitor", "qos", "storm", "drift", "chaos",
-                      "thrash"):
+                      "thrash", "shards"):
                 if k in old:
                     doc[k] = old[k]
         except (json.JSONDecodeError, OSError):
@@ -731,6 +741,141 @@ def thrash_ab(*, n_sessions: int = 16, cycles: int = 30,
     return rows
 
 
+def _shard_catalog() -> list[tuple[str, object]]:
+    """Tiny transformer archs sized so 128 resident sessions fit one §IV
+    region (weights ~0.4–0.5 GB/session vs 440 GB of region memory)."""
+    def g(layers: int, name: str):
+        return make_transformer_graph(
+            name=name, num_layers=layers, d_model=256,
+            flops_per_layer_token=4e9, weight_bytes_per_layer=5e7,
+            embed_weight_bytes=5e7, head_weight_bytes=5e7,
+            head_flops_token=2e8,
+        )
+    return [("shard-a", g(6, "shard-a")), ("shard-b", g(8, "shard-b"))]
+
+
+def _fill_sharded(w: ShardedFleetOrchestrator, shard_sessions: int,
+                  seed: int) -> None:
+    """Bulk-admit ``shard_sessions`` sessions into EVERY region.
+
+    The §IV region replicas are byte-identical at t=0, so the batched DP
+    solves ONE region's session set and the (region-local) solutions are
+    reused verbatim across all regions — admission cost stays O(sessions)
+    in rollouts + row writes, not O(sessions) in DP solves.
+    """
+    catalog = _shard_catalog()
+    rng = np.random.default_rng(seed)
+    metas, probs = [], []
+    for i in range(shard_sessions):
+        arch, graph = catalog[i % len(catalog)]
+        wl = Workload(
+            tokens_in=int(rng.integers(16, 48)),
+            tokens_out=int(rng.integers(4, 8)),
+            arrival_rate=0.05,                 # resident, not saturating
+        )
+        src = i % 3                            # MEC ingress nodes only
+        metas.append((arch, graph, wl, src))
+        probs.append(SessionProblem(graph, wl, source_node=src))
+    inner0 = w.inners[0]
+    sols = inner0.splitter.solve_batch(
+        probs, inner0.profiler.system_state(), max_units=inner0.max_units)
+    sols = [coalesce_same_node(s) for s in sols]
+    for inner in w.inners:
+        for (arch, graph, wl, src), sol in zip(metas, sols):
+            inner.admit(graph, wl, source_node=src, arch=arch, now=0.0,
+                        solution=sol)
+
+
+def shard_scaling(*, shard_sessions: int = 128, regions=(8, 32, 80),
+                  cycles: int = 12, hot_regions: int = 2,
+                  seed: int = 0) -> list[dict]:
+    """Region-sharded resident fleet: cycle cost vs TOTAL session count at a
+    FIXED triggered-set size (``hot_regions`` shards active per cycle).
+
+    Each region holds ``shard_sessions`` resident sessions; the first
+    ``hot_regions`` regions carry a live :class:`CapacityForecaster` (so
+    they run a full per-shard step every cycle) and a :func:`diurnal`
+    background trace driving their MEC nodes.  Every other shard is
+    resolved by the ONE vmapped cross-shard screen dispatch.  The tentpole
+    claim this sweep gates: p50 cycle time grows ~O(triggered set) — i.e.
+    sub-linearly in total sessions as regions are added — because a quiet
+    shard costs only its slice of the screen.
+
+    The ``regions=1`` comparability row wraps the SAME saturated 128-session
+    fleet the ``monitor`` section measures in a single-region
+    :class:`ShardedFleetOrchestrator` (which delegates verbatim), so
+    ``check_regression.check_shards`` can gate the wrapper's overhead
+    against the monitor row of the same artifact.
+    """
+    rows = []
+    for n_regions in regions:
+        w = build_regional_orchestrator(MECScenarioParams(), n_regions)
+        _fill_sharded(w, shard_sessions, seed)
+        for r in range(min(hot_regions, n_regions)):
+            w.inners[r].forecaster = CapacityForecaster(ForecastConfig(
+                horizon_steps=4, season_steps=8, sample_interval_s=1.0))
+        trace = diurnal(seed=seed + 1, base=0.45, amp=0.15, period_s=24.0,
+                        spike_rate_per_period=1.0, spike_amp=0.15,
+                        spike_width_s=2.0, horizon_s=120.0)
+
+        def drive_hot(t: float) -> None:
+            for r in range(min(hot_regions, n_regions)):
+                st = w.inners[r].profiler.base_state
+                st.background_util[:3] = trace(t)
+
+        t = 1.0
+        for _ in range(3):                     # warm: compile + settle
+            drive_hot(t)
+            w.step(t)
+            t += 1.0
+        disp0 = sum(o.kernel.dispatches for o in w.inners)
+        stepped0 = w.shards_stepped
+        cross0 = w.cross_migrations
+        t_cycle = []
+        for _ in range(cycles):
+            drive_hot(t)
+            t0 = time.perf_counter()
+            w.step(t)
+            t_cycle.append(time.perf_counter() - t0)
+            t += 1.0
+        disp = sum(o.kernel.dispatches for o in w.inners) - disp0
+        rows.append(dict(
+            sessions=n_regions * shard_sessions,
+            regions=n_regions,
+            shard_sessions=shard_sessions,
+            hot_regions=min(hot_regions, n_regions),
+            cycle_ms=_pcts(t_cycle),
+            shards_stepped_per_cycle=round(
+                (w.shards_stepped - stepped0) / cycles, 2),
+            dispatches_per_cycle=round(disp / cycles, 2),
+            cross_migrations=w.cross_migrations - cross0,
+        ))
+
+    # regions=1 comparability row: the monitor section's saturated fleet,
+    # stepped through the (verbatim-delegating) wrapper
+    orch = _saturated_fleet(shard_sessions, seed)
+    w1 = ShardedFleetOrchestrator(
+        [orch], region_of=np.zeros(
+            orch.profiler.base_state.num_nodes, dtype=np.int64))
+    t = 0.0
+    for _ in range(5):                         # warm like monitoring_cost
+        w1.step(t)
+        t += 1.0
+    t_cycle = []
+    for _ in range(cycles):
+        t0 = time.perf_counter()
+        w1.step(t)
+        t_cycle.append(time.perf_counter() - t0)
+        t += 1.0
+    rows.append(dict(
+        sessions=shard_sessions, regions=1,
+        shard_sessions=shard_sessions, hot_regions=0,
+        cycle_ms=_pcts(t_cycle),
+        comparability="monitor",
+    ))
+    return rows
+
+
 def main() -> None:  # pragma: no cover
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true",
@@ -751,9 +896,14 @@ def main() -> None:  # pragma: no cover
                     help="seed-paired high-churn fixed-point A/B "
                          "(conflict-KEEP rate, commit thrash, breach-"
                          "minutes, converged-sweep histogram)")
+    ap.add_argument("--shards", action="store_true",
+                    help="region-sharded cycle-cost sweep to 10,240 total "
+                         "sessions at a fixed triggered-set size, plus the "
+                         "shards=1 comparability row")
     args = ap.parse_args()
     run_all = not (args.amortization or args.monitor or args.qos
-                   or args.storm or args.drift or args.chaos or args.thrash)
+                   or args.storm or args.drift or args.chaos or args.thrash
+                   or args.shards)
 
     out: dict[str, list[dict]] = {}
     if run_all or args.amortization:
@@ -829,6 +979,18 @@ def main() -> None:  # pragma: no cover
             print(r)
         if not args.smoke:
             bench_sections["thrash"] = out["thrash_ab"]
+    if run_all or args.shards:
+        print("\n== region-sharded cycle cost (fixed triggered set, "
+              "128-session shards, sweep to 10,240 sessions) ==")
+        out["shard_scaling"] = shard_scaling(
+            shard_sessions=32 if args.smoke else 128,
+            regions=(2, 4) if args.smoke else (8, 32, 80),
+            cycles=5 if args.smoke else 12,
+        )
+        for r in out["shard_scaling"]:
+            print(r)
+        if not args.smoke:
+            bench_sections["shards"] = out["shard_scaling"]
     if run_all or args.drift:
         print("\n== calibrated-vs-analytic pricing drift (committed "
               "BENCH_profiles.json) ==")

@@ -34,6 +34,7 @@ from .admission import (
     AdmissionRequest,
     AdmissionVerdict,
     FleetAdmissionController,
+    ShardedFleetAdmissionController,
 )
 from .broadcast import (
     FlakyAgent,
@@ -54,11 +55,13 @@ from .cost_model import (
     memory_violations,
     memory_violations_packed,
     phi,
+    region_slice,
 )
 from .fleet import (
     FleetDecision,
     FleetOrchestrator,
     FleetSession,
+    ShardedFleetOrchestrator,
     TelemetryGuard,
 )
 from .forecast import CapacityForecaster, ForecastConfig
@@ -71,6 +74,8 @@ from .fleet_eval import (
     PackedSessions,
     ResidentFleetKernel,
     ResidentPrice,
+    ShardScreen,
+    ShardedFleetState,
     pack_sessions,
     packed_induced_loads,
 )
@@ -132,9 +137,12 @@ __all__ = [
     "FixedPointResult", "ReconfigurationBroadcast", "ResidentFleetKernel",
     "ResidentPrice", "fixed_point_reference", "breach_seconds",
     "RolloutPolicy",
-    "SegmentProfile", "SegmentProfileEntry", "TelemetryGuard",
+    "SegmentProfile", "SegmentProfileEntry", "ShardScreen",
+    "ShardedFleetAdmissionController", "ShardedFleetOrchestrator",
+    "ShardedFleetState", "TelemetryGuard",
     "SessionProblem", "Solution", "SplitRevision", "SplitScheme",
     "SystemState", "Thresholds", "TriggerState", "TrustPolicy", "Workload",
+    "region_slice",
     "assert_privacy_ok", "brute_force_joint", "chain_latency", "evaluate",
     "greedy_placement", "local_search", "make_transformer_graph",
     "memory_violations", "memory_violations_packed",

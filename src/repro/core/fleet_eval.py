@@ -63,6 +63,7 @@ equivalence is test-enforced in ``tests/test_resident_state.py``).
 
 from __future__ import annotations
 
+import itertools
 import time
 from dataclasses import dataclass
 from typing import Sequence
@@ -86,10 +87,15 @@ __all__ = [
     "FixedPointResult",
     "ResidentFleetKernel",
     "ResidentPrice",
+    "ShardScreen",
+    "ShardedFleetState",
     "gather_rows",
 ]
 
 _BIG = 1e30
+
+# process-wide mutation stamps for FleetStateBuffers (see .version)
+_BUF_VERSIONS = itertools.count(1)
 
 
 def _pow2(x: int) -> int:
@@ -960,6 +966,11 @@ class FleetStateBuffers:
         self._boundaries: list[tuple[int, ...] | None] = [None] * rows
         self.stats = {"row_writes": 0, "rebuilds": 0, "grow_rows": 0,
                       "grow_segs": 0, "pack_time_s": 0.0}
+        # globally-unique mutation stamp: every write assigns a fresh value
+        # from one process-wide counter, so (even across buffer objects that
+        # reuse a freed id) equal stamps imply bit-identical row tensors —
+        # the sharded screen keys its stacked-block cache on it
+        self.version = next(_BUF_VERSIONS)
 
     # -- capacity ------------------------------------------------------- #
     @property
@@ -991,6 +1002,7 @@ class FleetStateBuffers:
         self._free.extend(range(new - 1, old - 1, -1))
         self._boundaries.extend([None] * (new - old))
         self.stats["grow_rows"] += 1
+        self.version = next(_BUF_VERSIONS)
 
     def _grow_segs(self, need: int) -> None:
         import jax.numpy as jnp
@@ -1006,6 +1018,7 @@ class FleetStateBuffers:
                 pad = jnp.zeros((a.shape[0], new - old), dtype=a.dtype)
                 setattr(self, name, jnp.concatenate([a, pad], axis=1))
         self.stats["grow_segs"] += 1
+        self.version = next(_BUF_VERSIONS)
 
     # -- row updates ---------------------------------------------------- #
     def upsert(
@@ -1044,6 +1057,7 @@ class FleetStateBuffers:
         self._boundaries[row] = one.boundaries[0]
         self.stats["row_writes"] += 1
         self.stats["pack_time_s"] += time.perf_counter() - t0
+        self.version = next(_BUF_VERSIONS)
 
     def remove(self, sid: int) -> None:
         """Free a departed session's row (zeroed: inactive rows stay zeros)."""
@@ -1057,6 +1071,7 @@ class FleetStateBuffers:
                 setattr(self, name, a.at[row].set(jnp.zeros((), a.dtype)))
         self._boundaries[row] = None
         self._free.append(row)
+        self.version = next(_BUF_VERSIONS)
 
     @classmethod
     def from_sessions(
@@ -1617,6 +1632,10 @@ class ResidentFleetKernel:
         self._price_c: dict[tuple, object] = {}
         self._mig_c: dict[tuple, object] = {}
         self._fp_c: dict[tuple, object] = {}
+        # fused-program launches (price + migrate + fixed point), mirroring
+        # BatchedRepairPass.dispatches: the sharded equivalence tests assert
+        # steady-state cycles cost exactly one dispatch per shard
+        self.dispatches = 0
         self.cost_model = cost_model if cost_model is not None \
             else AnalyticCostModel()
 
@@ -1673,6 +1692,7 @@ class ResidentFleetKernel:
                     n, weights.alpha, weights.beta, weights.gamma,
                     mem_penalty, bw_floor,
                 ))
+            self.dispatches += 1
             with enable_x64(True):
                 out = self._price_c[key](*row_args, *state_args)
             return ResidentPrice(*out)
@@ -1686,6 +1706,7 @@ class ResidentFleetKernel:
                 mem_penalty, bw_floor, cfg.horizon_steps, cfg.residual_alpha,
             ))
         fc_args, advance = forecaster.kernel_args(n, now)
+        self.dispatches += 1
         with enable_x64(True):
             out = self._price_c[key](*row_args, *state_args, *fc_args)
         price = ResidentPrice(*out[:14])
@@ -1727,6 +1748,7 @@ class ResidentFleetKernel:
         bg, lbw = price.bg, price.link_bw
         if use_forecast and price.has_forecast:
             bg, lbw = price.bg_fc, price.lbw_fc
+        self.dispatches += 1
         with enable_x64(True):
             assign, mig_lat, cost = self._mig_c[key](
                 buf.seg_flops, buf.seg_wbytes, buf.seg_priv, buf.valid,
@@ -1781,6 +1803,7 @@ class ResidentFleetKernel:
             state_args = self.state_args(state)
         (bg0, link_bw, link_lat, flops_per_s, mem_bw, trusted,
          mem_bytes) = state_args
+        self.dispatches += 1
         with enable_x64(True):
             bb = bg0 if base_bg is None else jnp.asarray(
                 np.asarray(base_bg, dtype=np.float64))
@@ -1798,3 +1821,178 @@ class ResidentFleetKernel:
                 mem_bytes,
             )
         return FixedPointResult(*out)
+
+
+# --------------------------------------------------------------------------- #
+# region-sharded resident fleet state (PR 10)
+# --------------------------------------------------------------------------- #
+_SCREEN_ROW_ARGS = ("seg_flops", "seg_wbytes", "seg_priv", "seg_node",
+                    "valid", "xfer_bytes_tok", "t_in", "t_out", "lam",
+                    "source", "active")
+
+
+def _make_sharded_screen(n: int, alpha: float, beta: float, gamma: float,
+                         mem_penalty: float, bw_floor: float):
+    """The cross-shard screen: :func:`_price_core` vmapped over the shard
+    axis.  Each shard's rows are priced against its OWN regional C(t) —
+    exactly what one per-shard :func:`_make_fused_price` dispatch would
+    compute — but the whole fleet resolves in a single XLA launch, so the
+    monitoring cycle's dispatch count stays O(1) in the shard count.  Only
+    the trigger-env scalars and the per-shard totals come out; the (S, B,
+    n, n) effective-state tensors never materialize as outputs."""
+    import jax
+
+    ev = _make_eval(n, alpha, beta, gamma, mem_penalty)
+    core = _price_core(n, ev, bw_floor)
+
+    def one(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes,
+            t_in, t_out, lam, source, active,
+            bg0, link_bw, link_lat, flops_per_s, mem_bw, trusted,
+            mem_bytes):
+        c = core(seg_flops, seg_w, seg_priv, seg_node, valid, xbytes,
+                 t_in, t_out, lam, source, active, bg0, link_bw, link_lat,
+                 flops_per_s, mem_bw, trusted, mem_bytes)
+        return c["lat"], c["max_util"], c["min_bw"], c["tot_node"], c["tot_w"]
+
+    return jax.vmap(one)
+
+
+@dataclass(frozen=True)
+class ShardScreen:
+    """Host-side outputs of one cross-shard screen dispatch.
+
+    Row ``[s, b]`` is shard ``s``'s buffer row ``b`` (inactive rows carry
+    zero loads and garbage trigger scalars — mask with each shard's
+    ``active``).  The per-shard totals are what the cross-region aggregator
+    ranks residual headroom with.
+    """
+
+    lat: np.ndarray       # (S, B) current-config latency per row
+    max_util: np.ndarray  # (S, B) trigger env: max node util per row
+    min_bw: np.ndarray    # (S, B) trigger env: min cross-hop bandwidth
+    tot_node: np.ndarray  # (S, n) per-shard induced node rho totals
+    tot_w: np.ndarray     # (S, n) per-shard resident weight-byte totals
+
+
+class ShardedFleetState:
+    """One (:class:`FleetStateBuffers`, :class:`ResidentFleetKernel`) pair
+    per MEC region, plus the stacked screen program across them.
+
+    Shards are fully load-disjoint by construction: every session is placed
+    on its own region's nodes only, so per-shard pricing against the
+    region-local C(t) is *exact*, not an approximation — the block-diagonal
+    fleet decomposes.  The screen stacks all shards' row tensors (shapes
+    synchronized to the max shard first, so one compiled variant covers the
+    fleet) and prices them in one vmapped dispatch; the per-region fixed
+    point / migrate / re-split machinery then runs only on shards whose
+    screen shows trigger activity.
+    """
+
+    def __init__(self, shards: Sequence[FleetStateBuffers],
+                 kernels: Sequence["ResidentFleetKernel"]) -> None:
+        if len(shards) != len(kernels):
+            raise ValueError("one kernel per shard required")
+        self.shards = list(shards)
+        self.kernels = list(kernels)
+        self._screen_c: dict[tuple, object] = {}
+        self.screen_dispatches = 0
+        # stacked (S, B, K) row block, cached across cycles and refreshed
+        # per shard by buffer mutation stamp: a quiet cycle re-uploads
+        # NOTHING, so the screen's host cost is O(dirty shards), not O(S)
+        self._stack: tuple | None = None
+        self._stack_key: tuple | None = None
+        self._stack_vers: list[int] = []
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def sync_shapes(self) -> tuple[int, int]:
+        """Grow every shard to the fleet-max (rows, segs) so the stacked
+        screen sees one uniform (S, B, K) block.  Both axes only ever grow
+        (pow2), so this settles immediately in steady state."""
+        rows = max(b.n_rows for b in self.shards)
+        segs = max(b.max_segs for b in self.shards)
+        for b in self.shards:
+            if b.max_segs < segs:
+                b._grow_segs(segs)
+            if b.n_rows < rows:
+                b._grow_rows(rows)
+        return rows, segs
+
+    def screen(self, states: Sequence[SystemState], *,
+               weights: CostWeights = CostWeights(),
+               mem_penalty: float = 1e3,
+               bw_floor: float = 0.05) -> ShardScreen:
+        """Price every shard against its regional C(t) in ONE dispatch."""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        S = self.n_shards
+        if len(states) != S:
+            raise ValueError(f"{len(states)} states for {S} shards")
+        n = states[0].num_nodes
+        if any(st.num_nodes != n for st in states):
+            raise ValueError("regional states must share a node count")
+        rows, segs = self.sync_shapes()
+        key = (S, rows, segs, n, weights, float(mem_penalty),
+               float(bw_floor))
+        if key not in self._screen_c:
+            self._screen_c[key] = jax.jit(_make_sharded_screen(
+                n, weights.alpha, weights.beta, weights.gamma,
+                mem_penalty, bw_floor,
+            ))
+        with enable_x64(True):
+            row_args = self._stacked_rows(S, rows, segs)
+            # one host stack + one upload per C(t) field (NOT one per
+            # shard): the screen's state cost stays flat in S
+            state_args = (
+                jnp.asarray(np.stack([st.background_util for st in states])),
+                jnp.asarray(np.stack(
+                    [np.nan_to_num(st.link_bw, posinf=_BIG)
+                     for st in states])),
+                jnp.asarray(np.stack(
+                    [np.nan_to_num(st.link_lat, posinf=_BIG)
+                     for st in states])),
+                jnp.asarray(np.stack([st.flops_per_s for st in states])),
+                jnp.asarray(np.stack([st.mem_bw for st in states])),
+                jnp.asarray(np.stack(
+                    [st.trusted.astype(bool) for st in states])),
+                jnp.asarray(np.stack([st.mem_bytes for st in states])),
+            )
+            out = self._screen_c[key](*row_args, *state_args)
+        self.screen_dispatches += 1
+        return ShardScreen(*(np.asarray(o) for o in out))
+
+    def _stacked_rows(self, S: int, rows: int, segs: int) -> tuple:
+        """The (S, B, K) stacked row block, rebuilt only where buffers
+        actually changed since the last screen.  Shards report mutations
+        through ``FleetStateBuffers.version`` (globally-unique stamps), so
+        a steady-state cycle reuses the device block verbatim; a cycle
+        that admitted/migrated in d shards rewrites d slices.  When most
+        of the fleet is dirty (cold start, growth resync) a full restack
+        is cheaper than per-slice copies."""
+        import jax.numpy as jnp
+
+        vers = [b.version for b in self.shards]
+        skey = (S, rows, segs)
+        dirty = ([r for r, v in enumerate(vers)
+                  if v != self._stack_vers[r]]
+                 if self._stack is not None and self._stack_key == skey
+                 else None)
+        if dirty is None or len(dirty) > max(1, S // 4):
+            self._stack = tuple(
+                jnp.stack([getattr(b, f) for b in self.shards])
+                for f in _SCREEN_ROW_ARGS
+            )
+        elif dirty:
+            stack = list(self._stack)
+            for r in dirty:
+                b = self.shards[r]
+                stack = [a.at[r].set(getattr(b, f))
+                         for f, a in zip(_SCREEN_ROW_ARGS, stack)]
+            self._stack = tuple(stack)
+        self._stack_key = skey
+        self._stack_vers = vers
+        return self._stack

@@ -8,9 +8,12 @@ from .scenario import (
     base_system_state,
     build_fleet_scenario,
     build_mec_scenario,
+    build_regional_orchestrator,
     fleet_model_catalog,
     llama3_8b_graph,
     mec_traces,
+    regional_system_state,
+    regional_traces,
     spike_onsets,
     static_baseline_split,
 )
@@ -24,7 +27,7 @@ from .simulator import (
     SimResult,
     TickMetrics,
 )
-from .traces import Trace, constant, ou_process, square_wave
+from .traces import Trace, constant, diurnal, ou_process, square_wave
 
 __all__ = [
     "ChaosInjector", "ChaosSpec", "EdgeSimulator", "FailureInjector",
@@ -33,7 +36,9 @@ __all__ = [
     "FleetSimulator", "FleetTickMetrics", "InvariantChecker",
     "MECScenarioParams", "SimConfig",
     "SimResult", "TickMetrics", "Trace", "base_system_state",
-    "build_fleet_scenario", "build_mec_scenario", "constant",
+    "build_fleet_scenario", "build_mec_scenario",
+    "build_regional_orchestrator", "constant", "diurnal",
     "fleet_model_catalog", "llama3_8b_graph", "mec_traces", "ou_process",
+    "regional_system_state", "regional_traces",
     "spike_onsets", "square_wave", "static_baseline_split",
 ]

@@ -31,7 +31,10 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..core.admission import FleetAdmissionController
+from ..core.admission import (
+    FleetAdmissionController,
+    ShardedFleetAdmissionController,
+)
 from ..core.broadcast import InProcessAgent, ReconfigurationBroadcast
 from ..core.cost_model import CostWeights, SystemState, Workload
 from ..core.graph import ModelGraph, make_transformer_graph
@@ -39,7 +42,7 @@ from ..core.orchestrator import AdaptiveOrchestrator
 from ..core.profiling import CapacityProfiler
 from ..core.splitter import SplitRevision
 from ..core.triggers import Thresholds
-from ..core.fleet import FleetOrchestrator
+from ..core.fleet import FleetOrchestrator, ShardedFleetOrchestrator
 from .simulator import EdgeSimulator, FleetSimConfig, FleetSimulator, SimConfig
 from .traces import Trace, constant, ou_process, square_wave
 
@@ -47,6 +50,7 @@ __all__ = [
     "MECScenarioParams", "llama3_8b_graph", "build_mec_scenario",
     "static_baseline_split", "FleetScenarioParams", "build_fleet_scenario",
     "fleet_model_catalog", "mec_traces", "spike_onsets",
+    "regional_system_state", "regional_traces", "build_regional_orchestrator",
 ]
 
 MBPS = 1e6 / 8.0  # bytes/s per Mb/s
@@ -229,6 +233,103 @@ def build_mec_scenario(
 
 
 # --------------------------------------------------------------------------- #
+# regional (sharded) topology — PR 10
+# --------------------------------------------------------------------------- #
+def regional_system_state(
+    p: MECScenarioParams, n_regions: int, *,
+    inter_region_mbps: float = 200.0,
+) -> SystemState:
+    """R replicas of the §IV cluster as one global C(t) with ``region_of``.
+
+    Each region is the paper's 4-node cluster (3 trusted MEC + untrusted
+    cloud); regions connect over metro backhaul links that the SHARDED
+    control plane never places sessions across (they only exist so the
+    global state is a valid SystemState — the block-diagonal slices are
+    what the per-region orchestrators price against).
+    """
+    base = base_system_state(p)
+    k = base.num_nodes
+    n = k * n_regions
+    bw = np.full((n, n), inter_region_mbps * MBPS)
+    lat = np.full((n, n), 8 * p.base_latency_s)
+    names: list[str] = []
+    for r in range(n_regions):
+        sl = slice(r * k, (r + 1) * k)
+        bw[sl, sl] = base.link_bw
+        lat[sl, sl] = base.link_lat
+        names.extend(f"r{r}:{nm}" for nm in base.names)
+    return SystemState(
+        flops_per_s=np.tile(base.flops_per_s, n_regions),
+        mem_bytes=np.tile(base.mem_bytes, n_regions),
+        background_util=np.tile(base.background_util, n_regions),
+        trusted=np.tile(base.trusted, n_regions),
+        link_bw=bw,
+        link_lat=lat,
+        mem_bw=np.tile(base.mem_bw, n_regions),
+        names=tuple(names),
+        region_of=np.repeat(np.arange(n_regions), k),
+    )
+
+
+def regional_traces(
+    p: MECScenarioParams, n_regions: int, horizon_s: float
+) -> tuple[dict[int, Trace], dict[tuple[int, int], Trace]]:
+    """§IV environment dynamics replicated per region in GLOBAL node ids.
+
+    Region r's traces re-seed with ``p.seed + 100*r`` so regions fluctuate
+    independently but deterministically (seed-paired A/Bs still hold)."""
+    util_traces: dict[int, Trace] = {}
+    bw_traces: dict[tuple[int, int], Trace] = {}
+    k = 4
+    for r in range(n_regions):
+        pr = MECScenarioParams(**{
+            **{f: getattr(p, f) for f in p.__dataclass_fields__},
+            "seed": p.seed + 100 * r,
+        })
+        ut, bt = mec_traces(pr, horizon_s)
+        for node, tr in ut.items():
+            util_traces[r * k + node] = tr
+        for (i, j), tr in bt.items():
+            bw_traces[(r * k + i, r * k + j)] = tr
+    return util_traces, bw_traces
+
+
+def build_regional_orchestrator(
+    p: MECScenarioParams, n_regions: int, *,
+    thresholds: Thresholds | None = None,
+    use_fixed_point: bool = True,
+    fixed_point_sweeps: int = 8,
+    cost_model=None,
+) -> ShardedFleetOrchestrator:
+    """One :class:`FleetOrchestrator` per §IV cluster replica, wrapped.
+
+    Every region gets its own broadcast agents, profiler (over the
+    region-local slice of :func:`regional_system_state`), and resident
+    kernel; ``n_regions == 1`` produces a wrapper that delegates verbatim
+    (bit-identical to an unsharded :class:`FleetOrchestrator`)."""
+    gstate = regional_system_state(p, n_regions)
+    th = thresholds if thresholds is not None else Thresholds(cooldown_s=10.0)
+    inners = []
+    for r in range(n_regions):
+        local = base_system_state(p)
+        inners.append(FleetOrchestrator(
+            profiler=CapacityProfiler(base_state=local),
+            broadcast=ReconfigurationBroadcast(
+                [InProcessAgent(i) for i in range(local.num_nodes)]
+            ),
+            thresholds=th,
+            weights=CostWeights(alpha=1.0, beta=0.02, gamma=1000.0),
+            use_fixed_point=use_fixed_point,
+            fixed_point_sweeps=fixed_point_sweeps,
+            cost_model=cost_model,
+        ))
+    wrapper = ShardedFleetOrchestrator(
+        inners, region_of=gstate.region_of)
+    wrapper.profiler.base_state = gstate
+    return wrapper
+
+
+# --------------------------------------------------------------------------- #
 # multi-session fleet scenario
 # --------------------------------------------------------------------------- #
 @dataclass(frozen=True)
@@ -252,8 +353,33 @@ def build_fleet_scenario(
 ) -> FleetSimulator:
     """Multi-session §IV scenario; ``admission`` overrides the controller the
     simulator would otherwise build from ``p.sim`` (custom rho ceilings /
-    queue depths in tests and sweeps)."""
+    queue depths in tests and sweeps).  ``p.sim.n_regions > 1`` replicates
+    the cluster per region and runs through the sharded control plane."""
     m = p.mec
+    if p.sim.n_regions > 1:
+        R = p.sim.n_regions
+        gstate = regional_system_state(m, R)
+        util_traces, bw_traces = regional_traces(m, R, p.sim.duration_s + 10)
+        wrapper = build_regional_orchestrator(
+            m, R, thresholds=thresholds,
+            use_fixed_point=p.sim.fixed_point,
+            fixed_point_sweeps=p.sim.fixed_point_sweeps,
+        )
+        cfg = p.sim
+        if cfg.ingress_nodes == (0, 1, 2):
+            # default ingress generalizes to every region's MEC nodes
+            from dataclasses import replace as _rep
+            cfg = _rep(cfg, ingress_nodes=tuple(
+                4 * r + i for r in range(R) for i in (0, 1, 2)))
+        return FleetSimulator(
+            base_state=gstate,
+            catalog=fleet_model_catalog(p.archs),
+            util_traces=util_traces,
+            bw_traces=bw_traces,
+            orchestrator=wrapper,
+            config=cfg,
+            admission=admission,
+        )
     state = base_system_state(m)
     util_traces, bw_traces = mec_traces(m, p.sim.duration_s + 10)
 

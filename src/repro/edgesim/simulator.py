@@ -294,6 +294,14 @@ class FleetSimConfig:
     # of the --thrash A/B, which exhibits conflict-KEEP thrash at churn).
     fixed_point: bool = True
     fixed_point_sweeps: int = 8
+    # region sharding (PR 10): > 1 replicates the §IV cluster per region and
+    # runs the fleet through a ShardedFleetOrchestrator — one resident
+    # buffer/kernel per region, one vmapped cross-shard screen per cycle,
+    # full per-region cycles only where triggers fire.  1 is the unsharded
+    # path (and a ShardedFleetOrchestrator with one region delegates
+    # verbatim — bit-identical, test-enforced).  Failure/chaos injection is
+    # not yet region-aware: combining them with n_regions > 1 raises.
+    n_regions: int = 1
 
 
 @dataclass
@@ -461,6 +469,19 @@ class FleetSimulator:
         self.orch = orchestrator
         self.cfg = config
         self.rng = np.random.default_rng(config.seed)
+        # region sharding (PR 10): the wrapper takes the sharded admission
+        # controller; failure/chaos injection still assumes one global node
+        # namespace end-to-end, so the combination is refused loudly rather
+        # than silently mis-routing local node ids
+        from ..core.fleet import ShardedFleetOrchestrator
+
+        sharded = (isinstance(orchestrator, ShardedFleetOrchestrator)
+                   and orchestrator.n_regions > 1)
+        if sharded and (config.failures is not None
+                        or config.chaos is not None):
+            raise ValueError(
+                "failure/chaos injection is not supported with "
+                "n_regions > 1 yet")
         if config.forecast and orchestrator.forecaster is None:
             from ..core.forecast import CapacityForecaster, ForecastConfig
 
@@ -471,12 +492,22 @@ class FleetSimulator:
                 residual_alpha=config.forecast_residual_alpha,
             ))
         if admission is None and config.admission:
-            admission = FleetAdmissionController(
-                orchestrator,
-                max_sessions=config.max_sessions,
-                rho_ceiling=config.rho_ceiling,
-                queue_cap=config.admission_queue_cap,
-            )
+            if sharded:
+                from ..core.admission import ShardedFleetAdmissionController
+
+                admission = ShardedFleetAdmissionController(
+                    orchestrator,
+                    max_sessions=config.max_sessions,
+                    rho_ceiling=config.rho_ceiling,
+                    queue_cap=config.admission_queue_cap,
+                )
+            else:
+                admission = FleetAdmissionController(
+                    orchestrator,
+                    max_sessions=config.max_sessions,
+                    rho_ceiling=config.rho_ceiling,
+                    queue_cap=config.admission_queue_cap,
+                )
         self.admission = admission
         # failure injection + the control-plane response (PR 6)
         self._injector: FailureInjector | None = None

@@ -7,7 +7,8 @@ from typing import Callable
 
 import numpy as np
 
-__all__ = ["Trace", "constant", "square_wave", "ou_process", "compose"]
+__all__ = ["Trace", "constant", "square_wave", "ou_process", "diurnal",
+           "compose"]
 
 
 @dataclass(frozen=True)
@@ -48,6 +49,39 @@ def ou_process(seed: int, mu: float, sigma: float, theta: float = 0.5,
     sq = sigma * np.sqrt(tick_s)
     for i in range(1, n):
         x[i] = x[i - 1] + theta * (mu - x[i - 1]) * tick_s + sq * rng.standard_normal()
+    x = np.clip(x, lo, hi)
+
+    def fn(t: float) -> float:
+        return x[min(int(t / tick_s), n - 1)]
+
+    return Trace(fn, lo, hi)
+
+
+def diurnal(seed: int, base: float, amp: float, period_s: float = 120.0,
+            phase_s: float = 0.0, spike_rate_per_period: float = 1.0,
+            spike_amp: float = 0.25, spike_width_s: float = 4.0,
+            tick_s: float = 0.1, horizon_s: float = 3600.0,
+            lo: float = 0.0, hi: float = 0.99) -> Trace:
+    """Diurnal seasonality + seeded flash crowds (ROADMAP item 4c slice).
+
+    A sinusoid ``base + amp*sin(2π(t+phase)/period)`` carries the smooth
+    daily load cycle the seasonal-naive forecaster is built for, and a
+    seeded Poisson set of Gaussian bumps (flash crowds — a stadium letting
+    out, a viral clip) rides on top.  Spike onsets/heights are pre-sampled
+    from ``seed`` like :func:`ou_process`, so two traces with the same
+    arguments are sample-for-sample identical (seed-paired A/Bs).
+    """
+    rng = np.random.default_rng(seed)
+    n_spikes = rng.poisson(spike_rate_per_period * horizon_s / period_s)
+    onsets = rng.uniform(0.0, horizon_s, size=n_spikes)
+    heights = spike_amp * rng.uniform(0.5, 1.5, size=n_spikes)
+    # pre-sample on the tick grid: evaluation stays O(1) per call and the
+    # spike sum never re-runs per tick
+    n = int(horizon_s / tick_s) + 2
+    t_grid = np.arange(n) * tick_s
+    x = base + amp * np.sin(2.0 * np.pi * (t_grid + phase_s) / period_s)
+    for t0, h in zip(onsets, heights):
+        x += h * np.exp(-0.5 * ((t_grid - t0) / spike_width_s) ** 2)
     x = np.clip(x, lo, hi)
 
     def fn(t: float) -> float:

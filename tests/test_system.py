@@ -9,20 +9,35 @@ the numerics of inference are unchanged by any reconfiguration.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_bundle
 from repro.core import (
     AdaptiveOrchestrator,
+    AdmissionKind,
+    AdmissionRequest,
     CapacityProfiler,
     InProcessAgent,
     ReconfigurationBroadcast,
+    SessionProblem,
+    ShardedFleetAdmissionController,
     SplitRevision,
     Thresholds,
     Workload,
     assert_privacy_ok,
+    make_transformer_graph,
 )
 from repro.core.cost_model import memory_violations
-from repro.edgesim import MECScenarioParams, base_system_state, build_mec_scenario
+from repro.core.splitter import coalesce_same_node
+from repro.core.triggers import QOS_BATCH, QOS_STANDARD
+from repro.distributed import HeartbeatRegistry
+from repro.edgesim import (
+    InvariantChecker,
+    MECScenarioParams,
+    base_system_state,
+    build_mec_scenario,
+)
+from repro.edgesim.scenario import build_regional_orchestrator
 from repro.serving import SplitInferenceEngine
 
 
@@ -75,3 +90,122 @@ def test_scenario_static_vs_adaptive_smoke():
     ks = res_s.kpis(10.0, 40.0)
     ka = res_a.kpis(10.0, 40.0)
     assert ka["mean_latency_s"] < ks["mean_latency_s"]
+
+
+# --------------------------------------------------------------------------- #
+# sharded fleet smoke at 1,024 sessions (full-sweep tier)
+# --------------------------------------------------------------------------- #
+def _smoke_graph(layers: int, name: str):
+    return make_transformer_graph(
+        name=name, num_layers=layers, d_model=256,
+        flops_per_layer_token=4e9, weight_bytes_per_layer=5e7,
+        embed_weight_bytes=5e7, head_weight_bytes=5e7,
+        head_flops_token=2e8,
+    )
+
+
+@pytest.mark.slow
+def test_sharded_fleet_smoke_1024_sessions():
+    """End-to-end fleet smoke: 8 regions x 128 = 1,024 resident sessions.
+
+    Bulk admission (one batched DP solve reused across the identical region
+    replicas), a handful of arrivals through the region-routed admission
+    controller, a heartbeat-driven node death inside one region while the
+    sharded control loop runs, recovery — and at the end every region passes
+    the chaos invariant checker clean and the session set is conserved.
+    """
+    n_regions, bulk = 8, 127
+    m = MECScenarioParams()
+    w = build_regional_orchestrator(m, n_regions)
+    catalog = [("smoke-a", _smoke_graph(6, "smoke-a")),
+               ("smoke-b", _smoke_graph(8, "smoke-b"))]
+
+    # one batched solve against the (identical) empty region state; the
+    # resulting region-local placements are valid in every replica
+    metas, probs = [], []
+    for i in range(bulk):
+        arch, g = catalog[i % len(catalog)]
+        wl = Workload(tokens_in=24, tokens_out=4, arrival_rate=0.05)
+        src = i % 3                        # MEC ingress nodes only
+        metas.append((arch, g, wl, src))
+        probs.append(SessionProblem(g, wl, source_node=src))
+    inner0 = w.inners[0]
+    sols = inner0.splitter.solve_batch(
+        probs, inner0.profiler.system_state(), max_units=inner0.max_units)
+    sols = [coalesce_same_node(s) for s in sols]
+
+    alive = set()
+    for r in range(n_regions):
+        inner = w.inners[r]
+        for (arch, g, wl, src), sol in zip(metas, sols):
+            alive.add(inner.admit(g, wl, source_node=src, arch=arch,
+                                  now=0.0, qos=QOS_BATCH, solution=sol))
+
+    # the last arrival in each region comes through the admission controller
+    # (global ingress node -> region routing, priced on residual capacity)
+    adm = ShardedFleetAdmissionController(w, max_sessions=1024, queue_cap=16)
+    for r in range(n_regions):
+        v = adm.request(AdmissionRequest(
+            graph=catalog[0][1],
+            workload=Workload(tokens_in=24, tokens_out=4, arrival_rate=0.05),
+            source_node=4 * r + 1, arch="smoke-a", qos=QOS_STANDARD),
+            now=0.5)
+        assert v.kind is AdmissionKind.ACCEPT, v.reason
+        alive.add(v.sid)
+    assert len(alive) == 1024
+    assert len(w.sessions) == 1024
+
+    # two quiet sharded cycles before the storm
+    w.step(1.0)
+    w.step(2.0)
+
+    # storm: region 0's local node 0 dies — capacity collapses in C(t)
+    # (what a FailureInjector expresses) and its heartbeats stop, so
+    # miss_limit=2 declares it dead on the second unbeaten tick while the
+    # other nodes keep beating between cycles
+    hb = HeartbeatRegistry(nodes=[0, 1, 2, 3], miss_limit=2)
+    w.inners[0].heartbeats = hb            # node ids are region-local
+    base0 = w.inners[0].profiler.base_state
+    saved_mem = float(base0.mem_bytes[0])
+    saved_util = float(base0.background_util[0])
+    saved_bw = base0.link_bw.copy()
+    base0.mem_bytes[0] = 0.0
+    base0.background_util[0] = 0.99
+    base0.link_bw[0, 1:] = 1.0
+    base0.link_bw[1:, 0] = 1.0
+    dead_seen = False
+    for t in (3.0, 4.0, 5.0):
+        for node in (1, 2, 3):
+            hb.beat(node)
+        d = w.step(t)
+        dead_seen = dead_seen or (0 in d.dead_nodes)
+    assert dead_seen                       # global node 0 == region 0 local 0
+    # recovery moved every region-0 session off the dead node
+    for sess in w.inners[0].sessions.values():
+        assert 0 not in sess.config.assignment
+
+    # the node comes back; fold its capacity in and settle
+    base0.mem_bytes[0] = saved_mem
+    base0.background_util[0] = saved_util
+    base0.link_bw[:, :] = saved_bw
+    hb.beat(0)
+    for node in (1, 2, 3):
+        hb.beat(node)
+    w.step(6.0)
+
+    # every region passes the chaos invariant checker clean
+    for r in range(n_regions):
+        inner = w.inners[r]
+        errs = InvariantChecker().check(
+            t=6.0, orch=inner, agents=inner.broadcast.agents,
+            admission=adm.regional[r])
+        assert errs == [], (r, errs[:3])
+
+    # conservation: every admitted session alive, in exactly one shard
+    seen = {}
+    for r, inner in enumerate(w.inners):
+        for sid in inner.sessions:
+            assert sid not in seen, (sid, seen[sid], r)
+            seen[sid] = r
+        assert set(inner._buffers.row_of) == set(inner.sessions)
+    assert set(seen) == alive

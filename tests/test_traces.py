@@ -1,0 +1,63 @@
+"""Unit tests for the seeded environment trace generators (PR 10 adds
+``diurnal`` — sinusoidal seasonality + seeded flash-crowd spikes, the first
+slice of ROADMAP item 4c)."""
+
+import numpy as np
+
+from repro.edgesim.traces import diurnal, ou_process, square_wave
+
+
+def test_diurnal_periodicity_without_spikes():
+    tr = diurnal(seed=0, base=0.4, amp=0.2, period_s=60.0,
+                 spike_rate_per_period=0.0, horizon_s=600.0)
+    for t in np.linspace(0.0, 300.0, 37):
+        # one period apart → equal up to sin() float error on the grid
+        assert abs(tr(t) - tr(t + 60.0)) < 1e-9, t
+    # the sinusoid actually swings (not clipped flat)
+    samples = np.array([tr(t) for t in np.arange(0.0, 60.0, 0.5)])
+    assert samples.max() > 0.55 and samples.min() < 0.25
+
+
+def test_diurnal_clips_to_bounds():
+    tr = diurnal(seed=3, base=0.8, amp=0.5, period_s=30.0,
+                 spike_rate_per_period=4.0, spike_amp=0.6,
+                 horizon_s=300.0, lo=0.0, hi=0.99)
+    samples = np.array([tr(t) for t in np.arange(0.0, 300.0, 0.1)])
+    assert samples.max() <= 0.99
+    assert samples.min() >= 0.0
+    # this parameterization actually hits the ceiling, so the clip is live
+    assert samples.max() == 0.99
+
+
+def test_diurnal_seed_determinism():
+    a = diurnal(seed=11, base=0.3, amp=0.15, period_s=45.0,
+                spike_rate_per_period=2.0, horizon_s=400.0)
+    b = diurnal(seed=11, base=0.3, amp=0.15, period_s=45.0,
+                spike_rate_per_period=2.0, horizon_s=400.0)
+    c = diurnal(seed=12, base=0.3, amp=0.15, period_s=45.0,
+                spike_rate_per_period=2.0, horizon_s=400.0)
+    ts = np.arange(0.0, 400.0, 0.7)
+    sa = np.array([a(t) for t in ts])
+    sb = np.array([b(t) for t in ts])
+    sc = np.array([c(t) for t in ts])
+    assert np.array_equal(sa, sb)         # same seed → sample-identical
+    assert not np.array_equal(sa, sc)     # different seed → different spikes
+
+
+def test_diurnal_spikes_ride_on_the_sinusoid():
+    smooth = diurnal(seed=5, base=0.4, amp=0.1, period_s=50.0,
+                     spike_rate_per_period=0.0, horizon_s=500.0)
+    spiky = diurnal(seed=5, base=0.4, amp=0.1, period_s=50.0,
+                    spike_rate_per_period=3.0, spike_amp=0.3,
+                    horizon_s=500.0)
+    ts = np.arange(0.0, 500.0, 0.1)
+    d = np.array([spiky(t) - smooth(t) for t in ts])
+    assert (d >= -1e-12).all()            # spikes only ever ADD load
+    assert d.max() > 0.1                  # and some spike actually landed
+
+
+def test_existing_generators_unchanged():
+    sq = square_wave(0.2, 0.8, period_s=10.0, duty=0.3)
+    assert sq(0.0) == 0.8 and sq(5.0) == 0.2
+    ou = ou_process(seed=1, mu=0.5, sigma=0.05, horizon_s=50.0)
+    assert ou(1.0) == ou(1.0)
